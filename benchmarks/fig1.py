@@ -1,0 +1,125 @@
+"""Figure 1 reproduction: test accuracy vs global rounds for Algorithm 1 vs
+the two energy-agnostic benchmarks and the unconstrained-FedAvg upper bound.
+
+Setup mirrors §V: N=40 clients, 4 equal energy groups with
+(tau_0..tau_3) = (1, 5, 10, 20), T=5 local steps, client Adam, iid partition,
+the McMahan CNN — with CIFAR-10 replaced by the deterministic synthetic
+class-conditional image set (matched shape/cardinality; see DESIGN.md §8).
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.core import EnergyProfile, FedConfig, simulate
+from repro.data import FederatedLoader, SyntheticImages, iid_partition, \
+    client_weights
+from repro.models import get_model
+from repro.optim import adam
+
+POLICIES = ["sustainable", "greedy", "wait_all", "always"]
+LABELS = {"sustainable": "Algorithm 1", "greedy": "Benchmark 1 (greedy)",
+          "wait_all": "Benchmark 2 (wait-all)", "always": "FedAvg (no limit)"}
+
+
+def make_eval(model, images, labels, batch: int = 256):
+    images = jnp.asarray(images)
+    labels = jnp.asarray(labels)
+
+    @jax.jit
+    def acc_batch(params, x, y):
+        logits, _ = model.forward(params, {"images": x})
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, y[:, None], -1)[:, 0]
+        return (jnp.sum(jnp.argmax(logits, -1) == y), jnp.sum(logz - gold))
+
+    def eval_fn(params):
+        correct, nll = 0, 0.0
+        for i in range(0, len(labels), batch):
+            c, l = acc_batch(params, images[i:i + batch], labels[i:i + batch])
+            correct += int(c)
+            nll += float(l)
+        return {"test_acc": correct / len(labels),
+                "test_loss": nll / len(labels)}
+
+    return eval_fn
+
+
+def run_fig1(num_clients=40, taus=(1, 5, 10, 20), local_steps=5, batch=24,
+             rounds=120, lr=1e-3, num_train=20000, num_test=2000, seed=0,
+             eval_every=10, policies=POLICIES, verbose=True, out_json="",
+             noise=3.0):
+    cfg = get_config("cifar-cnn")
+    model = get_model(cfg)
+    data = SyntheticImages(num_train=num_train, num_test=num_test, seed=seed,
+                           noise=noise)
+    xtr, ytr = data.train_set()
+    xte, yte = data.test_set()
+    shards = iid_partition(ytr, num_clients, seed)  # §V: iid, even split
+    loader = FederatedLoader({"images": xtr, "labels": ytr}, shards, batch,
+                             local_steps, seed)
+    p = client_weights(shards)
+    E = np.asarray(EnergyProfile(num_clients, tuple(taus)).cycles())
+    eval_fn = make_eval(model, xte, yte)
+
+    def loss(params, b, rng):
+        return model.loss_fn(params, b)
+
+    def batch_fn(r, i):
+        b = loader.round_batch(r)
+        return {"images": jnp.asarray(b["images"][i]),
+                "labels": jnp.asarray(b["labels"][i])}
+
+    results = {}
+    for policy in policies:
+        fed = FedConfig(num_clients=num_clients, local_steps=local_steps,
+                        policy=policy, seed=seed)
+        w0 = model.init_params(jax.random.PRNGKey(seed))
+        t0 = time.time()
+        res = simulate(loss, adam(lr), fed, w0, batch_fn, p, E, rounds,
+                       jax.random.PRNGKey(seed), eval_fn=eval_fn,
+                       eval_every=eval_every, verbose=verbose)
+        xs, accs = res.curve("test_acc")
+        _, losses_ = res.curve("test_loss")
+        results[policy] = {
+            "label": LABELS[policy],
+            "rounds": xs.tolist(),
+            "test_acc": accs.tolist(),
+            "test_loss": losses_.tolist(),
+            "final_acc": float(accs[-1]) if len(accs) else float("nan"),
+            "final_loss": float(losses_[-1]) if len(losses_) else float("nan"),
+            "wall_s": round(time.time() - t0, 1),
+        }
+        if verbose:
+            print(f"== {LABELS[policy]}: final acc "
+                  f"{results[policy]['final_acc']:.3f} "
+                  f"({results[policy]['wall_s']}s)", flush=True)
+    if out_json:
+        os.makedirs(os.path.dirname(os.path.abspath(out_json)), exist_ok=True)
+        with open(out_json, "w") as f:
+            json.dump({"config": {
+                "num_clients": num_clients, "taus": list(taus),
+                "local_steps": local_steps, "batch": batch, "rounds": rounds,
+                "num_train": num_train, "seed": seed},
+                "results": results}, f, indent=1)
+    return results
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rounds", type=int, default=120)
+    ap.add_argument("--batch", type=int, default=24)
+    ap.add_argument("--clients", type=int, default=40)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--policies", default=",".join(POLICIES))
+    ap.add_argument("--out", default="benchmarks/results/fig1.json")
+    a = ap.parse_args()
+    run_fig1(num_clients=a.clients, rounds=a.rounds, batch=a.batch,
+             seed=a.seed, policies=a.policies.split(","), out_json=a.out)

@@ -1,0 +1,24 @@
+"""Fill EXPERIMENTS.md's <!-- *_TABLE --> markers from current results."""
+import json
+import os
+import re
+
+from benchmarks.report import dryrun_section, fig1_section, roofline_section
+
+
+def main():
+    with open("EXPERIMENTS.md") as f:
+        doc = f.read()
+    doc = re.sub(r"<!-- DRYRUN_TABLE -->.*?(?=\n## )",
+                 dryrun_section() + "\n\n", doc, flags=re.S) \
+        if "<!-- DRYRUN_TABLE -->" in doc else doc
+    doc = doc.replace("<!-- DRYRUN_TABLE -->", dryrun_section())
+    doc = doc.replace("<!-- ROOFLINE_TABLE -->", roofline_section())
+    doc = doc.replace("<!-- FIG1_TABLE -->", fig1_section())
+    with open("EXPERIMENTS.md", "w") as f:
+        f.write(doc)
+    print("filled")
+
+
+if __name__ == "__main__":
+    main()

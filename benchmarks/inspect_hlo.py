@@ -1,0 +1,85 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Hillclimb diagnostics: lower one (arch x shape) combo and attribute the
+collective traffic — top collective ops by (weighted) bytes with the
+originating jax op (from HLO metadata).  This is the 'profile' of the
+dry-run methodology (no real hardware): we reason from the partitioned IR.
+
+  PYTHONPATH=src python -m benchmarks.inspect_hlo --arch qwen1.5-4b \\
+      --shape decode_32k [--multi-pod] [--top 15]
+"""
+import argparse
+import re
+
+import jax
+
+from repro.configs import get_config, get_shape
+from repro.launch import mesh as mesh_lib
+from repro.launch.dryrun import _COLL_WEIGHTS, _shape_bytes
+from repro.launch.steps import build_step
+
+_LINE = re.compile(
+    r"%\S+ = \(?([a-z0-9\[\],{} ]*?)\)?\s*"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(", re.I)
+_META = re.compile(r'op_name="([^"]*)"')
+
+
+def top_collectives(hlo: str, top: int = 15):
+    rows = []
+    for line in hlo.splitlines():
+        m = _LINE.search(line)
+        if not m or "-done" in line:
+            continue
+        size = _shape_bytes(m.group(1)) * _COLL_WEIGHTS[m.group(2).lower()]
+        meta = _META.search(line)
+        rows.append((size, m.group(2).lower(), m.group(1).strip()[:48],
+                     (meta.group(1) if meta else "?")[:110]))
+    rows.sort(reverse=True)
+    return rows[:top]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--top", type=int, default=15)
+    ap.add_argument("--local-steps", type=int, default=5)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    shape = get_shape(args.shape)
+    mesh = mesh_lib.make_production_mesh(multi_pod=args.multi_pod)
+    with mesh:
+        bundle = build_step(cfg, shape, mesh, **(
+            {"local_steps": args.local_steps} if shape.kind == "train" else {}))
+        compiled = jax.jit(bundle.fn, in_shardings=bundle.in_shardings,
+                           out_shardings=bundle.out_shardings
+                           ).lower(*bundle.args).compile()
+    hlo = compiled.as_text()
+    ma = compiled.memory_analysis()
+    print(f"== {args.arch} x {args.shape}  temp/dev="
+          f"{ma.temp_size_in_bytes/2**30:.2f} GiB  arg/dev="
+          f"{ma.argument_size_in_bytes/2**30:.2f} GiB")
+    print(f"{'MiB(w)':>9s}  {'kind':18s} {'result shape':48s} origin")
+    for size, kind, shp, meta in top_collectives(hlo, args.top):
+        print(f"{size/2**20:9.1f}  {kind:18s} {shp:48s} {meta}")
+    # biggest HLO ops overall (rough temp attribution)
+    sizes = []
+    for line in hlo.splitlines():
+        mm = re.search(r"%\S+ = ([a-z0-9]+\[[\d,]+\])", line)
+        if mm and ("fusion" in line or "dynamic-update-slice" in line
+                   or "copy" in line or "broadcast" in line):
+            meta = _META.search(line)
+            sizes.append((_shape_bytes(mm.group(1)), mm.group(1),
+                          (meta.group(1) if meta else "?")[:90]))
+    sizes.sort(reverse=True)
+    print("\nlargest materialised ops:")
+    for s, shp, meta in sizes[:args.top]:
+        print(f"{s/2**20:9.1f}  {shp:32s} {meta}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,83 @@
+"""Render EXPERIMENTS.md's data-driven sections from the dry-run JSONs and
+benchmark results, so re-runs keep the doc in sync.
+
+  PYTHONPATH=src python -m benchmarks.report > /tmp/sections.md
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.roofline import load_records
+
+SHAPE_ORDER = {"train_4k": 0, "prefill_32k": 1, "decode_32k": 2,
+               "long_500k": 3}
+
+
+def dryrun_section(result_dir="benchmarks/dryrun_results") -> str:
+    out = ["### Single-pod (16x16, 256 chips) baselines", ""]
+    recs = load_records(result_dir, "single")
+    out.append("| arch | shape | mode | compile(s) | GiB/dev | coll GB/dev | "
+               "flops/dev |")
+    out.append("|---|---|---|---|---|---|---|")
+    for r in sorted(recs, key=lambda x: (x["arch"],
+                                         SHAPE_ORDER.get(x["shape"], 9))):
+        mode = r["step_meta"].get("mode", r["kind"])
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {mode} "
+            f"| {r['compile_s']} "
+            f"| {r['memory']['total_bytes_per_device']/2**30:.2f} "
+            f"| {r.get('collective_bytes_per_device', 0)/1e9:.2f} "
+            f"| {r['cost']['flops_per_device']:.3e} |")
+    mrecs = load_records(result_dir, "multi")
+    out += ["", "### Multi-pod (2x16x16, 512 chips) compile proof", ""]
+    if mrecs:
+        ok = len(mrecs)
+        out.append(f"{ok} combos lowered+compiled on the multi-pod mesh "
+                   f"(pod axis shards the client/batch dimension).")
+        out.append("")
+        out.append("| arch | shape | compile(s) | GiB/dev |")
+        out.append("|---|---|---|---|")
+        for r in sorted(mrecs, key=lambda x: (x["arch"],
+                                              SHAPE_ORDER.get(x["shape"], 9))):
+            out.append(f"| {r['arch']} | {r['shape']} | {r['compile_s']} "
+                       f"| {r['memory']['total_bytes_per_device']/2**30:.2f} |")
+    return "\n".join(out)
+
+
+def roofline_section(result_dir="benchmarks/dryrun_results") -> str:
+    recs = load_records(result_dir, "single")
+    out = ["| arch | shape | t_comp(s) | t_mem(s) | t_coll(s) | dominant | "
+           "MODEL_FLOPS | useful | one-line diagnosis |",
+           "|---|---|---|---|---|---|---|---|---|"]
+    for r in sorted(recs, key=lambda x: (x["arch"],
+                                         SHAPE_ORDER.get(x["shape"], 9))):
+        rf = r["roofline"]
+        out.append(
+            f"| {r['arch']} | {r['shape']} "
+            f"| {rf['t_compute_s']:.3e} | {rf['t_memory_s']:.3e} "
+            f"| {rf['t_collective_s']:.3e} | **{rf['dominant']}** "
+            f"| {rf['model_flops']:.2e} | {rf['useful_compute_ratio']:.2f} | |")
+    return "\n".join(out)
+
+
+def fig1_section(path="benchmarks/results/fig1.json") -> str:
+    if not os.path.exists(path):
+        return "(fig1.json not yet generated)"
+    with open(path) as f:
+        data = json.load(f)
+    out = [f"Config: {json.dumps(data['config'])}", "",
+           "| policy | final test acc | wall(s) |", "|---|---|---|"]
+    for k, r in data["results"].items():
+        out.append(f"| {r['label']} | {r['final_acc']:.3f} | {r['wall_s']} |")
+    return "\n".join(out)
+
+
+if __name__ == "__main__":
+    print("## §Dry-run\n")
+    print(dryrun_section())
+    print("\n## §Roofline\n")
+    print(roofline_section())
+    print("\n## §Fig1\n")
+    print(fig1_section())

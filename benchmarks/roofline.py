@@ -1,0 +1,71 @@
+"""Roofline table builder: reads the dry-run JSONs and renders §Roofline.
+
+Per (arch x shape) on the single-pod mesh:
+  t_compute = HLO_FLOPs / (chips x 197 TF/s)      [global/chips == per-device]
+  t_memory  = HLO_bytes / (chips x 819 GB/s)
+  t_coll    = collective_bytes / (chips x 50 GB/s/link)
+plus the dominant term, MODEL_FLOPS = 6*N*D (active-N for MoE), and the
+useful-compute ratio MODEL_FLOPS / HLO_FLOPs.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+
+def load_records(result_dir: str = "benchmarks/dryrun_results",
+                 mesh: str = "single", tag: str = "") -> list[dict]:
+    recs = []
+    for path in sorted(glob.glob(os.path.join(result_dir, "*.json"))):
+        stem = os.path.basename(path)[:-5]
+        parts = stem.split("__")
+        if len(parts) < 3 or parts[2] != mesh:
+            continue
+        rec_tag = parts[3] if len(parts) > 3 else ""
+        if rec_tag != tag:
+            continue
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def fmt_row(r: dict) -> str:
+    rf = r["roofline"]
+    mem = r["memory"]["total_bytes_per_device"] / 2 ** 30
+    return (f"{r['arch']:18s} {r['shape']:12s} "
+            f"{rf['t_compute_s']:10.3e} {rf['t_memory_s']:10.3e} "
+            f"{rf['t_collective_s']:10.3e}  {rf['dominant']:10s} "
+            f"{rf['useful_compute_ratio']:7.3f} {mem:8.2f}")
+
+
+def render_table(recs: list[dict]) -> str:
+    head = (f"{'arch':18s} {'shape':12s} {'t_comp(s)':>10s} {'t_mem(s)':>10s} "
+            f"{'t_coll(s)':>10s}  {'dominant':10s} {'useful':>7s} "
+            f"{'GiB/dev':>8s}")
+    lines = [head, "-" * len(head)]
+    order = {"train_4k": 0, "prefill_32k": 1, "decode_32k": 2, "long_500k": 3}
+    for r in sorted(recs, key=lambda x: (x["arch"], order.get(x["shape"], 9))):
+        lines.append(fmt_row(r))
+    return "\n".join(lines)
+
+
+def csv_rows(recs: list[dict]) -> list[tuple[str, float, str]]:
+    """(name, us_per_call, derived) rows for benchmarks.run — us_per_call is
+    the dominant roofline term (the projected step floor) in microseconds."""
+    rows = []
+    for r in recs:
+        rf = r["roofline"]
+        t_dom = max(rf["t_compute_s"], rf["t_memory_s"], rf["t_collective_s"])
+        rows.append((
+            f"roofline/{r['arch']}/{r['shape']}",
+            t_dom * 1e6,
+            f"dom={rf['dominant']};useful={rf['useful_compute_ratio']:.3f};"
+            f"mem_gib={r['memory']['total_bytes_per_device']/2**30:.2f}",
+        ))
+    return rows
+
+
+if __name__ == "__main__":
+    recs = load_records()
+    print(render_table(recs))

@@ -1,0 +1,50 @@
+"""Quickstart: sustainable federated learning in ~40 lines.
+
+Trains a reduced granite-3-2b (dense GQA LM) across 8 energy-harvesting
+clients with the paper's Algorithm 1 (stochastic energy-aware scheduling +
+E_i-scaled aggregation) on synthetic per-client token streams.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.core import EnergyProfile, FedConfig, Policy, simulate
+from repro.data import SyntheticTokens
+from repro.models import get_model
+from repro.optim import adam
+
+# --- setup: model, clients, energy profile ---------------------------------
+CLIENTS, LOCAL_STEPS, ROUNDS = 8, 5, 12
+cfg = get_smoke_config("granite-3-2b")
+model = get_model(cfg)
+E = np.asarray(EnergyProfile(CLIENTS, (1, 2, 4, 8)).cycles())  # renewal cycles
+p = np.ones(CLIENTS) / CLIENTS                                  # data weights
+source = SyntheticTokens(cfg.vocab_size, seq_len=64, num_clients=CLIENTS,
+                         client_skew=0.7)
+
+fed = FedConfig(num_clients=CLIENTS, local_steps=LOCAL_STEPS,
+                policy=Policy.SUSTAINABLE)              # <- the paper's Alg. 1
+
+
+def loss_fn(params, batch, rng):
+    return model.loss_fn(params, batch)
+
+
+def batch_fn(rnd, client):  # (T, B, S) minibatches for one client round
+    toks = np.stack([source.batch(client, 4, rnd * 131 + t)
+                     for t in range(LOCAL_STEPS)])
+    return {"tokens": jnp.asarray(toks)}
+
+
+# --- run Algorithm 1 --------------------------------------------------------
+w0 = model.init_params(jax.random.PRNGKey(0))
+res = simulate(loss_fn, adam(1e-3), fed, w0, batch_fn, p, E, ROUNDS,
+               jax.random.PRNGKey(0), verbose=True)
+
+losses = [h["loss"] for h in res.history if "loss" in h]
+print(f"\nloss: {losses[0]:.3f} -> {losses[-1]:.3f} over {ROUNDS} rounds "
+      f"({model.num_params(res.params):,} params, policy={fed.policy})")
+assert losses[-1] < losses[0]

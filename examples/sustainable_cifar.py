@@ -1,0 +1,34 @@
+"""Figure-1 reproduction driver (paper §V): Algorithm 1 vs Benchmark 1
+(greedy), Benchmark 2 (wait-for-all), and unconstrained FedAvg on the
+CIFAR-shaped synthetic image task with the McMahan CNN, N=40 clients,
+energy groups (1, 5, 10, 20), T=5, client Adam.
+
+  PYTHONPATH=src python examples/sustainable_cifar.py --rounds 120 --batch 24
+
+Writes accuracy curves to benchmarks/results/fig1.json and prints the final
+table.  See EXPERIMENTS.md §Fig1 for the recorded run + comparison with the
+paper's claims (77% / 60% / 62% orderings).
+"""
+import argparse
+import sys
+
+sys.path.insert(0, ".")  # allow running from repo root
+
+from benchmarks.fig1 import POLICIES, run_fig1  # noqa: E402
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rounds", type=int, default=120)
+    ap.add_argument("--batch", type=int, default=24)
+    ap.add_argument("--clients", type=int, default=40)
+    ap.add_argument("--train", type=int, default=20000)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--policies", default=",".join(POLICIES))
+    ap.add_argument("--out", default="benchmarks/results/fig1.json")
+    a = ap.parse_args()
+    results = run_fig1(num_clients=a.clients, rounds=a.rounds, batch=a.batch,
+                       num_train=a.train, seed=a.seed,
+                       policies=a.policies.split(","), out_json=a.out)
+    print(f"\n{'policy':28s} final test acc")
+    for k, r in results.items():
+        print(f"{r['label']:28s} {r['final_acc']:.3f}")

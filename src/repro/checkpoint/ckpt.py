@@ -1,0 +1,71 @@
+"""msgpack tree checkpointing (atomic write + metadata), dependency-light."""
+from __future__ import annotations
+
+import os
+import tempfile
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+
+PyTree = Any
+
+_DTYPE_KEY = "__np__"
+
+
+def _pack(obj):
+    if isinstance(obj, (jnp.ndarray, np.ndarray)):
+        arr = np.asarray(obj)
+        return {_DTYPE_KEY: True, "dtype": str(arr.dtype),
+                "shape": list(arr.shape),
+                "data": arr.astype(arr.dtype).tobytes()}
+    return obj
+
+
+def _unpack(obj):
+    if isinstance(obj, dict) and obj.get(_DTYPE_KEY):
+        return np.frombuffer(obj["data"], dtype=np.dtype(obj["dtype"])
+                             ).reshape(obj["shape"])
+    return obj
+
+
+def save_checkpoint(path: str, tree: PyTree, step: int = 0,
+                    metadata: dict | None = None) -> None:
+    """Atomic msgpack save of an arbitrary pytree of arrays/scalars."""
+    leaves, treedef = jax.tree.flatten(tree)
+    payload = {
+        "step": step,
+        "metadata": metadata or {},
+        "treedef": str(treedef),
+        "leaves": [_pack(np.asarray(x)) for x in leaves],
+        "structure": jax.tree.map(lambda _: None, tree),
+    }
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    fd, tmp = tempfile.mkstemp(dir=os.path.dirname(os.path.abspath(path)))
+    try:
+        with os.fdopen(fd, "wb") as f:
+            f.write(msgpack.packb(payload, use_bin_type=True))
+        os.replace(tmp, path)
+    except BaseException:
+        if os.path.exists(tmp):
+            os.unlink(tmp)
+        raise
+
+
+def load_checkpoint(path: str, like: PyTree | None = None
+                    ) -> tuple[PyTree, int, dict]:
+    """Load a checkpoint.  ``like`` provides the treedef (required: treedefs
+    are not round-trippable from their string form); leaves are cast to the
+    dtypes of ``like``'s leaves when given."""
+    with open(path, "rb") as f:
+        payload = msgpack.unpackb(f.read(), raw=False)
+    leaves = [_unpack(x) for x in payload["leaves"]]
+    if like is None:
+        return leaves, payload["step"], payload["metadata"]
+    ref_leaves, treedef = jax.tree.flatten(like)
+    assert len(ref_leaves) == len(leaves), \
+        f"checkpoint has {len(leaves)} leaves, expected {len(ref_leaves)}"
+    cast = [jnp.asarray(l, dtype=r.dtype) for l, r in zip(leaves, ref_leaves)]
+    return jax.tree.unflatten(treedef, cast), payload["step"], payload["metadata"]

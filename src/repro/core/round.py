@@ -1,0 +1,241 @@
+"""The federated round engine (Algorithm 1 of the paper).
+
+A *global round* is: (1) clients decide participation via the scheduling policy
+(`core.scheduling`), (2) scheduled clients run ``T`` local optimizer steps from
+the current global model (eq. 7), (3) the server aggregates scaled deltas
+(eqs. 12-13) into the new global model.
+
+Two execution strategies over a TPU mesh (see DESIGN.md §3.2):
+
+* **parallel** — all client groups run simultaneously: local models are stacked
+  on a leading client axis ``C`` that is sharded over the mesh's data axis.
+  The whole round is one jitted function; no communication during the local
+  phase, one fused weighted reduction at the end.
+* **sequential** — one client at a time over the full mesh (for architectures
+  whose parameters cannot be replicated per client group); linearity of
+  eq. (13) makes this exactly equivalent.
+
+The engine is model-agnostic: it takes a ``loss_fn(params, batch, rng)`` and an
+``Optimizer``; everything else is pytrees.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import aggregation, scheduling
+from repro.optim import Optimizer
+
+PyTree = Any
+LossFn = Callable[[PyTree, PyTree, jax.Array], jax.Array]
+
+
+def micro_value_and_grad(loss_fn: LossFn, num_micro: int,
+                         unroll: bool = False):
+    """value_and_grad with gradient accumulation over ``num_micro`` splits of
+    the batch's leading dim (peak-activation memory / num_micro; fp32 accum).
+    """
+    if num_micro <= 1:
+        return jax.value_and_grad(loss_fn)
+
+    def f(params, batch, key):
+        mb = jax.tree.map(
+            lambda b: b.reshape((num_micro, b.shape[0] // num_micro)
+                                + b.shape[1:]), batch)
+
+        def step(carry, xs):
+            acc_l, acc_g = carry
+            l, g = jax.value_and_grad(loss_fn)(params, xs, key)
+            acc_g = jax.tree.map(
+                lambda a, x: a + x.astype(jnp.float32) / num_micro, acc_g, g)
+            return (acc_l + l / num_micro, acc_g), None
+
+        zeros = jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), params)
+        (loss, grads), _ = jax.lax.scan(step, (jnp.float32(0), zeros), mb,
+                                        unroll=bool(unroll))
+        grads = jax.tree.map(lambda g, p: g.astype(p.dtype), grads, params)
+        return loss, grads
+
+    return f
+
+
+@dataclasses.dataclass(frozen=True)
+class FedConfig:
+    """Federated-learning hyperparameters (paper §II/§V notation)."""
+
+    num_clients: int = 40               # N
+    local_steps: int = 5                # T
+    policy: scheduling.Policy = scheduling.Policy.SUSTAINABLE
+    server_lr: float = 1.0
+    mode: str = "parallel"              # parallel | sequential
+    seed: int = 0
+    unroll: bool = False                # unroll the local-step scan (cost calibration)
+    micro_batches: int = 1              # grad accumulation within a local step
+
+
+def local_update(
+    loss_fn: LossFn,
+    optimizer: Optimizer,
+    params: PyTree,
+    batches: PyTree,          # leaves have leading axis T (one minibatch per local step)
+    rng: jax.Array,
+    num_steps: int,
+    unroll: bool = False,
+    micro_batches: int = 1,
+) -> tuple[PyTree, jax.Array]:
+    """Eq. (7): ``T`` local optimizer steps via lax.scan.
+
+    The local optimizer state is freshly initialised each round (FedAvg
+    convention for stateful client optimizers such as Adam).
+
+    Returns (local params after T steps, mean local loss).
+    """
+    opt_state = optimizer.init(params)
+    vg = micro_value_and_grad(loss_fn, micro_batches, unroll=unroll)
+
+    def step(carry, xs):
+        p, s = carry
+        batch, key, t = xs
+        loss, grads = vg(p, batch, key)
+        p, s = optimizer.update(grads, s, p, t)
+        return (p, s), loss
+
+    keys = jax.random.split(rng, num_steps)
+    ts = jnp.arange(num_steps, dtype=jnp.int32)
+    (params, _), losses = jax.lax.scan(step, (params, opt_state),
+                                       (batches, keys, ts), unroll=bool(unroll))
+    return params, jnp.mean(losses)
+
+
+def parallel_round(
+    loss_fn: LossFn,
+    optimizer: Optimizer,
+    cfg: FedConfig,
+    w_global: PyTree,
+    client_batches: PyTree,   # leaves: (C, T, ...) per-client per-local-step minibatches
+    p: jax.Array,             # (C,) data weights p_i
+    E: jax.Array,             # (C,) energy renewal cycles
+    rnd: jax.Array,           # scalar int32 global round index
+    rng: jax.Array,
+    constrain=None,           # optional per-leaf sharding constraint for stacked state
+    constrain_opt=None,       # separate constraint for optimizer state (ZeRO-1)
+) -> tuple[PyTree, dict[str, jax.Array]]:
+    """One full global round with all client groups in parallel.
+
+    Faithfulness note: *all* clients compute the local update and the mask
+    zeroes out non-participants at aggregation.  This matches the equivalent
+    form the paper itself uses for analysis (eqs. 18-19: "assume that all
+    clients perform local training ... but the global model is updated using
+    only the local updates from the clients that were originally scheduled").
+    On hardware the masked clients' work is the price of a static schedule; the
+    sequential mode avoids it.
+
+    Distribution: client-stacked state (params, optimizer) carries an explicit
+    leading C axis; ``constrain`` (dist.sharding.stacked_constrainer) pins it
+    to the mesh's data axes so the local phase is communication-free and the
+    final aggregation lowers to one reduction over the client axis.
+    """
+    n = cfg.num_clients
+    cst = constrain if constrain is not None else (lambda t: t)
+    cst_opt = constrain_opt if constrain_opt is not None else cst
+    mask = scheduling.participation_mask(cfg.policy, cfg.seed, rnd, E)
+    scale = scheduling.aggregation_scale(cfg.policy, E)
+
+    # stacked local models, fresh per-round local optimizer state (eq. 6)
+    w_stack = cst(jax.tree.map(
+        lambda x: jnp.broadcast_to(x[None], (n,) + x.shape), w_global))
+    opt_state = cst_opt(optimizer.init(w_stack))
+    keys = jax.vmap(lambda i: jax.random.fold_in(rng, i))(jnp.arange(n))
+
+    # (C, T, ...) -> (T, C, ...) for the local-step scan (eq. 7)
+    xs = jax.tree.map(lambda b: jnp.moveaxis(b, 1, 0), client_batches)
+
+    vg = micro_value_and_grad(loss_fn, cfg.micro_batches, unroll=cfg.unroll)
+
+    def step(carry, inp):
+        w, s = carry
+        batch, t = inp
+        kt = jax.vmap(lambda k: jax.random.fold_in(k, t))(keys)
+        losses, grads = jax.vmap(vg)(w, batch, kt)
+        w, s = optimizer.update(grads, s, w, t)
+        return (cst(w), cst_opt(s)), losses
+
+    ts = jnp.arange(cfg.local_steps, dtype=jnp.int32)
+    (w_stack, _), losses = jax.lax.scan(step, (w_stack, opt_state), (xs, ts),
+                                        unroll=bool(cfg.unroll))
+    losses = jnp.mean(losses, axis=0)  # (C,) mean local loss per client
+
+    w_new = aggregation.aggregate(w_global, w_stack, mask, p, scale, cfg.server_lr)
+    metrics = {
+        "loss": jnp.sum(losses * mask) / jnp.maximum(jnp.sum(mask), 1.0),
+        "participants": jnp.sum(mask),
+    }
+    return w_new, metrics
+
+
+def sequential_client_step(
+    loss_fn: LossFn,
+    optimizer: Optimizer,
+    cfg: FedConfig,
+    w_global: PyTree,
+    acc: PyTree,              # fp32 delta accumulator (zeros at round start)
+    batches: PyTree,          # (T, ...) this client's minibatches
+    p_i: jax.Array,
+    E_i: jax.Array,
+    alpha_i: jax.Array,       # this client's participation bit for this round
+    rng: jax.Array,
+) -> tuple[PyTree, jax.Array]:
+    """Sequential mode: process ONE client's local round and fold its scaled
+    delta into the accumulator.  ``apply_accumulated`` finishes the round."""
+    w_local, loss = local_update(loss_fn, optimizer, w_global, batches, rng,
+                                 cfg.local_steps, unroll=cfg.unroll,
+                                 micro_batches=cfg.micro_batches)
+    if scheduling.Policy(cfg.policy) == scheduling.Policy.SUSTAINABLE:
+        scale_i = jnp.asarray(E_i, jnp.float32)  # eq. (12)
+    else:
+        scale_i = jnp.asarray(1.0, jnp.float32)  # eq. (9)
+    coeff = jnp.asarray(alpha_i, jnp.float32) * jnp.asarray(p_i, jnp.float32) * scale_i
+    acc = aggregation.accumulate_client_delta(acc, w_local, w_global, coeff)
+    return acc, loss
+
+
+def finish_sequential_round(cfg: FedConfig, w_global: PyTree, acc: PyTree) -> PyTree:
+    return aggregation.apply_accumulated(w_global, acc, cfg.server_lr)
+
+
+def run_rounds(
+    loss_fn: LossFn,
+    optimizer: Optimizer,
+    cfg: FedConfig,
+    w0: PyTree,
+    batch_fn: Callable[[int], PyTree],   # round -> (C, T, ...) batches
+    p: jax.Array,
+    E: jax.Array,
+    num_rounds: int,
+    rng: jax.Array,
+    eval_fn: Callable[[PyTree], dict] | None = None,
+    eval_every: int = 0,
+    round_fn=None,
+) -> tuple[PyTree, list[dict]]:
+    """Host-side driver: iterate ``parallel_round`` for ``num_rounds`` rounds.
+
+    ``batch_fn`` is called on the host each round (data pipeline); the round
+    itself is jitted once.  Returns final global model + per-round metrics.
+    """
+    if round_fn is None:
+        round_fn = jax.jit(partial(parallel_round, loss_fn, optimizer, cfg))
+    history: list[dict] = []
+    w = w0
+    for r in range(num_rounds):
+        batches = batch_fn(r)
+        w, metrics = round_fn(w, batches, p, E,
+                              jnp.asarray(r, jnp.int32), jax.random.fold_in(rng, r))
+        rec = {"round": r, **{k: float(v) for k, v in metrics.items()}}
+        if eval_fn is not None and eval_every and (r + 1) % eval_every == 0:
+            rec.update({k: float(v) for k, v in eval_fn(w).items()})
+        history.append(rec)
+    return w, history

@@ -1,0 +1,161 @@
+"""Energy-aware client scheduling (Güler & Yener, Sustainable Federated Learning).
+
+Implements Algorithm 1's client scheduling plus the paper's two energy-agnostic
+benchmarks and the unconstrained-FedAvg upper bound, all as *stateless* pure
+functions: the participation mask for global round ``r`` is derived from
+``(seed, r, E)`` alone via ``jax.random.fold_in``.  This preserves the paper's
+"no coordination between clients" property (any host can re-derive any client's
+decision) and makes schedules preemption-safe and reproducible.
+
+Conventions
+-----------
+* ``E: (N,) int32`` — energy renewal cycles, ``E_i >= 1``.
+* A *global round* ``r`` corresponds to the paper's block of time instances
+  ``{rT, ..., rT + T - 1}``; masks are per-round (eq. 11: constant within a round).
+* Masks are float32 in {0., 1.} so they can ride inside aggregation arithmetic.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+class Policy(str, enum.Enum):
+    """Client scheduling policies."""
+
+    SUSTAINABLE = "sustainable"  # Algorithm 1 (the paper's contribution)
+    GREEDY = "greedy"            # Benchmark 1: participate on every energy arrival
+    WAIT_ALL = "wait_all"        # Benchmark 2: server waits for all clients
+    ALWAYS = "always"            # Unconstrained FedAvg upper bound (no energy limit)
+
+
+def sustainable_schedule(seed: jax.Array, rnd: jax.Array, E: jax.Array,
+                         phase: jax.Array | None = None) -> jax.Array:
+    """Algorithm 1, lines 5-7: within each window of ``E_i`` consecutive global
+    rounds, client ``i`` draws ``J ~ Uniform{0..E_i-1}`` once and participates
+    only in round ``window_start + J``.
+
+    Args:
+      seed: scalar uint32/int key seed (shared; per-client keys are folded in).
+      rnd: scalar int32 global-round index ``r = t/T``.
+      E: (N,) int32 energy renewal cycles.
+      phase: optional (N,) int32 per-client start offsets — the paper's
+        footnote 1: "Our results hold even if clients start at different time
+        instances."  Client i's windows are aligned to ``rnd + phase_i``.
+
+    Returns:
+      (N,) float32 participation mask ``alpha`` for round ``rnd``.
+    """
+    rnd = jnp.asarray(rnd, jnp.int32)
+    E = jnp.asarray(E, jnp.int32)
+    n = E.shape[0]
+    if phase is not None:
+        rnd = rnd + jnp.asarray(phase, jnp.int32)
+    window = rnd // E  # (N,) index of the current energy window per client
+    pos = rnd % E      # (N,) position of this round inside the window
+
+    def draw(i, win, e):
+        key = jax.random.fold_in(jax.random.fold_in(jax.random.PRNGKey(0) + seed, i), win)
+        # J ~ Uniform{0..E_i-1}; randint upper bound is exclusive.
+        return jax.random.randint(key, (), 0, e)
+
+    j = jax.vmap(draw)(jnp.arange(n, dtype=jnp.int32), window, E)
+    return (pos == j).astype(jnp.float32)
+
+
+def greedy_schedule(seed: jax.Array, rnd: jax.Array, E: jax.Array) -> jax.Array:
+    """Benchmark 1: client participates as soon as energy arrives, i.e. in the
+    first round of each window (``t mod T*E_i == 0``)."""
+    del seed
+    rnd = jnp.asarray(rnd, jnp.int32)
+    return (rnd % jnp.asarray(E, jnp.int32) == 0).astype(jnp.float32)
+
+
+def wait_all_schedule(seed: jax.Array, rnd: jax.Array, E: jax.Array) -> jax.Array:
+    """Benchmark 2: the server waits until *all* clients have energy; a global
+    update happens only every ``E_max`` rounds (all clients participate), and
+    no-op rounds in between (mask all-zero)."""
+    del seed
+    rnd = jnp.asarray(rnd, jnp.int32)
+    e_max = jnp.max(jnp.asarray(E, jnp.int32))
+    live = (rnd % e_max == 0).astype(jnp.float32)
+    return jnp.broadcast_to(live, jnp.asarray(E).shape)
+
+
+def always_schedule(seed: jax.Array, rnd: jax.Array, E: jax.Array) -> jax.Array:
+    """Unconstrained FedAvg: every client participates every round."""
+    del seed, rnd
+    return jnp.ones(jnp.asarray(E).shape, jnp.float32)
+
+
+_POLICIES: dict[Policy, Callable[[jax.Array, jax.Array, jax.Array], jax.Array]] = {
+    Policy.SUSTAINABLE: sustainable_schedule,
+    Policy.GREEDY: greedy_schedule,
+    Policy.WAIT_ALL: wait_all_schedule,
+    Policy.ALWAYS: always_schedule,
+}
+
+
+def participation_mask(policy: Policy | str, seed, rnd, E,
+                       phase=None) -> jax.Array:
+    """Dispatch: (N,) float32 mask for global round ``rnd`` under ``policy``."""
+    if phase is not None and Policy(policy) == Policy.SUSTAINABLE:
+        return sustainable_schedule(jnp.asarray(seed), rnd, jnp.asarray(E),
+                                    jnp.asarray(phase))
+    return _POLICIES[Policy(policy)](jnp.asarray(seed), rnd, jnp.asarray(E))
+
+
+def aggregation_scale(policy: Policy | str, E: jax.Array) -> jax.Array:
+    """Per-client scaling applied to deltas at aggregation.
+
+    Algorithm 1 sends ``g_i = E_i (w_i - w)`` (eq. 12) — scale ``E_i``.  The
+    benchmarks use the unscaled FedAvg update (eq. 9 rewritten as
+    ``w + sum_S p_i (w_i - w)``) — scale 1.
+    """
+    E = jnp.asarray(E, jnp.float32)
+    if Policy(policy) == Policy.SUSTAINABLE:
+        return E
+    return jnp.ones_like(E)
+
+
+def energy_feasible(masks: jax.Array, E: jax.Array) -> jax.Array:
+    """Check the physical energy constraint: within every aligned window of
+    ``E_i`` rounds, client ``i`` participates at most once.
+
+    Args:
+      masks: (R, N) masks for rounds 0..R-1.
+      E: (N,) cycles.  R must be a multiple of lcm alignment for exactness; we
+        check every aligned complete window.
+
+    Returns:
+      scalar bool.
+    """
+    R, N = masks.shape
+    ok = jnp.bool_(True)
+    E = jnp.asarray(E, jnp.int32)
+    for i in range(N):  # host-side check (test/diagnostic utility, not jitted)
+        e = int(E[i])
+        full = (R // e) * e
+        if full == 0:
+            continue
+        per_window = masks[:full, i].reshape(-1, e).sum(axis=1)
+        ok = ok & jnp.all(per_window <= 1)
+    return ok
+
+
+@dataclasses.dataclass(frozen=True)
+class EnergyProfile:
+    """The paper's §V energy profile: clients partitioned into ``len(taus)``
+    equal groups; group k has renewal cycle ``taus[k]`` (client i is in group
+    ``i mod len(taus)``)."""
+
+    num_clients: int = 40
+    taus: tuple[int, ...] = (1, 5, 10, 20)
+
+    def cycles(self) -> jax.Array:
+        k = jnp.arange(self.num_clients, dtype=jnp.int32) % len(self.taus)
+        return jnp.asarray(self.taus, jnp.int32)[k]

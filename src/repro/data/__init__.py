@@ -1,0 +1,8 @@
+from repro.data.loader import FederatedLoader
+from repro.data.partition import client_weights, dirichlet_partition, iid_partition
+from repro.data.synthetic import SyntheticImages, SyntheticTokens, round_batches
+
+__all__ = [
+    "FederatedLoader", "client_weights", "dirichlet_partition", "iid_partition",
+    "SyntheticImages", "SyntheticTokens", "round_batches",
+]

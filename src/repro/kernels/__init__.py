@@ -1,0 +1,8 @@
+"""Pallas TPU kernels for the system's compute hot spots.
+
+<name>.py = pl.pallas_call + BlockSpec; ops.py = jit'd wrappers;
+ref.py = pure-jnp oracles (tests assert_allclose against these).
+"""
+from repro.kernels import ops, ref
+
+__all__ = ["ops", "ref"]

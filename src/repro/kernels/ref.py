@@ -1,0 +1,51 @@
+"""Pure-jnp oracles for every Pallas kernel (tests assert_allclose vs these)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def mha_reference(q, k, v, *, causal: bool = True, window: int = 0):
+    """q,k,v (B,S,H,D), H pre-repeated.  Naive full-matrix attention."""
+    B, Sq, H, D = q.shape
+    Skv = k.shape[1]
+    scale = 1.0 / (D ** 0.5)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    qpos = jnp.arange(Sq)[:, None]
+    kpos = jnp.arange(Skv)[None, :]
+    mask = jnp.ones((Sq, Skv), bool)
+    if causal:
+        mask &= qpos >= kpos
+    if window > 0:
+        mask &= qpos - kpos < window
+    s = jnp.where(mask[None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", p, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def ssd_reference(x, dt, A, Bm, Cm):
+    """Sequential SSD recurrence (shapes as kernels.ssd_scan).  Returns y."""
+    B, S, H, P = x.shape
+
+    def step(h, xs):
+        x_t, dt_t, B_t, C_t = xs
+        a = jnp.exp(dt_t * A[None])                          # (B,H)
+        h = h * a[:, :, None, None] + jnp.einsum(
+            "bh,bhn,bhp->bhpn", dt_t, B_t.astype(jnp.float32),
+            x_t.astype(jnp.float32))
+        y = jnp.einsum("bhn,bhpn->bhp", C_t.astype(jnp.float32), h)
+        return h, y
+
+    h0 = jnp.zeros((B, H, P, Bm.shape[-1]), jnp.float32)
+    xs = tuple(jnp.moveaxis(t, 1, 0) for t in (x, dt, Bm, Cm))
+    _, ys = jax.lax.scan(step, h0, xs)
+    return jnp.moveaxis(ys, 0, 1).astype(x.dtype)
+
+
+def agg_reference(w, w_stack, s):
+    """out = w + sum_c s_c (w_c - w);  w (M,), w_stack (C,M), s (C,)."""
+    d = w_stack.astype(jnp.float32) - w.astype(jnp.float32)[None]
+    return (w.astype(jnp.float32) + jnp.einsum("c,cm->m", s, d)).astype(w.dtype)

@@ -1,0 +1,5 @@
+"""Model zoo: dense/GQA, MoE, SSM (Mamba2 SSD), hybrid (RG-LRU), enc-dec
+(Whisper backbone), VLM backbone, and the paper's CIFAR CNN."""
+from repro.models.api import Model, get_model
+
+__all__ = ["Model", "get_model"]

@@ -1,0 +1,148 @@
+"""Mixture-of-Experts FFN (Mixtral / OLMoE style): softmax top-k router,
+SwiGLU experts, load-balancing auxiliary loss.
+
+Two compute modes (DESIGN.md §4, hillclimb material):
+
+* ``dense``   — every token runs EVERY expert, gated by the (renormalised)
+  top-k weights.  Simple, dropless, collective-free — but wastes
+  (E/k)x FLOPs.  Baseline mode.
+* ``dispatch`` — GShard/Switch-style capacity-based dispatch: tokens are
+  scatter/gathered to per-expert buffers of capacity
+  ``ceil(k * S / E * capacity_factor)`` via one-hot einsums; overflow tokens
+  drop to the residual path.  Active-FLOPs-proportional compute; lowers to
+  all-to-all under expert sharding.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import dtype_of
+
+
+def moe_init(cfg: ModelConfig, rng, shape_prefix=()):
+    d, ff, E = cfg.d_model, cfg.d_ff, cfg.num_experts
+    dt = dtype_of(cfg)
+    k1, k2, k3 = jax.random.split(rng, 3)
+    return {
+        "router": (jax.random.normal(k1, shape_prefix + (d, E)) * (1 / d) ** 0.5
+                   ).astype(jnp.float32),
+        "wi": (jax.random.normal(k2, shape_prefix + (E, d, 2 * ff)) * (2 / d) ** 0.5
+               ).astype(dt),
+        "wo": (jax.random.normal(k3, shape_prefix + (E, ff, d)) * (2 / ff) ** 0.5
+               ).astype(dt),
+    }
+
+
+def _route(cfg: ModelConfig, p, x):
+    """Router logits -> (topk weights (B,S,k), topk idx (B,S,k), aux loss)."""
+    E, k = cfg.num_experts, cfg.experts_per_token
+    logits = (x.astype(jnp.float32) @ p["router"])          # (B,S,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    w, idx = jax.lax.top_k(probs, k)
+    w = w / jnp.sum(w, axis=-1, keepdims=True)              # renormalise over top-k
+    # Switch-style load-balance loss: E * sum_e f_e * P_e
+    onehot = jax.nn.one_hot(idx, E, dtype=jnp.float32)      # (B,S,k,E)
+    f = jnp.mean(jnp.sum(onehot, axis=-2), axis=(0, 1))     # fraction routed per e
+    P = jnp.mean(probs, axis=(0, 1))
+    aux = E * jnp.sum(f * P)
+    return w, idx, aux
+
+
+def apply_moe(cfg: ModelConfig, p, x):
+    """x: (B, S, d) -> (out, aux_loss)."""
+    if cfg.moe_mode == "dispatch":
+        return _apply_dispatch(cfg, p, x)
+    if cfg.moe_mode == "sorted":
+        return _apply_sorted(cfg, p, x)
+    if cfg.moe_mode == "sorted_local":
+        # locality-aware: dispatch within each batch row (rows are sharded
+        # over the data axes, so sort/gather never crosses devices)
+        y, aux = jax.vmap(lambda xr: _apply_sorted(cfg, p, xr[None]))(x)
+        return y[:, 0], jnp.mean(aux)
+    return _apply_dense(cfg, p, x)
+
+
+def _apply_dense(cfg: ModelConfig, p, x):
+    w, idx, aux = _route(cfg, p, x)
+    E = cfg.num_experts
+    onehot = jax.nn.one_hot(idx, E, dtype=jnp.float32)       # (B,S,k,E)
+    gates = jnp.einsum("bske,bsk->bse", onehot, w)           # (B,S,E)
+    h = jnp.einsum("bsd,edf->bsef", x, p["wi"])              # every expert
+    gate, up = jnp.split(h, 2, axis=-1)
+    h = jax.nn.silu(gate) * up
+    out = jnp.einsum("bsef,efd->bsed", h, p["wo"])
+    out = jnp.einsum("bsed,bse->bsd", out.astype(jnp.float32), gates)
+    return out.astype(x.dtype), aux
+
+
+def _apply_sorted(cfg: ModelConfig, p, x):
+    """Sort-based capacity dispatch (the hillclimbed mode, §Perf).
+
+    Unlike the GShard one-hot einsum (which materialises a (B,S,E,cap)
+    dispatch tensor — quadratic-ish in sequence at 4k+), this flattens tokens,
+    argsorts (token, expert) assignments by expert, gathers the first ``cap``
+    per expert into an (E, cap, d) buffer, runs E batched expert matmuls
+    (MXU-friendly), and scatter-adds back with the gate weights.  Memory is
+    O(N*k*d); FLOPs are proportional to ACTIVE params (top-k), not total.
+    Overflow tokens beyond capacity fall through on the residual path
+    (standard token dropping).
+    """
+    B, S, d = x.shape
+    E, k = cfg.num_experts, cfg.experts_per_token
+    N = B * S
+    cap = int(max(1, round(k * N / E * cfg.capacity_factor)))
+    w, idx, aux = _route(cfg, p, x)
+
+    xf = x.reshape(N, d)
+    ef = idx.reshape(N * k)                       # expert of each assignment
+    wf = w.reshape(N * k).astype(jnp.float32)
+    tok = jnp.repeat(jnp.arange(N, dtype=jnp.int32), k)
+
+    order = jnp.argsort(ef)                       # group assignments by expert
+    sorted_e = ef[order]
+    starts = jnp.searchsorted(sorted_e, jnp.arange(E, dtype=sorted_e.dtype))
+    pos = jnp.arange(N * k, dtype=jnp.int32) - starts[sorted_e]
+    keep = pos < cap
+    dest = jnp.where(keep, sorted_e * cap + pos, E * cap)  # E*cap = drop slot
+
+    buf = jnp.zeros((E * cap + 1, d), x.dtype)
+    buf = buf.at[dest].set(xf[tok[order]])
+    h = jnp.einsum("ecd,edf->ecf", buf[:-1].reshape(E, cap, d), p["wi"])
+    gate, up = jnp.split(h, 2, axis=-1)
+    h = jax.nn.silu(gate) * up
+    y = jnp.einsum("ecf,efd->ecd", h, p["wo"])    # (E, cap, d)
+    y = jnp.concatenate([y.reshape(E * cap, d),
+                         jnp.zeros((1, d), y.dtype)])
+    out = jnp.zeros((N, d), jnp.float32)
+    out = out.at[tok[order]].add(
+        y[jnp.where(keep, dest, E * cap)].astype(jnp.float32)
+        * (wf[order] * keep)[:, None])
+    return out.reshape(B, S, d).astype(x.dtype), aux
+
+
+def _apply_dispatch(cfg: ModelConfig, p, x):
+    """Capacity-based dispatch (GShard).  Per batch row to bound buffer size."""
+    B, S, d = x.shape
+    E, k = cfg.num_experts, cfg.experts_per_token
+    C = int(max(1, round(k * S / E * cfg.capacity_factor)))
+    w, idx, aux = _route(cfg, p, x)
+
+    onehot = jax.nn.one_hot(idx, E, dtype=jnp.float32)       # (B,S,k,E)
+    # position of each (token, slot) within its expert's buffer
+    pos_in_e = jnp.cumsum(onehot.reshape(B, S * k, E), axis=1).reshape(B, S, k, E) - 1.0
+    keep = (pos_in_e < C) * onehot                           # drop overflow
+    combine = keep * w[..., None]                            # (B,S,k,E)
+    pos_oh = jax.nn.one_hot(pos_in_e.astype(jnp.int32), C, dtype=jnp.float32)
+    dispatch = (keep[..., None] * pos_oh).sum(axis=2)        # (B,S,E,C)
+    combine_w = (combine[..., None] * pos_oh).sum(axis=2)    # (B,S,E,C)
+
+    xb = jnp.einsum("bsec,bsd->becd", dispatch.astype(x.dtype), x)  # (B,E,C,d)
+    h = jnp.einsum("becd,edf->becf", xb, p["wi"])
+    gate, up = jnp.split(h, 2, axis=-1)
+    h = jax.nn.silu(gate) * up
+    yb = jnp.einsum("becf,efd->becd", h, p["wo"])            # (B,E,C,d)
+    out = jnp.einsum("bsec,becd->bsd", combine_w.astype(jnp.float32),
+                     yb.astype(jnp.float32))
+    return out.astype(x.dtype), aux

@@ -1,0 +1,14 @@
+"""Optimizers and learning-rate schedules (self-contained, no optax)."""
+from repro.optim.optimizers import Optimizer, adam, sgd, make_optimizer
+from repro.optim.schedules import constant, cosine, paper_theorem1, warmup_cosine
+
+__all__ = [
+    "Optimizer",
+    "adam",
+    "sgd",
+    "make_optimizer",
+    "constant",
+    "cosine",
+    "paper_theorem1",
+    "warmup_cosine",
+]

@@ -1,0 +1,97 @@
+"""Minimal optimizer library (SGD, SGD+momentum, Adam) on pytrees.
+
+Kept dependency-free (no optax in the offline environment).  API mirrors the
+(init, update) pair convention; state and updates are pytrees matching params.
+fp32 optimizer state regardless of param dtype (bf16-safe).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+Schedule = Callable[[jax.Array], jax.Array]
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[PyTree], PyTree]
+    update: Callable[[PyTree, PyTree, PyTree, jax.Array], tuple[PyTree, PyTree]]
+    # update(grads, state, params, step) -> (new_params, new_state)
+
+
+def _cast_like(new, ref):
+    return jax.tree.map(lambda n, r: n.astype(r.dtype), new, ref)
+
+
+def sgd(lr: Schedule | float, momentum: float = 0.0) -> Optimizer:
+    sched = lr if callable(lr) else (lambda _: jnp.asarray(lr, jnp.float32))
+
+    def init(params):
+        if momentum == 0.0:
+            return ()
+        return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+    def update(grads, state, params, step):
+        eta = sched(step)
+        if momentum == 0.0:
+            new = jax.tree.map(
+                lambda p, g: p.astype(jnp.float32) - eta * g.astype(jnp.float32),
+                params, grads)
+            return _cast_like(new, params), state
+        new_m = jax.tree.map(
+            lambda m, g: momentum * m + g.astype(jnp.float32), state, grads)
+        new = jax.tree.map(
+            lambda p, m: p.astype(jnp.float32) - eta * m, params, new_m)
+        return _cast_like(new, params), new_m
+
+    return Optimizer(init, update)
+
+
+def adam(lr: Schedule | float, b1: float = 0.9, b2: float = 0.999,
+         eps: float = 1e-8) -> Optimizer:
+    sched = lr if callable(lr) else (lambda _: jnp.asarray(lr, jnp.float32))
+
+    def init(params):
+        z = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {"m": jax.tree.map(z, params), "v": jax.tree.map(z, params)}
+
+    def update(grads, state, params, step):
+        step_f = jnp.asarray(step, jnp.float32) + 1.0
+        eta = sched(step)
+        m = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32),
+                         state["m"], grads)
+        v = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+                         state["v"], grads)
+        mhat_scale = 1.0 / (1 - b1 ** step_f)
+        vhat_scale = 1.0 / (1 - b2 ** step_f)
+        new = jax.tree.map(
+            lambda p, m_, v_: p.astype(jnp.float32)
+            - eta * (m_ * mhat_scale) / (jnp.sqrt(v_ * vhat_scale) + eps),
+            params, m, v)
+        return _cast_like(new, params), {"m": m, "v": v}
+
+    return Optimizer(init, update)
+
+
+@dataclasses.dataclass(frozen=True)
+class OptimizerConfig:
+    name: str = "adam"          # adam | sgd | sgd_momentum
+    lr: float = 1e-3
+    momentum: float = 0.9
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+
+
+def make_optimizer(cfg: OptimizerConfig, schedule: Schedule | None = None) -> Optimizer:
+    lr = schedule if schedule is not None else cfg.lr
+    if cfg.name == "adam":
+        return adam(lr, cfg.b1, cfg.b2, cfg.eps)
+    if cfg.name == "sgd":
+        return sgd(lr, 0.0)
+    if cfg.name == "sgd_momentum":
+        return sgd(lr, cfg.momentum)
+    raise ValueError(f"unknown optimizer {cfg.name!r}")

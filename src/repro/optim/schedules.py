@@ -1,0 +1,47 @@
+"""Learning-rate schedules.
+
+``paper_theorem1`` is the schedule required by Theorem 1 of the paper:
+``eta_t = 2 / (mu * (gamma + t))`` with ``gamma = max(8*kappa, T)`` and
+``kappa = L / mu``.  It satisfies the paper's decreasing-rate condition
+``eta_t <= 2 * eta_{t+T}`` used in Lemma 2.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr: float):
+    def sched(step):
+        return jnp.asarray(lr, jnp.float32)
+
+    return sched
+
+
+def cosine(peak: float, total_steps: int, floor: float = 0.0):
+    def sched(step):
+        frac = jnp.clip(jnp.asarray(step, jnp.float32) / max(total_steps, 1), 0.0, 1.0)
+        return floor + 0.5 * (peak - floor) * (1 + jnp.cos(jnp.pi * frac))
+
+    return sched
+
+
+def warmup_cosine(peak: float, warmup_steps: int, total_steps: int, floor: float = 0.0):
+    cos = cosine(peak, max(total_steps - warmup_steps, 1), floor)
+
+    def sched(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = peak * step / max(warmup_steps, 1)
+        return jnp.where(step < warmup_steps, warm, cos(step - warmup_steps))
+
+    return sched
+
+
+def paper_theorem1(mu: float, L: float, T: int):
+    """eta_t = 2 / (mu (gamma + t)), gamma = max{8 kappa, T}, kappa = L/mu."""
+    kappa = L / mu
+    gamma = max(8.0 * kappa, float(T))
+
+    def sched(step):
+        return 2.0 / (mu * (gamma + jnp.asarray(step, jnp.float32)))
+
+    return sched

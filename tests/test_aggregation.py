@@ -1,0 +1,102 @@
+"""Aggregation rules (eqs. 9/12/13) + the exact Lemma-1 unbiasedness check."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (Policy, aggregate, fedavg_aggregate,
+                        participation_mask, scaled_delta_aggregate,
+                        accumulate_client_delta, apply_accumulated,
+                        zeros_like_fp32)
+
+
+def _rand_tree(key, C, shapes=((3,), (2, 4))):
+    ks = jax.random.split(key, len(shapes))
+    return {f"p{i}": jax.random.normal(k, (C,) + s)
+            for i, (k, s) in enumerate(zip(ks, shapes))}
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 6), st.integers(0, 1000))
+def test_scaled_aggregate_formula(C, seed):
+    key = jax.random.PRNGKey(seed)
+    w_stack = _rand_tree(key, C)
+    w = jax.tree.map(lambda x: x[0] * 0.5, w_stack)
+    p = jax.random.uniform(jax.random.fold_in(key, 1), (C,))
+    p = p / p.sum()
+    E = jax.random.randint(jax.random.fold_in(key, 2), (C,), 1, 5)
+    mask = (jax.random.uniform(jax.random.fold_in(key, 3), (C,)) > 0.5
+            ).astype(jnp.float32)
+    out = scaled_delta_aggregate(w, w_stack, mask, p, E)
+    for k in w:
+        coeff = np.asarray(mask * p * E)
+        manual = np.asarray(w[k]) + np.einsum(
+            "c,c...->...", coeff, np.asarray(w_stack[k]) - np.asarray(w[k]))
+        np.testing.assert_allclose(np.asarray(out[k]), manual, rtol=2e-5,
+                                   atol=2e-5)
+
+
+def test_fedavg_matches_eq9():
+    """Eq. (9): w+ = sum_i p_i w_i with absent clients frozen at w."""
+    key = jax.random.PRNGKey(0)
+    C = 4
+    w_stack = _rand_tree(key, C)
+    w = jax.tree.map(lambda x: jnp.mean(x, 0), w_stack)
+    p = jnp.asarray([0.1, 0.2, 0.3, 0.4])
+    mask = jnp.asarray([1.0, 0.0, 1.0, 0.0])
+    out = fedavg_aggregate(w, w_stack, mask, p)
+    for k in w:
+        frozen = jnp.where(mask[:, None] > 0 if w_stack[k].ndim == 2
+                           else mask.reshape((-1,) + (1,) * (w_stack[k].ndim - 1)) > 0,
+                           w_stack[k], w[k][None])
+        manual = jnp.einsum("c,c...->...", p, frozen)
+        np.testing.assert_allclose(np.asarray(out[k]), np.asarray(manual),
+                                   rtol=2e-5, atol=2e-5)
+
+
+def test_lemma1_unbiasedness_exact():
+    """Lemma 1, exact form: summing Algorithm 1's scaled aggregate over one
+    full aligned scheduling horizon (LCM of the E_i) equals LCM times the
+    full-participation FedAvg aggregate — for ANY seed, because each client
+    participates exactly LCM/E_i times with scale E_i."""
+    key = jax.random.PRNGKey(4)
+    C = 6
+    E = np.array([1, 2, 3, 6, 2, 1], np.int32)
+    lcm = int(np.lcm.reduce(E))
+    w_stack = _rand_tree(key, C)
+    w = jax.tree.map(lambda x: jnp.zeros_like(x[0]), w_stack)
+    p = jnp.ones((C,)) / C
+
+    total = {k: np.zeros(v.shape[1:], np.float32) for k, v in w_stack.items()}
+    for r in range(lcm):
+        mask = participation_mask(Policy.SUSTAINABLE, 11, jnp.int32(r),
+                                  jnp.asarray(E))
+        out = scaled_delta_aggregate(w, w_stack, mask, p, jnp.asarray(E))
+        for k in total:
+            total[k] += np.asarray(out[k]) - np.asarray(w[k])
+    for k in total:
+        expect = lcm * np.einsum("c,c...->...", np.asarray(p),
+                                 np.asarray(w_stack[k]))
+        np.testing.assert_allclose(total[k], expect, rtol=1e-4, atol=1e-4)
+
+
+def test_sequential_accumulation_equals_stacked():
+    """Sequential mode (accumulate_client_delta) == parallel aggregate."""
+    key = jax.random.PRNGKey(1)
+    C = 5
+    w_stack = _rand_tree(key, C)
+    w = jax.tree.map(lambda x: x[1] * 0.3, w_stack)
+    p = jnp.ones((C,)) / C
+    E = jnp.asarray([1, 2, 3, 4, 5], jnp.float32)
+    mask = jnp.asarray([1, 0, 1, 1, 0], jnp.float32)
+
+    out_par = aggregate(w, w_stack, mask, p, E)
+
+    acc = zeros_like_fp32(w)
+    for i in range(C):
+        w_i = jax.tree.map(lambda x: x[i], w_stack)
+        acc = accumulate_client_delta(acc, w_i, w, float(mask[i] * p[i] * E[i]))
+    out_seq = apply_accumulated(w, acc)
+    for k in w:
+        np.testing.assert_allclose(np.asarray(out_par[k]),
+                                   np.asarray(out_seq[k]), rtol=2e-5, atol=2e-5)

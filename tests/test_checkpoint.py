@@ -1,0 +1,35 @@
+"""Checkpoint roundtrip."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import load_checkpoint, save_checkpoint
+
+
+def test_roundtrip(tmp_path):
+    tree = {
+        "layers": {"w": jnp.arange(12, dtype=jnp.bfloat16).reshape(3, 4),
+                   "b": jnp.ones(4, jnp.float32)},
+        "step_scale": jnp.asarray(2.5),
+    }
+    path = os.path.join(tmp_path, "ckpt.msgpack")
+    save_checkpoint(path, tree, step=17, metadata={"arch": "test"})
+    loaded, step, meta = load_checkpoint(path, like=tree)
+    assert step == 17 and meta["arch"] == "test"
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(loaded)):
+        assert a.dtype == b.dtype
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+def test_atomic_overwrite(tmp_path):
+    path = os.path.join(tmp_path, "c.msgpack")
+    t1 = {"w": jnp.zeros(3)}
+    t2 = {"w": jnp.ones(3)}
+    save_checkpoint(path, t1, step=1)
+    save_checkpoint(path, t2, step=2)
+    loaded, step, _ = load_checkpoint(path, like=t2)
+    assert step == 2
+    np.testing.assert_array_equal(np.asarray(loaded["w"]), np.ones(3))

@@ -1,0 +1,91 @@
+"""Serving-path correctness: prefill + decode must reproduce the full forward,
+including ring (sliding-window) caches for the long-context variants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ASSIGNED_ARCHS, get_smoke_config
+from repro.models import get_model
+
+B, S = 2, 24
+
+DECODER_ARCHS = [a for a in ASSIGNED_ARCHS]  # all assigned archs decode
+
+
+def _batches(cfg, key, n_extra=4):
+    toks = jax.random.randint(key, (B, S + n_extra), 0, cfg.vocab_size)
+    prompt = {"tokens": toks[:, :S]}
+    full = {"tokens": toks}
+    if cfg.family == "vlm":
+        ve = jax.random.normal(key, (B, cfg.vision_tokens, cfg.d_model))
+        prompt["vision_embeds"] = ve
+        full["vision_embeds"] = ve
+    if cfg.family == "encdec":
+        fr = jax.random.normal(key, (B, cfg.encoder_seq, cfg.d_model))
+        prompt["frames"] = fr
+        full["frames"] = fr
+    return toks, prompt, full
+
+
+@pytest.mark.parametrize("arch", DECODER_ARCHS)
+def test_prefill_decode_match_forward(arch, rng):
+    cfg = get_smoke_config(arch)
+    model = get_model(cfg)
+    params = model.init_params(rng)
+    toks, prompt, full = _batches(cfg, rng)
+
+    ref, _ = model.forward(params, full)
+    logits_p, cache = model.prefill(params, prompt, cache_len=S + 5)
+    np.testing.assert_allclose(np.asarray(logits_p[:, 0]),
+                               np.asarray(ref[:, S - 1]), rtol=2e-4, atol=2e-4)
+    # 4 decode steps
+    for j in range(4):
+        logits_d, cache = model.decode_step(params, toks[:, S + j], cache,
+                                            S + j)
+        np.testing.assert_allclose(np.asarray(logits_d),
+                                   np.asarray(ref[:, S + j]),
+                                   rtol=2e-4, atol=2e-4)
+
+
+def test_ring_cache_sliding_window_decode():
+    """Dense arch served with the SWA ring-cache variant == full attention
+    restricted to the window (the long_500k serving path)."""
+    cfg = get_smoke_config("granite-8b")
+    import dataclasses
+    W = 8
+    cfg_win = dataclasses.replace(cfg, sliding_window=W)
+    model = get_model(cfg_win)
+    params = model.init_params(jax.random.PRNGKey(3))
+    toks = jax.random.randint(jax.random.PRNGKey(4), (B, S + 4), 0,
+                              cfg.vocab_size)
+    ref, _ = model.forward(params, {"tokens": toks})  # windowed full forward?
+    # forward() applies cfg.sliding_window inside attention via cfg? dense
+    # forward path uses cfg.sliding_window through attention(window=None ->
+    # cfg.sliding_window), so ref IS the windowed model.
+    logits_p, cache = model.prefill(params, {"tokens": toks[:, :S]},
+                                    cache_len=W, window=W)
+    np.testing.assert_allclose(np.asarray(logits_p[:, 0]),
+                               np.asarray(ref[:, S - 1]), rtol=2e-4, atol=2e-4)
+    for j in range(4):
+        logits_d, cache = model.decode_step(params, toks[:, S + j], cache,
+                                            S + j, ring=True, window=W)
+        np.testing.assert_allclose(np.asarray(logits_d),
+                                   np.asarray(ref[:, S + j]),
+                                   rtol=2e-4, atol=2e-4)
+
+
+def test_ssm_state_decode_is_constant_memory():
+    cfg = get_smoke_config("mamba2-1.3b")
+    model = get_model(cfg)
+    cache = model.init_cache(B, 0)
+    sizes = [v.size for v in jax.tree.leaves(cache)]
+    # no leaf scales with any sequence length
+    assert all(s < 1e6 for s in sizes)
+
+
+def test_hybrid_cache_is_window_bounded():
+    cfg = get_smoke_config("recurrentgemma-2b")
+    model = get_model(cfg)
+    cache = model.init_cache(B, 10_000)  # requested length must be ignored
+    assert cache["attn"]["k"].shape[2] == cfg.local_window

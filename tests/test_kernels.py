@@ -1,0 +1,122 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps in interpret mode."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _qkv(B, S, H, D, dtype, skv=None):
+    ks = jax.random.split(KEY, 3)
+    mk = lambda k, s: (jax.random.normal(k, s) * 0.5).astype(dtype)
+    return (mk(ks[0], (B, S, H, D)), mk(ks[1], (B, skv or S, H, D)),
+            mk(ks[2], (B, skv or S, H, D)))
+
+
+@pytest.mark.parametrize("B,S,H,D", [
+    (1, 32, 1, 16), (2, 64, 4, 32), (1, 128, 2, 64), (2, 48, 3, 32),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("causal,window", [(True, 0), (True, 16), (False, 0)])
+def test_flash_attention_sweep(B, S, H, D, dtype, causal, window):
+    q, k, v = _qkv(B, S, H, D, dtype)
+    out = ops.flash_attention(q, k, v, causal=causal, window=window,
+                              block_q=16, block_k=16, interpret=True)
+    want = ref.mha_reference(q, k, v, causal=causal, window=window)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_flash_attention_uneven_blocks():
+    """Sequence not a multiple of the block size exercises the padding guard."""
+    q, k, v = _qkv(2, 40, 2, 32, jnp.float32)
+    out = ops.flash_attention(q, k, v, causal=True, block_q=16, block_k=16,
+                              interpret=True)
+    want = ref.mha_reference(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("B,S,H,P,N,chunk", [
+    (1, 32, 1, 8, 4, 8), (2, 64, 4, 16, 8, 16), (1, 128, 2, 32, 16, 32),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_ssd_scan_sweep(B, S, H, P, N, chunk, dtype):
+    ks = jax.random.split(KEY, 5)
+    x = (jax.random.normal(ks[0], (B, S, H, P)) * 0.5).astype(dtype)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, H))).astype(jnp.float32)
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)) * 0.3)
+    Bm = (jax.random.normal(ks[3], (B, S, H, N)) * 0.3).astype(dtype)
+    Cm = (jax.random.normal(ks[4], (B, S, H, N)) * 0.3).astype(dtype)
+    out = ops.ssd_scan(x, dt, A, Bm, Cm, chunk=chunk, interpret=True)
+    want = ref.ssd_reference(x, dt, A, Bm, Cm)
+    tol = 5e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_ssd_scan_state_carries_across_chunks():
+    """A decay near 1 makes early tokens influence late chunks — catches
+    state-carry bugs that a short-memory configuration would mask."""
+    B, S, H, P, N = 1, 64, 1, 4, 4
+    x = jnp.zeros((B, S, H, P)).at[:, 0].set(1.0)
+    dt = jnp.full((B, S, H), 0.05)
+    A = jnp.asarray([-0.01])
+    Bm = jnp.ones((B, S, H, N))
+    Cm = jnp.ones((B, S, H, N))
+    out = ops.ssd_scan(x, dt, A, Bm, Cm, chunk=16, interpret=True)
+    want = ref.ssd_reference(x, dt, A, Bm, Cm)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+    assert abs(float(out[0, -1, 0, 0])) > 1e-3  # late chunk still sees token 0
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 9), st.integers(1, 3000), st.integers(0, 100))
+def test_fused_agg_property(C, M, seed):
+    key = jax.random.PRNGKey(seed)
+    w = jax.random.normal(key, (M,))
+    ws = jax.random.normal(jax.random.fold_in(key, 1), (C, M))
+    s = jax.random.uniform(jax.random.fold_in(key, 2), (C,))
+    out = ops.fused_agg(w, ws, s, block=256, interpret=True)
+    want = ref.agg_reference(w, ws, s)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_fused_agg_dtypes(dtype):
+    C, M = 8, 5000
+    w = jax.random.normal(KEY, (M,)).astype(dtype)
+    ws = jax.random.normal(jax.random.fold_in(KEY, 1), (C, M)).astype(dtype)
+    s = jax.random.uniform(jax.random.fold_in(KEY, 2), (C,))
+    out = ops.fused_agg(w, ws, s, interpret=True)
+    want = ref.agg_reference(w, ws, s)
+    tol = 5e-2 if dtype == jnp.bfloat16 else 1e-4
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32), rtol=tol, atol=tol)
+
+
+def test_fused_agg_matches_paper_aggregation():
+    """The kernel computes exactly eq. (13) when s = mask * p * E."""
+    from repro.core import aggregate
+    C, M = 6, 257
+    key = jax.random.PRNGKey(7)
+    w = {"x": jax.random.normal(key, (M,))}
+    ws = {"x": jax.random.normal(jax.random.fold_in(key, 1), (C, M))}
+    mask = (jax.random.uniform(jax.random.fold_in(key, 2), (C,)) > 0.4
+            ).astype(jnp.float32)
+    p = jnp.ones((C,)) / C
+    E = jnp.asarray([1, 2, 3, 4, 5, 6], jnp.float32)
+    want = aggregate(w, ws, mask, p, E)["x"]
+    got = ops.fused_agg(w["x"], ws["x"], mask * p * E, block=64,
+                        interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)

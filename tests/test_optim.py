@@ -1,0 +1,73 @@
+"""Optimizers + schedules."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.optim import adam, sgd
+from repro.optim.schedules import constant, cosine, paper_theorem1, warmup_cosine
+
+
+def _minimize(opt, steps=300):
+    target = jnp.asarray([1.0, -2.0, 3.0])
+
+    def loss(p):
+        return jnp.sum((p["w"] - target) ** 2)
+
+    p = {"w": jnp.zeros(3)}
+    s = opt.init(p)
+    for t in range(steps):
+        g = jax.grad(loss)(p)
+        p, s = opt.update(g, s, p, t)
+    return float(loss(p))
+
+
+def test_sgd_converges():
+    assert _minimize(sgd(0.1)) < 1e-6
+
+
+def test_sgd_momentum_converges():
+    assert _minimize(sgd(0.05, momentum=0.9)) < 1e-6
+
+
+def test_adam_converges():
+    assert _minimize(adam(0.05)) < 1e-4
+
+
+def test_adam_bias_correction():
+    """First Adam step must be ~lr in the gradient direction (not lr*(1-b1))."""
+    opt = adam(0.1)
+    p = {"w": jnp.zeros(1)}
+    s = opt.init(p)
+    g = {"w": jnp.asarray([1.0])}
+    p2, _ = opt.update(g, s, p, 0)
+    np.testing.assert_allclose(float(p2["w"][0]), -0.1, rtol=1e-3)
+
+
+def test_bf16_params_fp32_state():
+    opt = adam(0.1)
+    p = {"w": jnp.zeros(4, jnp.bfloat16)}
+    s = opt.init(p)
+    assert s["m"]["w"].dtype == jnp.float32
+    g = {"w": jnp.ones(4, jnp.bfloat16)}
+    p2, s2 = opt.update(g, s, p, 0)
+    assert p2["w"].dtype == jnp.bfloat16
+    assert s2["v"]["w"].dtype == jnp.float32
+
+
+def test_paper_schedule_satisfies_lemma2_condition():
+    """eta_t <= 2 eta_{t+T} for all t (condition used in Lemma 2)."""
+    for mu, L, T in [(0.5, 2.0, 5), (1.0, 10.0, 1), (0.1, 1.0, 20)]:
+        sched = paper_theorem1(mu, L, T)
+        for t in range(0, 200, 3):
+            assert float(sched(t)) <= 2 * float(sched(t + T)) + 1e-9
+        # gamma = max(8 kappa, T)
+        gamma = max(8 * L / mu, T)
+        np.testing.assert_allclose(float(sched(0)), 2 / (mu * gamma), rtol=1e-6)
+
+
+def test_schedules_shapes():
+    assert abs(float(constant(0.3)(100)) - 0.3) < 1e-6
+    c = cosine(1.0, 100)
+    assert float(c(0)) == 1.0 and float(c(100)) < 1e-6
+    w = warmup_cosine(1.0, 10, 110)
+    assert abs(float(w(5)) - 0.5) < 1e-6 and abs(float(w(10)) - 1.0) < 1e-6

@@ -1,0 +1,118 @@
+"""Properties of the client scheduling policies (paper §III-A)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (EnergyProfile, Policy, energy_feasible,
+                        participation_mask)
+
+
+def masks_for(policy, seed, rounds, E):
+    return np.stack([
+        np.asarray(participation_mask(policy, seed, jnp.int32(r),
+                                      jnp.asarray(E)))
+        for r in range(rounds)])
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.integers(1, 6), min_size=1, max_size=6),
+       st.integers(0, 2 ** 16))
+def test_sustainable_exactly_one_per_window(Es, seed):
+    """Alg. 1 invariant: exactly ONE participation inside every aligned window
+    of E_i rounds (this is both the energy-feasibility and the unbiasedness
+    driver: sum over a window == 1 => P[participate at a round] = 1/E_i)."""
+    E = np.asarray(Es, np.int32)
+    horizon = int(np.lcm.reduce(E)) * 2
+    m = masks_for(Policy.SUSTAINABLE, seed, horizon, E)
+    for i, e in enumerate(E):
+        per_window = m[:, i].reshape(-1, e).sum(axis=1)
+        assert np.all(per_window == 1), (i, e, m[:, i])
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.integers(1, 8), min_size=1, max_size=5),
+       st.integers(0, 2 ** 16))
+def test_sustainable_energy_feasible(Es, seed):
+    E = np.asarray(Es, np.int32)
+    horizon = int(np.lcm.reduce(E))
+    m = masks_for(Policy.SUSTAINABLE, seed, horizon, E)
+    assert bool(energy_feasible(jnp.asarray(m), jnp.asarray(E)))
+
+
+def test_sustainable_deterministic_and_decentralised():
+    """Stateless: any host re-derives the same decision from (seed, r, E);
+    each client's decision is independent of the other clients' entries."""
+    E = np.array([1, 5, 10, 20], np.int32)
+    m1 = masks_for(Policy.SUSTAINABLE, 7, 40, E)
+    m2 = masks_for(Policy.SUSTAINABLE, 7, 40, E)
+    assert np.array_equal(m1, m2)
+    # client 2's column must be identical when computed in a different network
+    E_sub = np.array([3, 10, 2], np.int32)  # client with E=10 now at index 1
+    # (independence is by construction — key folds only (seed, i, window) —
+    # here we just confirm different seeds change the draw)
+    m3 = masks_for(Policy.SUSTAINABLE, 8, 40, E)
+    assert not np.array_equal(m1, m3)
+
+
+def test_greedy_participates_on_arrival():
+    E = np.array([1, 2, 4], np.int32)
+    m = masks_for(Policy.GREEDY, 0, 8, E)
+    expected = np.stack([(np.arange(8) % e == 0).astype(np.float32)
+                         for e in E], axis=1)
+    assert np.array_equal(m, expected)
+
+
+def test_wait_all_only_at_emax_multiples():
+    E = np.array([1, 5, 10, 20], np.int32)
+    m = masks_for(Policy.WAIT_ALL, 0, 41, E)
+    live = m.sum(axis=1)
+    assert np.all(live[np.arange(41) % 20 == 0] == 4)
+    assert np.all(live[np.arange(41) % 20 != 0] == 0)
+
+
+def test_always_is_fedavg():
+    E = np.array([1, 5], np.int32)
+    m = masks_for(Policy.ALWAYS, 0, 6, E)
+    assert np.all(m == 1)
+
+
+def test_paper_energy_profile():
+    """§V: 4 equal groups, (tau_0..tau_3) = (1, 5, 10, 20), i mod 4 grouping."""
+    prof = EnergyProfile(40, (1, 5, 10, 20))
+    E = np.asarray(prof.cycles())
+    assert E.shape == (40,)
+    for i in range(40):
+        assert E[i] == (1, 5, 10, 20)[i % 4]
+
+
+def test_participation_rate_matches_lemma1():
+    """Empirical P[alpha_i = 1] == 1/E_i exactly over aligned horizons."""
+    E = np.array([1, 5, 10, 20], np.int32)
+    m = masks_for(Policy.SUSTAINABLE, 3, 20, E)
+    rates = m.mean(axis=0)
+    assert np.allclose(rates, 1.0 / E)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.lists(st.integers(1, 6), min_size=1, max_size=5),
+       st.integers(0, 2 ** 12), st.integers(0, 2 ** 12))
+def test_phase_offsets_preserve_window_invariant(Es, seed, pseed):
+    """Paper footnote 1: clients starting at different time instances.  With
+    per-client phase offsets the per-(shifted-)window exactly-one invariant —
+    hence Lemma 1's 1/E_i rate — still holds."""
+    E = np.asarray(Es, np.int32)
+    n = len(E)
+    phase = np.random.RandomState(pseed).randint(0, 64, size=n).astype(np.int32)
+    horizon = int(np.lcm.reduce(E)) * 3
+    m = np.stack([
+        np.asarray(participation_mask(Policy.SUSTAINABLE, seed, jnp.int32(r),
+                                      E, phase=phase))
+        for r in range(horizon)])
+    for i, e in enumerate(E):
+        # windows are aligned to (r + phase_i): drop the partial first window
+        start = (-int(phase[i])) % e
+        full = ((horizon - start) // e) * e
+        per_window = m[start:start + full, i].reshape(-1, e).sum(axis=1)
+        assert np.all(per_window == 1), (i, e, phase[i])

@@ -1,0 +1,103 @@
+"""Sharding rules: divisibility safety + expected axis placement.
+
+These run on the single CPU device — PartitionSpec construction needs a Mesh
+object but no actual devices beyond what exists (mesh (1,1))."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.dist.sharding import (_param_spec, batch_spec, cache_specs,
+                                 data_axes, param_specs)
+
+
+class FakeMesh:
+    """Just enough of a Mesh for the rule logic (axis name -> size)."""
+
+    def __init__(self, shape):
+        self.shape = dict(shape)
+        self.axis_names = tuple(shape)
+
+
+MESH = FakeMesh({"data": 16, "model": 16})
+MESH_MP = FakeMesh({"pod": 2, "data": 16, "model": 16})
+
+
+def test_attention_weights_shard_on_flat_dim():
+    # qwen: 20 heads x 128 = 2560 flat — divisible by 16 even though 20 isn't
+    spec = _param_spec(("layers", "attn", "wq"), (40, 2560, 2560), MESH, "model")
+    assert spec == P(None, None, "model")
+    spec = _param_spec(("layers", "attn", "wo"), (40, 2560, 2560), MESH, "model")
+    assert spec == P(None, "model", None)
+
+
+def test_nondivisible_vocab_falls_back_to_dmodel():
+    # granite-3-2b: vocab 49155 not divisible by 16 -> shard tok on d_model
+    spec = _param_spec(("embed", "tok"), (49155, 2048), MESH, "model")
+    assert spec == P(None, "model")
+
+
+def test_divisible_vocab_shards_vocab():
+    spec = _param_spec(("embed", "tok"), (128256, 8192), MESH, "model")
+    assert spec == P("model", None)
+
+
+def test_experts_shard_on_expert_dim_when_divisible():
+    # olmoe 64 experts / 16 -> expert-sharded
+    spec = _param_spec(("layers", "moe", "wi"), (16, 64, 2048, 2048),
+                       MESH, "model")
+    assert spec == P(None, "model", None, None)
+    # mixtral 8 experts: falls back to d_ff sharding
+    spec = _param_spec(("layers", "moe", "wi"), (32, 8, 4096, 28672),
+                       MESH, "model")
+    assert spec == P(None, None, None, "model")
+
+
+def test_fsdp_adds_data_axis():
+    spec = _param_spec(("layers", "mlp", "wi"), (80, 8192, 57344), MESH,
+                       "model", ("data",))
+    assert spec == P(None, ("data",), "model")
+
+
+def test_norms_replicated():
+    spec = _param_spec(("layers", "ln1", "scale"), (40, 2048), MESH, "model")
+    assert spec == P(None, None)
+
+
+def test_batch_spec_fallbacks():
+    assert batch_spec(MESH, 2, 0, 256) == P("data", None)
+    assert batch_spec(MESH_MP, 2, 0, 256) == P(("pod", "data"), None)
+    # batch 1 (long_500k): replicate
+    assert batch_spec(MESH, 2, 0, 1) == P(None, None)
+    # multi-pod batch 32: divisible by pod*data=32
+    assert batch_spec(MESH_MP, 2, 0, 32) == P(("pod", "data"), None)
+
+
+def test_cache_specs_shard_batch_and_heads():
+    cache = {"k": jnp.zeros((4, 32, 128, 16, 64)),
+             "v": jnp.zeros((4, 32, 128, 16, 64))}
+    specs = cache_specs(cache, MESH)
+    assert specs["k"] == P(None, "data", None, "model", None)
+    # kv=1 (recurrentgemma): heads replicated, head_dim 256 shards instead
+    cache = {"k": jnp.zeros((8, 32, 128, 1, 256))}
+    specs = cache_specs(cache, MESH)
+    assert specs["k"] == P(None, "data", None, None, "model")
+
+
+def test_param_specs_whole_tree_runs():
+    from repro.configs import get_smoke_config
+    from repro.models import get_model
+    cfg = get_smoke_config("olmoe-1b-7b")
+    model = get_model(cfg)
+    params = jax.eval_shape(lambda: model.init_params(jax.random.PRNGKey(0)))
+    specs = param_specs(params, MESH)
+    # every leaf got a spec of matching rank
+    for leaf, spec in zip(jax.tree.leaves(params),
+                          jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, P))):
+        assert len(spec) <= leaf.ndim
+
+
+def test_data_axes():
+    assert data_axes(MESH) == ("data",)
+    assert data_axes(MESH_MP) == ("pod", "data")

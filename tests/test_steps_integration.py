@@ -1,0 +1,103 @@
+"""Integration tests for the launch-layer step builders: execute the ACTUAL
+jitted distributed round/serve steps (the same functions the dry-run lowers)
+with real arrays on a degenerate local mesh, and check numerical parity
+between sharding variants (tp vs dp mode, blocked vs naive attention) —
+variants must change the schedule, never the math."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.configs.base import InputShape
+from repro.launch.mesh import make_local_mesh
+from repro.launch.steps import build_step
+from repro.models import get_model
+
+SHAPE = InputShape("tiny_train", seq_len=16, global_batch=4, kind="train")
+DECODE = InputShape("tiny_decode", seq_len=16, global_batch=2, kind="decode")
+
+
+def _run_train(cfg, **kw):
+    mesh = make_local_mesh()
+    with mesh:
+        b = build_step(cfg, SHAPE, mesh, local_steps=2, **kw)
+        fn = jax.jit(b.fn, in_shardings=b.in_shardings,
+                     out_shardings=b.out_shardings)
+        model = get_model(cfg)
+        params = model.init_params(jax.random.PRNGKey(0))
+        key = jax.random.PRNGKey(1)
+        C = b.meta.get("client_groups", 1)
+        bc = b.meta.get("batch_per_client", SHAPE.global_batch)
+        batches = {"tokens": jax.random.randint(
+            key, (C, 2, bc, SHAPE.seq_len), 0, cfg.vocab_size)}
+        if cfg.family == "vlm":
+            batches["vision_embeds"] = jax.random.normal(
+                key, (C, 2, bc, cfg.vision_tokens, cfg.d_model),
+                dtype=jnp.dtype(cfg.dtype))
+        p = jnp.ones((C,)) / C
+        E = jnp.ones((C,), jnp.int32)
+        w, metrics = fn(params, batches, p, E, jnp.int32(0),
+                        jax.random.PRNGKey(2))
+    return w, metrics
+
+
+def test_parallel_round_step_executes():
+    cfg = get_smoke_config("granite-3-2b")
+    w, m = _run_train(cfg)
+    assert np.isfinite(float(m["loss"]))
+    assert float(m["participants"]) >= 1
+
+
+def test_dp_mode_matches_tp_mode():
+    """model_axis_role=dp is a sharding change only: identical numerics."""
+    cfg_tp = get_smoke_config("granite-3-2b")
+    cfg_dp = dataclasses.replace(cfg_tp, model_axis_role="dp")
+    w1, m1 = _run_train(cfg_tp)
+    w2, m2 = _run_train(cfg_dp)
+    np.testing.assert_allclose(float(m1["loss"]), float(m2["loss"]),
+                               rtol=1e-5)
+    for a, b in zip(jax.tree.leaves(w1), jax.tree.leaves(w2)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   rtol=2e-4, atol=2e-4)
+
+
+def test_blocked_attention_matches_naive_in_round():
+    cfg = get_smoke_config("starcoder2-7b")
+    cfg_b = dataclasses.replace(cfg, attn_blocked=True, attn_block_k=8)
+    w1, m1 = _run_train(cfg)
+    w2, m2 = _run_train(cfg_b)
+    np.testing.assert_allclose(float(m1["loss"]), float(m2["loss"]),
+                               rtol=1e-4)
+
+
+def test_decode_step_bundle_executes():
+    cfg = get_smoke_config("mamba2-1.3b")
+    mesh = make_local_mesh()
+    with mesh:
+        b = build_step(cfg, DECODE, mesh)
+        fn = jax.jit(b.fn, in_shardings=b.in_shardings,
+                     out_shardings=b.out_shardings)
+        model = get_model(cfg)
+        params = model.init_params(jax.random.PRNGKey(0))
+        cache = model.init_cache(DECODE.global_batch, 0)
+        tok = jnp.zeros((DECODE.global_batch,), jnp.int32)
+        logits, cache = fn(params, tok, cache, jnp.int32(3))
+    assert logits.shape == (DECODE.global_batch, cfg.vocab_size)
+    assert np.isfinite(np.asarray(logits)).all()
+
+
+def test_micro_batches_match_full_batch():
+    """Gradient accumulation is exact for mean losses (linear in grads)."""
+    cfg = get_smoke_config("granite-8b")
+    cfg_mb = dataclasses.replace(cfg, micro_batches=2)
+    w1, m1 = _run_train(cfg)
+    w2, m2 = _run_train(cfg_mb)
+    np.testing.assert_allclose(float(m1["loss"]), float(m2["loss"]), rtol=1e-5)
+    for a, b in zip(jax.tree.leaves(w1), jax.tree.leaves(w2)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   rtol=2e-4, atol=2e-4)
