@@ -43,6 +43,13 @@ def micro_value_and_grad(loss_fn: LossFn, num_micro: int,
         return jax.value_and_grad(loss_fn)
 
     def f(params, batch, key):
+        for leaf in jax.tree.leaves(batch):
+            if leaf.ndim == 0 or leaf.shape[0] % num_micro:
+                raise ValueError(
+                    f"micro_value_and_grad: batch leading dim "
+                    f"{leaf.shape[0] if leaf.ndim else '<scalar>'} is not "
+                    f"divisible by micro_batches={num_micro}; pick a "
+                    f"micro_batches that divides the per-client batch size")
         mb = jax.tree.map(
             lambda b: b.reshape((num_micro, b.shape[0] // num_micro)
                                 + b.shape[1:]), batch)
@@ -86,11 +93,16 @@ def local_update(
     num_steps: int,
     unroll: bool = False,
     micro_batches: int = 1,
+    step_offset: jax.Array | int = 0,
 ) -> tuple[PyTree, jax.Array]:
     """Eq. (7): ``T`` local optimizer steps via lax.scan.
 
     The local optimizer state is freshly initialised each round (FedAvg
     convention for stateful client optimizers such as Adam).
+
+    ``step_offset`` is the global schedule index of this round's first local
+    step (round * T): Theorem 1's eta_t = 2/(mu(gamma+t)) must keep decaying
+    across rounds, not restart at eta_0 every round.
 
     Returns (local params after T steps, mean local loss).
     """
@@ -105,7 +117,8 @@ def local_update(
         return (p, s), loss
 
     keys = jax.random.split(rng, num_steps)
-    ts = jnp.arange(num_steps, dtype=jnp.int32)
+    ts = jnp.asarray(step_offset, jnp.int32) \
+        + jnp.arange(num_steps, dtype=jnp.int32)
     (params, _), losses = jax.lax.scan(step, (params, opt_state),
                                        (batches, keys, ts), unroll=bool(unroll))
     return params, jnp.mean(losses)
@@ -164,7 +177,9 @@ def parallel_round(
         w, s = optimizer.update(grads, s, w, t)
         return (cst(w), cst_opt(s)), losses
 
-    ts = jnp.arange(cfg.local_steps, dtype=jnp.int32)
+    # global schedule index: Theorem 1's eta_t keeps decaying across rounds
+    ts = jnp.asarray(rnd, jnp.int32) * cfg.local_steps \
+        + jnp.arange(cfg.local_steps, dtype=jnp.int32)
     (w_stack, _), losses = jax.lax.scan(step, (w_stack, opt_state), (xs, ts),
                                         unroll=bool(cfg.unroll))
     losses = jnp.mean(losses, axis=0)  # (C,) mean local loss per client
@@ -188,12 +203,14 @@ def sequential_client_step(
     E_i: jax.Array,
     alpha_i: jax.Array,       # this client's participation bit for this round
     rng: jax.Array,
+    step_offset: jax.Array | int = 0,   # round * T, global schedule index
 ) -> tuple[PyTree, jax.Array]:
     """Sequential mode: process ONE client's local round and fold its scaled
     delta into the accumulator.  ``apply_accumulated`` finishes the round."""
     w_local, loss = local_update(loss_fn, optimizer, w_global, batches, rng,
                                  cfg.local_steps, unroll=cfg.unroll,
-                                 micro_batches=cfg.micro_batches)
+                                 micro_batches=cfg.micro_batches,
+                                 step_offset=step_offset)
     if scheduling.Policy(cfg.policy) == scheduling.Policy.SUSTAINABLE:
         scale_i = jnp.asarray(E_i, jnp.float32)  # eq. (12)
     else:

@@ -55,7 +55,8 @@ def simulate(
 ) -> SimResult:
     """Run ``num_rounds`` global rounds of Algorithm 1 / a benchmark policy."""
     local = jax.jit(partial(local_update, loss_fn, optimizer,
-                            num_steps=cfg.local_steps))
+                            num_steps=cfg.local_steps, unroll=cfg.unroll,
+                            micro_batches=cfg.micro_batches))
     E = np.asarray(E)
     p = np.asarray(p)
     scale = np.asarray(scheduling.aggregation_scale(cfg.policy, E))
@@ -73,7 +74,8 @@ def simulate(
             losses = []
             for i in parts:
                 key = jax.random.fold_in(jax.random.fold_in(rng, r), int(i))
-                w_i, loss = local(w, batch_fn(r, int(i)), key)
+                w_i, loss = local(w, batch_fn(r, int(i)), key,
+                                  step_offset=jnp.int32(r * cfg.local_steps))
                 coeff = float(p[i] * scale[i])
                 acc = aggregation.accumulate_client_delta(acc, w_i, w, coeff)
                 losses.append(float(loss))

@@ -1,0 +1,24 @@
+"""Distribution layer: sharding rules + cross-client collectives.
+
+``repro.dist.sharding`` is the single place that decides how every tensor in
+the system — parameters, optimizer state, client batches, KV/state caches —
+is laid out over a TPU mesh (DESIGN.md §3.2/§3.3).  ``repro.dist.collectives``
+holds the axis-name reduction primitives for cross-client aggregation.
+"""
+from repro.dist import collectives, sharding
+from repro.dist.sharding import (batch_spec, cache_specs, data_axes,
+                                 mesh_axis_size, param_shardings, param_specs,
+                                 shardings_of, stacked_constrainer)
+
+__all__ = [
+    "collectives",
+    "sharding",
+    "batch_spec",
+    "cache_specs",
+    "data_axes",
+    "mesh_axis_size",
+    "param_shardings",
+    "param_specs",
+    "shardings_of",
+    "stacked_constrainer",
+]

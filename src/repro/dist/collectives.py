@@ -1,0 +1,78 @@
+"""Axis-name collective primitives for cross-client reductions.
+
+``core.aggregation`` operates on *stacked* client pytrees (leading C axis,
+reduced with dense einsum-style sums).  This module holds the mapped-axis
+duals: the same reductions expressed over a named mapped axis, usable inside
+``jax.vmap``/``shard_map``-style per-client bodies, where the client axis is a
+mesh axis name rather than a tensor dim.  They are the building blocks for
+moving the parallel round from "stack + constrain" to an explicit
+shard_map-per-client-group formulation without touching the math.
+
+All reductions accumulate in fp32 (bf16-safe eqs. 12-13).  ``tree_psum`` /
+``tree_pmean`` cast back to each leaf's dtype; the delta reductions
+(``weighted_client_sum``, ``cross_client_delta``) deliberately RETURN fp32
+trees — they feed the fp32 server accumulator, matching
+``aggregation._weighted_delta_sum``.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+CLIENT_AXIS = "clients"
+
+
+def tree_psum(tree: PyTree, axis_name: str = CLIENT_AXIS) -> PyTree:
+    """Leafwise fp32 psum over a mapped axis, cast back to input dtypes."""
+    return jax.tree.map(
+        lambda x: jax.lax.psum(x.astype(jnp.float32), axis_name).astype(x.dtype),
+        tree)
+
+
+def tree_pmean(tree: PyTree, axis_name: str = CLIENT_AXIS) -> PyTree:
+    """Leafwise fp32 pmean over a mapped axis, cast back to input dtypes."""
+    return jax.tree.map(
+        lambda x: jax.lax.pmean(x.astype(jnp.float32), axis_name).astype(x.dtype),
+        tree)
+
+
+def weighted_client_sum(tree: PyTree, coeff: jax.Array,
+                        axis_name: str = CLIENT_AXIS) -> PyTree:
+    """``sum_c coeff_c * leaf_c`` over the mapped client axis (fp32 accum).
+
+    ``coeff`` is this client's scalar weight (already ``alpha_i * p_i *
+    scale_i`` for eqs. 12-13).  Every participant receives the full sum
+    (all-reduce semantics), so the server apply can run replicated.
+    """
+    c = jnp.asarray(coeff, jnp.float32)
+    return jax.tree.map(
+        lambda x: jax.lax.psum(c * x.astype(jnp.float32), axis_name), tree)
+
+
+def cross_client_delta(w_local: PyTree, w_global: PyTree, coeff: jax.Array,
+                       axis_name: str = CLIENT_AXIS) -> PyTree:
+    """Mapped-axis form of the eq. (13) numerator:
+    ``sum_c coeff_c * (w_local_c - w_global)`` as an fp32 delta tree."""
+    delta = jax.tree.map(
+        lambda wl, wg: wl.astype(jnp.float32) - wg.astype(jnp.float32),
+        w_local, w_global)
+    return weighted_client_sum(delta, coeff, axis_name)
+
+
+def participation_count(alpha_i: jax.Array,
+                        axis_name: str = CLIENT_AXIS) -> jax.Array:
+    """Number of participating clients this round (psum of the alpha bits)."""
+    return jax.lax.psum(jnp.asarray(alpha_i, jnp.float32), axis_name)
+
+
+def masked_mean(value: jax.Array, alpha_i: jax.Array,
+                axis_name: str = CLIENT_AXIS) -> jax.Array:
+    """Participant-weighted mean of a per-client scalar (e.g. local loss)."""
+    a = jnp.asarray(alpha_i, jnp.float32)
+    num = jax.lax.psum(a * jnp.asarray(value, jnp.float32), axis_name)
+    den = jax.lax.psum(a, axis_name)
+    return num / jnp.maximum(den, 1.0)

@@ -80,6 +80,15 @@ def collective_stats(hlo_text: str) -> dict:
     return out
 
 
+def _cost_dict(compiled) -> dict:
+    """``Compiled.cost_analysis()`` returns a dict on current jax but a
+    one-element list of dicts on older releases; normalise to a dict."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return ca
+
+
 def _measure(cfg, shape, mesh, *, local_steps=5, unroll=False):
     """Compile one variant and return np.array([flops, bytes, coll_bytes])
     (per-device)."""
@@ -90,7 +99,7 @@ def _measure(cfg, shape, mesh, *, local_steps=5, unroll=False):
         compiled = jax.jit(bundle.fn, in_shardings=bundle.in_shardings,
                            out_shardings=bundle.out_shardings
                            ).lower(*bundle.args).compile()
-    ca = compiled.cost_analysis()
+    ca = _cost_dict(compiled)
     coll = collective_stats(compiled.as_text())
     return np.array([float(ca.get("flops", 0.0)),
                      float(ca.get("bytes accessed", 0.0)),
@@ -210,7 +219,7 @@ def run_one(arch: str, shape_name: str, multi_pod: bool,
     t1 = time.time()
 
     ma = compiled.memory_analysis()
-    ca = compiled.cost_analysis()
+    ca = _cost_dict(compiled)
     hlo = compiled.as_text()
     coll = collective_stats(hlo)
 

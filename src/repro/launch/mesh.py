@@ -10,11 +10,35 @@ from __future__ import annotations
 import jax
 
 
+# single source of truth for the production topology (v5e 256-chip pods)
+PRODUCTION_TOPOLOGY = {
+    False: {"data": 16, "model": 16},                # 16x16 = 256 chips
+    True: {"pod": 2, "data": 16, "model": 16},       # 2x16x16 = 512 chips
+}
+
+
 def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
     """16x16 = 256 chips/pod single-pod, or 2x16x16 = 512 chips multi-pod."""
-    shape = (2, 16, 16) if multi_pod else (16, 16)
-    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes)
+    topo = PRODUCTION_TOPOLOGY[multi_pod]
+    return jax.make_mesh(tuple(topo.values()), tuple(topo))
+
+
+class SpecMesh:
+    """Device-free mesh stand-in: just axis name -> size.
+
+    ``repro.dist.sharding``'s spec constructors only read ``mesh.shape`` and
+    ``mesh.axis_names``, so production layouts can be computed and validated
+    on machines without the 512 placeholder devices (unit tests, CI).
+    """
+
+    def __init__(self, shape: dict[str, int]):
+        self.shape = dict(shape)
+        self.axis_names = tuple(shape)
+
+
+def production_spec_mesh(*, multi_pod: bool = False) -> SpecMesh:
+    """Shape-only twin of ``make_production_mesh`` (no jax device state)."""
+    return SpecMesh(PRODUCTION_TOPOLOGY[multi_pod])
 
 
 def make_local_mesh(model: int = 1) -> jax.sharding.Mesh:

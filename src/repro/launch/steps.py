@@ -160,12 +160,13 @@ def build_train_step(cfg: ModelConfig, shape: InputShape, mesh,
             params, acc, batches,
             _sds((), F32), _sds((), F32), _sds((), F32),  # p_i, E_i, alpha_i
             _sds((2,), jnp.uint32),
+            _sds((), I32),                                # step_offset (rnd*T)
         )
         p_sh = shard.param_shardings(params, mesh, fsdp=True)
         in_sh = (
             p_sh, p_sh,
             _batch_shardings(batches, mesh, 1, shape.global_batch),
-            _repl(mesh), _repl(mesh), _repl(mesh), _repl(mesh),
+            _repl(mesh), _repl(mesh), _repl(mesh), _repl(mesh), _repl(mesh),
         )
         out_sh = (p_sh, _repl(mesh))
         fn = partial(sequential_client_step, loss_fn, opt, fed)

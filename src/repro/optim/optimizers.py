@@ -56,10 +56,15 @@ def adam(lr: Schedule | float, b1: float = 0.9, b2: float = 0.999,
 
     def init(params):
         z = lambda p: jnp.zeros(p.shape, jnp.float32)
-        return {"m": jax.tree.map(z, params), "v": jax.tree.map(z, params)}
+        # "t" counts steps SINCE INIT: bias correction must track the (fresh
+        # per-round, FedAvg convention) moment buffers, while the ``step``
+        # passed to update() is the global schedule index, which keeps
+        # decaying across rounds (Theorem 1's eta_t)
+        return {"m": jax.tree.map(z, params), "v": jax.tree.map(z, params),
+                "t": jnp.zeros((), jnp.float32)}
 
     def update(grads, state, params, step):
-        step_f = jnp.asarray(step, jnp.float32) + 1.0
+        step_f = state["t"] + 1.0
         eta = sched(step)
         m = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32),
                          state["m"], grads)
@@ -71,7 +76,7 @@ def adam(lr: Schedule | float, b1: float = 0.9, b2: float = 0.999,
             lambda p, m_, v_: p.astype(jnp.float32)
             - eta * (m_ * mhat_scale) / (jnp.sqrt(v_ * vhat_scale) + eps),
             params, m, v)
-        return _cast_like(new, params), {"m": m, "v": v}
+        return _cast_like(new, params), {"m": m, "v": v, "t": step_f}
 
     return Optimizer(init, update)
 

@@ -1,0 +1,153 @@
+"""Minimal, dependency-free stand-in for the ``hypothesis`` API this suite
+uses, loaded by ``conftest.py`` ONLY when the real package is not installed
+(offline containers).  CI installs real hypothesis (requirements-dev.txt) and
+never sees this module.
+
+Supported surface: ``@given`` over positional strategies, ``@settings(
+max_examples=..., deadline=...)``, ``assume``, and the strategies
+``integers``, ``floats``, ``booleans``, ``lists``, ``sampled_from`` and
+``tuples``.  No shrinking — on failure the test re-raises with the failing
+example attached.  Sampling is deterministic per test (seeded by the test
+name) so runs are reproducible.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+import types
+
+DEFAULT_MAX_EXAMPLES = 100
+
+
+class _Unsatisfied(Exception):
+    """Raised by ``assume(False)``: skip this example, draw another."""
+
+
+def assume(condition) -> bool:
+    if not condition:
+        raise _Unsatisfied()
+    return True
+
+
+class HealthCheck:
+    too_slow = "too_slow"
+    data_too_large = "data_too_large"
+    filter_too_much = "filter_too_much"
+
+    @classmethod
+    def all(cls):
+        return [cls.too_slow, cls.data_too_large, cls.filter_too_much]
+
+
+class SearchStrategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def example_from(self, rng: random.Random):
+        return self._draw(rng)
+
+    def map(self, fn):
+        return SearchStrategy(lambda rng: fn(self._draw(rng)))
+
+    def filter(self, pred):
+        def draw(rng):
+            for _ in range(100):
+                v = self._draw(rng)
+                if pred(v):
+                    return v
+            raise _Unsatisfied()
+        return SearchStrategy(draw)
+
+
+def _integers(min_value=0, max_value=1 << 16):
+    return SearchStrategy(lambda rng: rng.randint(min_value, max_value))
+
+
+def _floats(min_value=0.0, max_value=1.0, **_kw):
+    return SearchStrategy(lambda rng: rng.uniform(min_value, max_value))
+
+
+def _booleans():
+    return SearchStrategy(lambda rng: rng.random() < 0.5)
+
+
+def _sampled_from(elements):
+    elements = list(elements)
+    return SearchStrategy(lambda rng: elements[rng.randrange(len(elements))])
+
+
+def _lists(elements: SearchStrategy, min_size=0, max_size=10, **_kw):
+    def draw(rng):
+        n = rng.randint(min_size, max_size)
+        return [elements.example_from(rng) for _ in range(n)]
+    return SearchStrategy(draw)
+
+
+def _tuples(*strats):
+    return SearchStrategy(
+        lambda rng: tuple(s.example_from(rng) for s in strats))
+
+
+strategies = types.SimpleNamespace(
+    integers=_integers,
+    floats=_floats,
+    booleans=_booleans,
+    sampled_from=_sampled_from,
+    lists=_lists,
+    tuples=_tuples,
+)
+st = strategies
+
+
+def settings(max_examples: int = DEFAULT_MAX_EXAMPLES, deadline=None,
+             suppress_health_check=(), **_kw):
+    def deco(fn):
+        fn._stub_max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(*strats, **kw_strats):
+    def deco(fn):
+        # bind positional strategies to the function's trailing parameters by
+        # name (hypothesis semantics), and hide those parameters from pytest's
+        # signature so they are not mistaken for fixtures
+        sig = inspect.signature(fn)
+        pos_names = [p.name for p in sig.parameters.values()
+                     if p.kind in (inspect.Parameter.POSITIONAL_ONLY,
+                                   inspect.Parameter.POSITIONAL_OR_KEYWORD)]
+        bound = dict(zip(pos_names[len(pos_names) - len(strats):], strats))
+        bound.update(kw_strats)
+
+        @functools.wraps(fn)
+        def wrapper(**fixtures):
+            n = getattr(wrapper, "_stub_max_examples", DEFAULT_MAX_EXAMPLES)
+            rng = random.Random(f"stub-hypothesis:{fn.__module__}.{fn.__qualname__}")
+            ran = 0
+            attempts = 0
+            while ran < n and attempts < 20 * n + 100:
+                attempts += 1
+                example = None
+                try:
+                    example = {k: s.example_from(rng)
+                               for k, s in bound.items()}
+                    fn(**fixtures, **example)
+                except _Unsatisfied:
+                    continue
+                except Exception as e:
+                    where = ("while drawing an example" if example is None
+                             else f"on example {example!r}")
+                    raise AssertionError(
+                        f"{fn.__qualname__} failed {where}: {e!r}") from e
+                ran += 1
+            if ran == 0:
+                raise AssertionError(
+                    f"{fn.__qualname__}: could not generate any example "
+                    f"satisfying assume()/filter() in {attempts} attempts")
+
+        del wrapper.__wrapped__
+        wrapper.__signature__ = sig.replace(parameters=[
+            p for p in sig.parameters.values() if p.name not in bound])
+        return wrapper
+    return deco

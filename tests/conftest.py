@@ -1,6 +1,24 @@
 """Shared fixtures.  NOTE: no XLA_FLAGS device-count override here — smoke
 tests and benches must see the real (single) CPU device; only
-``repro.launch.dryrun`` (its own process) forces 512 placeholder devices."""
+``repro.launch.dryrun`` (its own process) forces 512 placeholder devices.
+
+If the real ``hypothesis`` package is unavailable (offline containers), the
+vendored API-compatible stub in ``_hypothesis_stub.py`` is registered in its
+place BEFORE test modules import it; CI installs the real package
+(requirements-dev.txt) and never hits this path.
+"""
+import os
+import sys
+
+try:
+    import hypothesis  # noqa: F401
+except ImportError:
+    sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+    import _hypothesis_stub
+
+    sys.modules["hypothesis"] = _hypothesis_stub
+    sys.modules["hypothesis.strategies"] = _hypothesis_stub.strategies
+
 import jax
 import pytest
 
