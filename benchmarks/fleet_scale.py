@@ -1,0 +1,99 @@
+"""Fleet-scale scheduling throughput: time `repro.energy.fleet.simulate_fleet`
+(one jitted lax.scan over rounds, whole-fleet battery + arrival state) at
+N in {1e3, 1e5, 1e6} clients and write ``BENCH_fleet.json`` — the repo's
+perf-trajectory artifact (uploaded per PR by CI's ``--smoke`` run).
+
+Reported per (N, policy): compile time, steady-state wall time, rounds/sec
+and client-rounds/sec, plus mean participation so regressions in *behaviour*
+(not just speed) are visible in the artifact diff.
+
+Usage:
+    PYTHONPATH=src python benchmarks/fleet_scale.py            # full sweep
+    PYTHONPATH=src python benchmarks/fleet_scale.py --smoke    # CI (~seconds)
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import numpy as np
+
+from repro.core import EnergyProfile, Policy
+from repro.energy import (BatteryConfig, Bernoulli, CompoundPoisson,
+                          FleetConfig, MarkovSolar, simulate_fleet)
+
+PROCESSES = {
+    "bernoulli": lambda n: Bernoulli.create(n, prob=0.35, amount=1.2),
+    "solar": lambda n: MarkovSolar.create(n, p_stay_day=0.9, p_stay_night=0.9,
+                                          day_mean=0.8),
+    "poisson": lambda n: CompoundPoisson.create(n, rate=0.4, mean_amount=1.5),
+}
+
+
+def bench_one(n: int, rounds: int, policy: Policy, process: str,
+              seed: int = 0) -> dict:
+    proc = PROCESSES[process](n)
+    bat = BatteryConfig(capacity=2.0, leak=0.01)
+    E = np.asarray(EnergyProfile(n).cycles())  # the paper's §V profile
+    cfg = FleetConfig(num_clients=n, policy=policy, seed=seed)
+
+    def run():
+        return simulate_fleet(proc, bat, 1.0, cfg, rounds, E=E)
+
+    t0 = time.perf_counter()
+    res = run()                      # compile + first run
+    t1 = time.perf_counter()
+    res = run()                      # steady state (jit cache hit)
+    t2 = time.perf_counter()
+    wall = t2 - t1
+    return {
+        "num_clients": n,
+        "rounds": rounds,
+        "policy": policy.value,
+        "process": process,
+        "compile_plus_run_s": round(t1 - t0, 4),
+        "run_s": round(wall, 4),
+        "rounds_per_s": round(rounds / wall, 2),
+        "client_rounds_per_s": round(n * rounds / wall, 1),
+        "mean_participation_rate": float(res.participation_rate.mean()),
+        "total_overflowed_j": float(res.stats["overflowed"].sum()),
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized sweep (seconds, not minutes)")
+    ap.add_argument("--out", default="BENCH_fleet.json")
+    ap.add_argument("--rounds", type=int, default=100)
+    args = ap.parse_args()
+
+    if args.smoke:
+        sizes = [1_000, 100_000]
+        combos = [(Policy.THRESHOLD, "bernoulli"), (Policy.SUSTAINABLE, "solar")]
+    else:
+        sizes = [1_000, 100_000, 1_000_000]
+        combos = [(Policy.THRESHOLD, "bernoulli"),
+                  (Policy.GREEDY, "poisson"),
+                  (Policy.SUSTAINABLE, "solar")]
+
+    results = []
+    for n in sizes:
+        for policy, process in combos:
+            rec = bench_one(n, args.rounds, policy, process)
+            results.append(rec)
+            print(f"N={n:>9,} {policy.value:>11}/{process:<9} "
+                  f"run={rec['run_s']:.3f}s  rounds/s={rec['rounds_per_s']:.1f}  "
+                  f"client-rounds/s={rec['client_rounds_per_s']:.2e}  "
+                  f"part={rec['mean_participation_rate']:.3f}", flush=True)
+
+    out = {"bench": "fleet_scale", "smoke": args.smoke, "rounds": args.rounds,
+           "results": results}
+    with open(args.out, "w") as f:
+        json.dump(out, f, indent=1)
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -7,7 +7,7 @@ CONFIG = ModelConfig(
     source="GQA, RoPE [arXiv:2402.19173]",
     num_layers=32,
     d_model=4608,
-    num_heads=36,           # 36 % 16 != 0 — flat-dim sharding (DESIGN.md §6)
+    num_heads=36,           # 36 % 16 != 0 — flat-dim sharding (DESIGN.md §3.3)
     num_kv_heads=4,
     head_dim=128,
     d_ff=18432,

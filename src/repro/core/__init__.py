@@ -1,4 +1,11 @@
-"""Core: the paper's contribution (energy-aware scheduling + scaled aggregation)."""
+"""Core: the paper's contribution (energy-aware scheduling + scaled
+aggregation).
+
+Scheduling here is *stateless* (assumed renewal cycles ``E``); the physical
+energy layer — stochastic harvest arrivals, battery dynamics, device cost
+models, and the fleet-scale battery-gated simulator — lives in
+``repro.energy`` and plugs into ``simulate`` via its ``energy=`` hook.
+"""
 from repro.core.scheduling import (
     EnergyProfile,
     Policy,
@@ -37,4 +44,5 @@ __all__ = [
     "fedavg_aggregate", "scaled_delta_aggregate", "zeros_like_fp32",
     "FedConfig", "finish_sequential_round", "local_update", "parallel_round",
     "run_rounds", "sequential_client_step", "Theorem1Constants",
+    "SimResult", "simulate",
 ]

@@ -82,6 +82,10 @@ class FedConfig:
     seed: int = 0
     unroll: bool = False                # unroll the local-step scan (cost calibration)
     micro_batches: int = 1              # grad accumulation within a local step
+    phase: tuple[int, ...] | None = None  # per-client start offsets (footnote 1)
+
+    def phase_array(self) -> jnp.ndarray | None:
+        return None if self.phase is None else jnp.asarray(self.phase, jnp.int32)
 
 
 def local_update(
@@ -155,7 +159,8 @@ def parallel_round(
     n = cfg.num_clients
     cst = constrain if constrain is not None else (lambda t: t)
     cst_opt = constrain_opt if constrain_opt is not None else cst
-    mask = scheduling.participation_mask(cfg.policy, cfg.seed, rnd, E)
+    mask = scheduling.participation_mask(cfg.policy, cfg.seed, rnd, E,
+                                         phase=cfg.phase_array())
     scale = scheduling.aggregation_scale(cfg.policy, E)
 
     # stacked local models, fresh per-round local optimizer state (eq. 6)

@@ -31,6 +31,9 @@ class Policy(str, enum.Enum):
     GREEDY = "greedy"            # Benchmark 1: participate on every energy arrival
     WAIT_ALL = "wait_all"        # Benchmark 2: server waits for all clients
     ALWAYS = "always"            # Unconstrained FedAvg upper bound (no energy limit)
+    THRESHOLD = "threshold"      # battery-driven: participate when stored energy
+    #                              clears a margin over the round cost
+    #                              (repro.energy.fleet; needs battery state)
 
 
 def sustainable_schedule(seed: jax.Array, rnd: jax.Array, E: jax.Array,
@@ -67,11 +70,15 @@ def sustainable_schedule(seed: jax.Array, rnd: jax.Array, E: jax.Array,
     return (pos == j).astype(jnp.float32)
 
 
-def greedy_schedule(seed: jax.Array, rnd: jax.Array, E: jax.Array) -> jax.Array:
+def greedy_schedule(seed: jax.Array, rnd: jax.Array, E: jax.Array,
+                    phase: jax.Array | None = None) -> jax.Array:
     """Benchmark 1: client participates as soon as energy arrives, i.e. in the
-    first round of each window (``t mod T*E_i == 0``)."""
+    first round of each window (``t mod T*E_i == 0``; windows aligned to
+    ``rnd + phase_i`` under per-client start offsets)."""
     del seed
     rnd = jnp.asarray(rnd, jnp.int32)
+    if phase is not None:
+        rnd = rnd + jnp.asarray(phase, jnp.int32)
     return (rnd % jnp.asarray(E, jnp.int32) == 0).astype(jnp.float32)
 
 
@@ -103,10 +110,23 @@ _POLICIES: dict[Policy, Callable[[jax.Array, jax.Array, jax.Array], jax.Array]] 
 def participation_mask(policy: Policy | str, seed, rnd, E,
                        phase=None) -> jax.Array:
     """Dispatch: (N,) float32 mask for global round ``rnd`` under ``policy``."""
-    if phase is not None and Policy(policy) == Policy.SUSTAINABLE:
-        return sustainable_schedule(jnp.asarray(seed), rnd, jnp.asarray(E),
-                                    jnp.asarray(phase))
-    return _POLICIES[Policy(policy)](jnp.asarray(seed), rnd, jnp.asarray(E))
+    pol = Policy(policy)
+    if pol not in _POLICIES:
+        raise ValueError(
+            f"policy {pol.value!r} is battery-driven and has no stateless "
+            f"(seed, round, E) schedule; run it through repro.energy.fleet."
+            f"simulate_fleet or core.simulate's energy-closed-loop mode")
+    if phase is not None:
+        if pol in (Policy.SUSTAINABLE, Policy.GREEDY):
+            return _POLICIES[pol](jnp.asarray(seed), rnd, jnp.asarray(E),
+                                  jnp.asarray(phase))
+        if pol == Policy.WAIT_ALL:
+            # phased arrivals need not ever coincide across clients, so the
+            # every-E_max-rounds sync point is undefined; refuse rather than
+            # silently compare a phased schedule against an unphased baseline
+            raise ValueError("wait_all cannot honor per-client phase offsets")
+        # ALWAYS: no energy constraint, offsets are irrelevant by definition
+    return _POLICIES[pol](jnp.asarray(seed), rnd, jnp.asarray(E))
 
 
 def aggregation_scale(policy: Policy | str, E: jax.Array) -> jax.Array:
@@ -122,14 +142,21 @@ def aggregation_scale(policy: Policy | str, E: jax.Array) -> jax.Array:
     return jnp.ones_like(E)
 
 
-def energy_feasible(masks: jax.Array, E: jax.Array) -> jax.Array:
-    """Check the physical energy constraint: within every aligned window of
-    ``E_i`` rounds, client ``i`` participates at most once.
+def energy_feasible(masks: jax.Array, E: jax.Array,
+                    phase: jax.Array | None = None) -> jax.Array:
+    """Check the physical energy constraint: within every window of ``E_i``
+    rounds, client ``i`` participates at most once.
 
     Args:
       masks: (R, N) masks for rounds 0..R-1.
       E: (N,) cycles.  R must be a multiple of lcm alignment for exactness; we
-        check every aligned complete window.
+        check every complete window.
+      phase: optional (N,) per-client start offsets (paper footnote 1).
+        Client i's windows are aligned to ``rnd + phase_i``, so a phased
+        sustainable schedule that is feasible in its own windows could be
+        falsely flagged infeasible by the round-0-aligned check; passing the
+        schedule's phases shifts each client's windows accordingly (the
+        leading partial window is skipped).
 
     Returns:
       scalar bool.
@@ -139,10 +166,11 @@ def energy_feasible(masks: jax.Array, E: jax.Array) -> jax.Array:
     E = jnp.asarray(E, jnp.int32)
     for i in range(N):  # host-side check (test/diagnostic utility, not jitted)
         e = int(E[i])
-        full = (R // e) * e
-        if full == 0:
+        start = 0 if phase is None else (-int(phase[i])) % e
+        full = ((R - start) // e) * e
+        if full <= 0:
             continue
-        per_window = masks[:full, i].reshape(-1, e).sum(axis=1)
+        per_window = masks[start:start + full, i].reshape(-1, e).sum(axis=1)
         ok = ok & jnp.all(per_window <= 1)
     return ok
 

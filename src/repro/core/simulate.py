@@ -6,9 +6,17 @@ control flow — which is also what makes CPU reproduction of Figure 1
 tractable (participants are ~1/3 of clients under the paper's energy profile).
 
 Per round r:
-  alpha   = participation_mask(policy, seed, r, E)
+  alpha   = participation_mask(policy, seed, r, E, phase)
   for i with alpha_i = 1:   w_i <- T local optimizer steps from w   (eq. 7)
   w <- w + sum_i alpha_i p_i scale_i (w_i - w)                      (eqs. 9/12/13)
+
+Two scheduling sources:
+
+* **paper-faithful** (default) — stateless `scheduling.participation_mask`
+  from assumed renewal cycles ``E`` (and optional ``cfg.phase`` offsets).
+* **energy-closed-loop** — pass ``energy=repro.energy.fleet.EnergyLoop(...)``:
+  masks come from realized stochastic harvests gated by battery state, and
+  per-round energy telemetry (``energy_*`` keys) lands in the history.
 """
 from __future__ import annotations
 
@@ -52,6 +60,7 @@ def simulate(
     eval_fn: Callable[[PyTree], dict] | None = None,
     eval_every: int = 0,
     verbose: bool = False,
+    energy=None,   # repro.energy.fleet.EnergyLoop -> closed-loop scheduling
 ) -> SimResult:
     """Run ``num_rounds`` global rounds of Algorithm 1 / a benchmark policy."""
     local = jax.jit(partial(local_update, loss_fn, optimizer,
@@ -59,16 +68,26 @@ def simulate(
                             micro_batches=cfg.micro_batches))
     E = np.asarray(E)
     p = np.asarray(p)
+    phase = cfg.phase_array()
     scale = np.asarray(scheduling.aggregation_scale(cfg.policy, E))
+    if energy is not None:
+        energy.reset()
 
     w = w0
     history: list[dict] = []
     t0 = time.time()
     for r in range(num_rounds):
-        mask = np.asarray(scheduling.participation_mask(
-            cfg.policy, cfg.seed, jnp.int32(r), jnp.asarray(E)))
+        if energy is not None:
+            mask, estats = energy.step(cfg.policy, cfg.seed, r, E,
+                                       cfg.local_steps, phase=phase)
+        else:
+            mask, estats = np.asarray(scheduling.participation_mask(
+                cfg.policy, cfg.seed, jnp.int32(r), jnp.asarray(E),
+                phase=phase)), None
         parts = np.nonzero(mask)[0]
         rec = {"round": r, "participants": int(len(parts))}
+        if estats is not None:
+            rec.update({f"energy_{k}": v for k, v in estats.items()})
         if len(parts):
             acc = aggregation.zeros_like_fp32(w)
             losses = []

@@ -1,0 +1,41 @@
+"""Energy-harvesting subsystem: stochastic arrivals, battery dynamics, device
+cost models, and the fleet-scale battery-gated scheduling simulator.
+
+See DESIGN.md §6.  `core.scheduling` keeps the paper-faithful stateless
+schedules; this package makes the energy physical — harvest processes
+(`arrivals`), stored charge with capacity/leakage (`battery`), joules per
+round (`costs`), and a single-jitted-scan fleet simulator plus the
+closed-loop hook for `core.simulate` (`fleet`).
+"""
+from repro.energy.arrivals import (
+    Bernoulli,
+    CompoundPoisson,
+    DeterministicRenewal,
+    MarkovSolar,
+    Scaled,
+    Sum,
+)
+from repro.energy.battery import BatteryConfig, absorb, drain, step
+from repro.energy.costs import (
+    DeviceCostModel,
+    energy_record,
+    from_dryrun,
+    from_flops,
+)
+from repro.energy.fleet import (
+    FLEET_POLICIES,
+    EnergyLoop,
+    FleetConfig,
+    FleetResult,
+    fleet_mask,
+    simulate_fleet,
+)
+
+__all__ = [
+    "Bernoulli", "CompoundPoisson", "DeterministicRenewal", "MarkovSolar",
+    "Scaled", "Sum",
+    "BatteryConfig", "absorb", "drain", "step",
+    "DeviceCostModel", "energy_record", "from_dryrun", "from_flops",
+    "FLEET_POLICIES", "EnergyLoop", "FleetConfig", "FleetResult",
+    "fleet_mask", "simulate_fleet",
+]

@@ -1,0 +1,84 @@
+"""Vectorized battery dynamics for the energy-harvesting fleet.
+
+Battery state is a plain ``(N,) float32`` array of stored joules — the whole
+fleet's charge is one tensor, so every operation here is a handful of fused
+elementwise ops regardless of N (millions of clients are fine).
+
+Per-round order of operations (the fleet contract; DESIGN.md §6.2):
+
+1. **leak** — a fraction ``leak`` of the stored charge is lost;
+2. **absorb** — the round's harvest is added and clipped to ``capacity``;
+   the clipped excess is *overflow* (harvest wasted because the battery was
+   full — a key sustainability telemetry signal);
+3. the scheduling policy observes the post-absorb *available* charge and
+   decides participation;
+4. **drain** — participants' round cost is subtracted (the fleet guarantees
+   ``consume <= available``, so charge never goes negative).
+
+Energy conservation (test invariant, exact in fp32 up to rounding):
+
+    harvest - consumed - leaked - overflow == charge' - charge
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class BatteryConfig:
+    """Fleet battery parameters; each field is a scalar or an (N,) array.
+
+    Registered as a pytree (fields are leaves) so it can cross the jit
+    boundary of the cached fleet scan as an argument.
+    """
+
+    capacity: float | jax.Array = 1.0     # joules
+    leak: float | jax.Array = 0.0         # fraction of stored charge lost/round
+    init_charge: float | jax.Array = 0.0  # joules at round 0
+
+    def init(self, num_clients: int) -> jax.Array:
+        """(N,) float32 initial charge, clipped into [0, capacity]."""
+        c = jnp.broadcast_to(jnp.asarray(self.init_charge, jnp.float32),
+                             (num_clients,))
+        cap = jnp.asarray(self.capacity, jnp.float32)
+        return jnp.clip(c, 0.0, cap)
+
+
+jax.tree_util.register_dataclass(
+    BatteryConfig, ["capacity", "leak", "init_charge"], [])
+
+
+def absorb(cfg: BatteryConfig, charge: jax.Array,
+           harvest: jax.Array) -> tuple[jax.Array, dict[str, jax.Array]]:
+    """Steps 1-2: leak then harvest-and-clip.
+
+    Returns ``(available, aux)`` where ``available`` is the charge the policy
+    may spend this round and ``aux`` holds per-client ``leaked`` and
+    ``overflow`` joules.
+    """
+    charge = jnp.asarray(charge, jnp.float32)
+    harvest = jnp.asarray(harvest, jnp.float32)
+    cap = jnp.asarray(cfg.capacity, jnp.float32)
+    leaked = charge * jnp.asarray(cfg.leak, jnp.float32)
+    pre = charge - leaked + harvest
+    overflow = jnp.maximum(pre - cap, 0.0)
+    available = jnp.minimum(pre, cap)
+    return available, {"leaked": leaked, "overflow": overflow}
+
+
+def drain(available: jax.Array, consume: jax.Array) -> jax.Array:
+    """Step 4.  ``consume`` must not exceed ``available`` (the fleet masks
+    participation by feasibility before draining); no clamp is applied so a
+    violation would surface as a negative charge in the invariant tests
+    rather than being silently absorbed."""
+    return available - jnp.asarray(consume, jnp.float32)
+
+
+def step(cfg: BatteryConfig, charge: jax.Array, harvest: jax.Array,
+         consume: jax.Array) -> tuple[jax.Array, dict[str, jax.Array]]:
+    """One full battery round: absorb then drain.  Returns (charge', aux)."""
+    available, aux = absorb(cfg, charge, harvest)
+    return drain(available, consume), aux

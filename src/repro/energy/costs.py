@@ -1,0 +1,84 @@
+"""Device energy-cost model: what one federated round *debits* the battery.
+
+The paper abstracts participation cost to "one unit of energy per global
+round"; this module makes the unit physical so battery dynamics can be driven
+by the actual workload: joules per local optimizer step (compute) plus joules
+per model upload/download (radio).  Compute cost is derivable from the
+dry-run pipeline's compiled FLOP counts (`launch/dryrun.py` →
+``from_dryrun``), radio cost from the model's parameter bytes.
+
+Nominal constants (order-of-magnitude for an edge-class accelerator and a
+wireless uplink; override per deployment):
+
+* ``JOULES_PER_FLOP`` — 10 pJ/FLOP effective (≈100 GFLOPS/W device).
+* ``JOULES_PER_BYTE_RADIO`` — 100 nJ/byte (~0.8 J per MB uplink).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+JOULES_PER_FLOP = 1e-11
+JOULES_PER_BYTE_RADIO = 1e-7
+
+
+@dataclasses.dataclass(frozen=True)
+class DeviceCostModel:
+    """Joules debited per federated-round component."""
+
+    joules_per_step: float          # one local optimizer step (T per round)
+    joules_per_upload: float        # send the model delta to the server
+    joules_per_download: float = 0.0  # fetch the global model
+
+    def round_cost(self, local_steps: int) -> float:
+        """Total joules for one participated round of ``local_steps`` steps."""
+        return (local_steps * self.joules_per_step + self.joules_per_upload
+                + self.joules_per_download)
+
+
+def from_flops(flops_per_step: float, upload_bytes: float,
+               download_bytes: float = 0.0,
+               joules_per_flop: float = JOULES_PER_FLOP,
+               joules_per_byte: float = JOULES_PER_BYTE_RADIO) -> DeviceCostModel:
+    """Cost model from raw workload counts."""
+    return DeviceCostModel(
+        joules_per_step=flops_per_step * joules_per_flop,
+        joules_per_upload=upload_bytes * joules_per_byte,
+        joules_per_download=download_bytes * joules_per_byte,
+    )
+
+
+def from_dryrun(record: dict, local_steps: int = 5,
+                bytes_per_param: float = 2.0,
+                joules_per_flop: float = JOULES_PER_FLOP,
+                joules_per_byte: float = JOULES_PER_BYTE_RADIO) -> DeviceCostModel:
+    """Cost model from one `launch/dryrun.py` result record.
+
+    ``cost.flops_per_device`` in the record covers the full ``local_steps``
+    local phase (train-kind steps compile the whole eq.-7 scan); the upload is
+    the model delta — ``params_active`` parameters at ``bytes_per_param``
+    (bf16 default).
+    """
+    flops_total = float(record["cost"]["flops_per_device"])
+    params = float(record.get("params_active") or record["params_analytic"])
+    return from_flops(flops_total / max(local_steps, 1),
+                      params * bytes_per_param,
+                      download_bytes=params * bytes_per_param,
+                      joules_per_flop=joules_per_flop,
+                      joules_per_byte=joules_per_byte)
+
+
+def energy_record(flops_per_device: float, num_params: float,
+                  local_steps: int, bytes_per_param: float = 2.0) -> dict:
+    """The dry-run JSON ``energy`` block: nominal joules for this workload
+    (written by `launch/dryrun.run_one` so the roofline table carries a
+    sustainability column)."""
+    m = from_flops(flops_per_device / max(local_steps, 1),
+                   num_params * bytes_per_param,
+                   download_bytes=num_params * bytes_per_param)
+    return {
+        "joules_per_local_step": m.joules_per_step,
+        "joules_per_upload": m.joules_per_upload,
+        "joules_per_round": m.round_cost(local_steps),
+        "assumed_joules_per_flop": JOULES_PER_FLOP,
+        "assumed_joules_per_byte_radio": JOULES_PER_BYTE_RADIO,
+    }

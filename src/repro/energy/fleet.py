@@ -1,0 +1,253 @@
+"""Fleet-scale battery-gated federated scheduling simulator.
+
+One jitted ``lax.scan`` over global rounds carries the whole fleet's state —
+battery charge (N,), arrival-process state, aggregate telemetry — so N in the
+*millions* of clients runs as a single compiled program with no per-client
+Python loops (ROADMAP's "millions of users" at scheduling granularity).
+
+Per round r (see `energy.battery` for the order-of-operations contract):
+
+    harvest, pstate = process.sample(fold_in(key, r), r, pstate)
+    available, aux  = battery.absorb(cfg, charge, harvest)
+    mask            = fleet_mask(policy, ...)          # battery-gated policy
+    charge          = available - mask * round_cost
+
+Battery-gated policies (registered alongside `core.scheduling.Policy`):
+
+* ``SUSTAINABLE`` — Algorithm 1's slot draw (identical RNG derivation to
+  `scheduling.sustainable_schedule`, so masks are *bit-exact* whenever the
+  battery never blocks, e.g. under the deterministic-renewal process), gated
+  by realized stored energy instead of assumed cycles.
+* ``GREEDY`` — participate whenever the battery covers the round cost (the
+  paper's Benchmark 1 generalized to stochastic arrivals).
+* ``THRESHOLD`` — greedy with a safety margin: participate only when
+  ``available >= threshold * round_cost`` (threshold >= 1 hedges against
+  lean rounds ahead; the battery-feasibility gate still applies below 1).
+* ``ALWAYS`` — upper bound, still physically gated by the battery.
+
+Telemetry per round (each an (R,) array in ``FleetResult.stats``): scheduled
+participants, energy harvested / consumed (spent) / leaked / overflowed
+(wasted at full batteries), mean stored charge, and the fraction of clients
+too depleted to afford a round.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import scheduling
+from repro.core.scheduling import Policy
+from repro.energy import battery as battery_lib
+from repro.energy.costs import DeviceCostModel
+
+PyTree = Any
+
+# policies with a battery-gated fleet implementation (fleet_mask)
+FLEET_POLICIES: tuple[Policy, ...] = (
+    Policy.SUSTAINABLE, Policy.GREEDY, Policy.THRESHOLD, Policy.ALWAYS)
+
+
+@dataclasses.dataclass(frozen=True)
+class FleetConfig:
+    """Fleet-simulation hyperparameters."""
+
+    num_clients: int
+    policy: Policy = Policy.SUSTAINABLE
+    local_steps: int = 5                 # T, used to price a round via the cost model
+    seed: int = 0
+    threshold: float = 1.0               # THRESHOLD policy margin (x round cost)
+
+
+@dataclasses.dataclass
+class FleetResult:
+    stats: dict[str, np.ndarray | jax.Array]   # each (R,)
+    final_charge: jax.Array                    # (N,)
+    masks: jax.Array | None = None             # (R, N) when recorded
+
+    @property
+    def participation_rate(self):
+        n = self.final_charge.shape[0]
+        return np.asarray(self.stats["participants"]) / n
+
+
+def fleet_mask(policy: Policy | str, seed, rnd, E, available, round_cost,
+               threshold: float = 1.0, phase=None) -> jax.Array:
+    """(N,) float32 battery-gated participation mask for one round.
+
+    Every policy is AND-ed with physical feasibility
+    ``available >= round_cost`` — a fleet client can never spend charge it
+    does not hold, whatever the policy wants.
+    """
+    pol = Policy(policy)
+    feasible = (available >= round_cost)
+    if pol == Policy.SUSTAINABLE:
+        want = scheduling.sustainable_schedule(
+            jnp.asarray(seed), rnd, jnp.asarray(E, jnp.int32), phase)
+    elif pol in (Policy.GREEDY, Policy.ALWAYS):
+        want = jnp.ones_like(available)
+    elif pol == Policy.THRESHOLD:
+        want = (available >= threshold * round_cost).astype(jnp.float32)
+    else:
+        raise ValueError(
+            f"policy {pol.value!r} has no battery-gated fleet variant "
+            f"(supported: {[p.value for p in FLEET_POLICIES]})")
+    return want * feasible.astype(jnp.float32)
+
+
+def _round_cost_array(cost, cfg: FleetConfig) -> jax.Array:
+    if isinstance(cost, DeviceCostModel):
+        cost = cost.round_cost(cfg.local_steps)
+    return jnp.broadcast_to(jnp.asarray(cost, jnp.float32),
+                            (cfg.num_clients,))
+
+
+@partial(jax.jit, static_argnames=("policy", "num_rounds", "record_masks"))
+def _run_fleet_scan(process, bat, round_cost, E, phase, base_key, charge0,
+                    pstate0, seed, threshold, *, policy, num_rounds,
+                    record_masks):
+    """The whole-fleet scan, jitted ONCE per (process/battery structure,
+    shapes, policy, horizon): processes and `BatteryConfig` are registered
+    pytrees and seed/threshold are traced scalars, so repeated calls —
+    including seed sweeps — hit the jit cache instead of retracing
+    (`jax.jit` on a per-call lambda would recompile every invocation —
+    benchmark-visible)."""
+    step = partial(_fleet_round, process, bat, policy, round_cost, E, phase,
+                   base_key, seed, threshold)
+
+    def body(carry, r):
+        carry, mask, stats = step(carry, r)
+        if record_masks:
+            stats = dict(stats, mask=mask)
+        return carry, stats
+
+    return jax.lax.scan(body, (charge0, pstate0),
+                        jnp.arange(num_rounds, dtype=jnp.int32))
+
+
+def _fleet_round(process, bat: battery_lib.BatteryConfig, policy: Policy,
+                 round_cost, E, phase, base_key, seed, threshold, carry, r):
+    """One round of the fleet scan; shared by the jitted scan body and the
+    host-side `EnergyLoop` so the two paths are the same program.  ``seed``
+    and ``threshold`` are (traceable) scalars — only ``policy`` changes the
+    program structure."""
+    charge, pstate = carry
+    harvest, pstate = process.sample(jax.random.fold_in(base_key, r), r, pstate)
+    available, aux = battery_lib.absorb(bat, charge, harvest)
+    mask = fleet_mask(policy, seed, r, E, available, round_cost,
+                      threshold=threshold, phase=phase)
+    consumed = mask * round_cost
+    charge = battery_lib.drain(available, consumed)
+    stats = {
+        "participants": jnp.sum(mask),
+        "harvested": jnp.sum(harvest),
+        "consumed": jnp.sum(consumed),
+        "leaked": jnp.sum(aux["leaked"]),
+        "overflowed": jnp.sum(aux["overflow"]),
+        "mean_charge": jnp.mean(charge),
+        "frac_depleted": jnp.mean((available < round_cost).astype(jnp.float32)),
+    }
+    return (charge, pstate), mask, stats
+
+
+def simulate_fleet(process, bat: battery_lib.BatteryConfig, cost,
+                   cfg: FleetConfig, num_rounds: int, *,
+                   E=None, phase=None, record_masks: bool = False,
+                   use_jit: bool = True) -> FleetResult:
+    """Simulate ``num_rounds`` global rounds of battery-gated scheduling for
+    the whole fleet.
+
+    Args:
+      process: arrival process (`energy.arrivals` contract) sized to the fleet.
+      bat: `BatteryConfig` (scalar or per-client fields).
+      cost: `DeviceCostModel` (priced at ``cfg.local_steps``) or joules per
+        round, scalar or (N,).
+      cfg: `FleetConfig`.
+      num_rounds: R.
+      E: (N,) assumed renewal cycles (SUSTAINABLE slot draw); defaults to 1s.
+      phase: optional (N,) per-client start offsets (paper footnote 1).
+      record_masks: also return the (R, N) masks — O(R*N) memory, intended
+        for tests/small fleets, not the 1e6-client path.
+      use_jit: jit the whole scan (default).  ``False`` runs the identical
+        round function eagerly from a Python loop — the jit/no-jit parity
+        oracle used in tests.
+
+    Returns:
+      `FleetResult` with per-round aggregate telemetry (host numpy arrays).
+    """
+    n = cfg.num_clients
+    if process.num_clients != n:
+        raise ValueError(f"process is sized for {process.num_clients} clients, "
+                         f"FleetConfig.num_clients={n}")
+    round_cost = _round_cost_array(cost, cfg)
+    E = jnp.ones((n,), jnp.int32) if E is None else jnp.asarray(E, jnp.int32)
+    phase = None if phase is None else jnp.asarray(phase, jnp.int32)
+    base_key = jax.random.PRNGKey(cfg.seed)
+    charge0, pstate0 = bat.init(n), process.init()
+
+    # uint32: the traced seed is folded into PRNG key data downstream
+    seed = jnp.uint32(cfg.seed)
+    threshold = jnp.float32(cfg.threshold)
+    if use_jit:
+        (charge, _), stats = _run_fleet_scan(
+            process, bat, round_cost, E, phase, base_key, charge0, pstate0,
+            seed, threshold, policy=cfg.policy, num_rounds=num_rounds,
+            record_masks=record_masks)
+    else:
+        step = partial(_fleet_round, process, bat, cfg.policy, round_cost, E,
+                       phase, base_key, seed, threshold)
+        carry, outs = (charge0, pstate0), []
+        for r in range(num_rounds):
+            carry, mask, s = step(carry, jnp.int32(r))
+            outs.append(dict(s, mask=mask) if record_masks else s)
+        charge = carry[0]
+        stats = {k: jnp.stack([o[k] for o in outs]) for k in outs[0]}
+    masks = stats.pop("mask", None) if record_masks else None
+    stats = {k: np.asarray(v) for k, v in stats.items()}
+    return FleetResult(stats=stats, final_charge=charge, masks=masks)
+
+
+class EnergyLoop:
+    """Host-side stepping wrapper around the same fleet round function, for
+    `core.simulate`'s energy-closed-loop mode: the training driver asks for
+    one battery-gated mask per round and the loop carries charge/process
+    state between calls.  Semantics are identical to `simulate_fleet` by
+    construction (shared `_fleet_round`)."""
+
+    def __init__(self, process, bat: battery_lib.BatteryConfig, cost,
+                 threshold: float = 1.0):
+        self.process = process
+        self.bat = bat
+        self.cost = cost
+        self.threshold = threshold
+        self._carry = None
+
+    def reset(self) -> None:
+        self._carry = (self.bat.init(self.process.num_clients),
+                       self.process.init())
+
+    def step(self, policy: Policy | str, seed: int, rnd: int, E,
+             local_steps: int, phase=None) -> tuple[np.ndarray, dict]:
+        """Advance one round; returns ((N,) mask, scalar telemetry dict)."""
+        if self._carry is None:
+            self.reset()
+        if np.shape(E)[0] != self.process.num_clients:
+            raise ValueError(
+                f"energy loop's arrival process is sized for "
+                f"{self.process.num_clients} clients but the training run "
+                f"has {np.shape(E)[0]}")
+        cfg = FleetConfig(num_clients=self.process.num_clients,
+                          policy=Policy(policy), local_steps=local_steps,
+                          seed=seed, threshold=self.threshold)
+        round_cost = _round_cost_array(self.cost, cfg)
+        step = partial(_fleet_round, self.process, self.bat, cfg.policy,
+                       round_cost, jnp.asarray(E, jnp.int32),
+                       None if phase is None else jnp.asarray(phase, jnp.int32),
+                       jax.random.PRNGKey(seed), jnp.uint32(seed),
+                       jnp.float32(self.threshold))
+        self._carry, mask, stats = step(self._carry, jnp.int32(rnd))
+        return np.asarray(mask), {k: float(v) for k, v in stats.items()}

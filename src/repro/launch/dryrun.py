@@ -26,6 +26,7 @@ import jax
 import numpy as np
 
 from repro.configs import SKIPS, dryrun_pairs, get_config, get_shape
+from repro.energy import costs as energy_costs
 from repro.launch import mesh as mesh_lib
 from repro.launch.steps import build_step
 
@@ -280,6 +281,11 @@ def run_one(arch: str, shape_name: str, multi_pod: bool,
         },
         "params_analytic": cfg.num_params(),
         "params_active": cfg.num_active_params(),
+        # nominal device joules for this workload (repro.energy cost model);
+        # feeds DeviceCostModel.from_dryrun / battery-gated fleet simulation
+        "energy": energy_costs.energy_record(
+            dev_flops, cfg.num_active_params(),
+            local_steps if shape.kind == "train" else 1),
     }
 
 

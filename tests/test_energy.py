@@ -1,0 +1,254 @@
+"""Invariants of the `repro.energy` subsystem: battery physics (bounds +
+conservation), degenerate-arrival equivalence with the paper's stateless
+schedule, jit/no-jit parity of the fleet engine, fleet scale, cost models,
+and the energy-closed-loop `core.simulate` mode."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (EnergyProfile, FedConfig, Policy, energy_feasible,
+                        participation_mask, simulate, sustainable_schedule)
+from repro.energy import (BatteryConfig, Bernoulli, CompoundPoisson,
+                          DeterministicRenewal, DeviceCostModel, EnergyLoop,
+                          FleetConfig, MarkovSolar, Scaled, Sum, costs,
+                          fleet_mask, simulate_fleet)
+from repro.energy import battery as battery_lib
+from repro.optim import sgd
+
+
+def _profile_E(n, taus=(1, 5, 10, 20)):
+    return np.asarray(EnergyProfile(n, taus).cycles())
+
+
+# ---------------------------------------------------------------- battery ---
+
+@settings(max_examples=20, deadline=None)
+@given(st.floats(0.0, 0.3), st.floats(0.5, 5.0), st.integers(0, 2 ** 16))
+def test_battery_bounds_and_conservation(leak, capacity, seed):
+    """Charge stays in [0, capacity] under any feasible consume sequence, and
+    every step conserves energy: harvest - consumed - leaked - overflow ==
+    delta charge."""
+    n, rounds = 16, 30
+    rs = np.random.RandomState(seed)
+    cfg = BatteryConfig(capacity=capacity, leak=leak,
+                        init_charge=rs.uniform(0, capacity, n))
+    charge = cfg.init(n)
+    cost = jnp.asarray(rs.uniform(0.1, 1.0, n), jnp.float32)
+    for r in range(rounds):
+        harvest = jnp.asarray(rs.exponential(0.7, n), jnp.float32)
+        avail, aux = battery_lib.absorb(cfg, charge, harvest)
+        consume = jnp.where(avail >= cost, cost, 0.0) \
+            * (rs.uniform(size=n) < 0.7)
+        new = battery_lib.drain(avail, consume)
+        lhs = harvest - consume - aux["leaked"] - aux["overflow"]
+        assert np.allclose(np.asarray(lhs), np.asarray(new - charge),
+                           atol=1e-4), r
+        charge = new
+        c = np.asarray(charge)
+        assert np.all(c >= -1e-6) and np.all(c <= capacity + 1e-5), r
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.sampled_from(["bernoulli", "poisson", "solar"]),
+       st.sampled_from([Policy.SUSTAINABLE, Policy.GREEDY, Policy.THRESHOLD]),
+       st.integers(0, 2 ** 16))
+def test_fleet_invariants(process_name, policy, seed):
+    """Fleet-level: charge in bounds, participation within [0, N], telemetry
+    finite, and global energy conservation over the whole horizon."""
+    n, rounds, cap = 24, 40, 2.5
+    proc = {"bernoulli": lambda: Bernoulli.create(n, prob=0.4),
+            "poisson": lambda: CompoundPoisson.create(n, rate=0.5),
+            "solar": lambda: MarkovSolar.create(n, day_mean=0.8)}[process_name]()
+    bat = BatteryConfig(capacity=cap, leak=0.03, init_charge=0.5)
+    cfg = FleetConfig(num_clients=n, policy=policy, seed=seed, threshold=1.3)
+    res = simulate_fleet(proc, bat, 1.0, cfg, rounds, E=_profile_E(n))
+    charge = np.asarray(res.final_charge)
+    assert np.all(charge >= -1e-5) and np.all(charge <= cap + 1e-4)
+    parts = res.stats["participants"]
+    assert np.all(parts >= 0) and np.all(parts <= n)
+    assert all(np.all(np.isfinite(v)) for v in res.stats.values())
+    total_delta = charge.sum() - np.asarray(bat.init(n)).sum()
+    lhs = (res.stats["harvested"].sum() - res.stats["consumed"].sum()
+           - res.stats["leaked"].sum() - res.stats["overflowed"].sum())
+    assert np.allclose(lhs, total_delta, atol=1e-2), (lhs, total_delta)
+
+
+# ----------------------------------------- degenerate-renewal equivalence ---
+
+@pytest.mark.parametrize("use_phase", [False, True])
+def test_renewal_reproduces_sustainable_masks_bit_exactly(use_phase):
+    """DeterministicRenewal arrivals + unit battery + zero leak: the
+    battery-gated SUSTAINABLE fleet policy is *bit-exact* with the stateless
+    `scheduling.sustainable_schedule` (the repo's original E_i semantics as a
+    special case of the new subsystem)."""
+    n, rounds, seed = 12, 60, 5
+    E = _profile_E(n)
+    phase = (np.arange(n, dtype=np.int32) * 3 % 7) if use_phase else None
+    proc = DeterministicRenewal.create(E, unit=1.0, phase=phase)
+    # phased clients mid-window at round 0 received their window's packet
+    # before the horizon started — pre-charge them (see DeterministicRenewal)
+    init = 0.0 if phase is None else (phase % E != 0).astype(np.float32)
+    bat = BatteryConfig(capacity=1.0, leak=0.0, init_charge=init)
+    cfg = FleetConfig(num_clients=n, policy=Policy.SUSTAINABLE, seed=seed)
+    res = simulate_fleet(proc, bat, 1.0, cfg, rounds, E=E, phase=phase,
+                         record_masks=True)
+    expected = np.stack([
+        np.asarray(sustainable_schedule(
+            jnp.asarray(seed), jnp.int32(r), jnp.asarray(E),
+            None if phase is None else jnp.asarray(phase)))
+        for r in range(rounds)])
+    assert np.array_equal(np.asarray(res.masks), expected)
+    # and the realized schedule satisfies the physical window constraint
+    assert bool(energy_feasible(jnp.asarray(res.masks), jnp.asarray(E),
+                                phase=phase))
+
+
+def test_fleet_jit_nojit_parity():
+    """The jitted scan and the eager Python loop are the same program."""
+    n = 10
+    proc = Sum((MarkovSolar.create(n, day_mean=0.6),
+                Scaled.create(Bernoulli.create(n, prob=0.2, amount=0.5),
+                              gain=1.5)))
+    bat = BatteryConfig(capacity=3.0, leak=0.02, init_charge=1.0)
+    cfg = FleetConfig(num_clients=n, policy=Policy.THRESHOLD, threshold=1.4,
+                      seed=2)
+    kw = dict(E=_profile_E(n), record_masks=True)
+    r_jit = simulate_fleet(proc, bat, 0.9, cfg, 25, use_jit=True, **kw)
+    r_eager = simulate_fleet(proc, bat, 0.9, cfg, 25, use_jit=False, **kw)
+    assert np.array_equal(np.asarray(r_jit.masks), np.asarray(r_eager.masks))
+    for k in r_jit.stats:
+        assert np.allclose(r_jit.stats[k], r_eager.stats[k], atol=1e-5), k
+    assert np.allclose(np.asarray(r_jit.final_charge),
+                       np.asarray(r_eager.final_charge), atol=1e-5)
+
+
+def test_fleet_million_clients_single_scan():
+    """Acceptance: >= 1e6 clients x 100 rounds, stochastic (non-renewal)
+    arrivals, one jitted scan on CPU."""
+    n, rounds = 1_000_000, 100
+    proc = Bernoulli.create(n, prob=0.35, amount=1.2)
+    cfg = FleetConfig(num_clients=n, policy=Policy.THRESHOLD, seed=0)
+    res = simulate_fleet(proc, BatteryConfig(capacity=2.0, leak=0.01), 1.0,
+                         cfg, rounds)
+    assert res.final_charge.shape == (n,)
+    assert all(v.shape == (rounds,) for v in res.stats.values())
+    # ~35% of clients harvest >= cost each round; participation tracks that
+    assert 0.2 * n < res.stats["participants"].mean() < 0.5 * n
+    assert np.all(np.isfinite(res.stats["mean_charge"]))
+
+
+# ------------------------------------------------------------ cost models ---
+
+def test_cost_model_round_cost():
+    m = DeviceCostModel(joules_per_step=0.2, joules_per_upload=1.0,
+                        joules_per_download=0.5)
+    assert np.isclose(m.round_cost(5), 5 * 0.2 + 1.0 + 0.5)
+
+
+def test_cost_model_from_dryrun_record():
+    rec = {"cost": {"flops_per_device": 1e12}, "params_active": 1e8,
+           "params_analytic": 2e8}
+    m = costs.from_dryrun(rec, local_steps=5, bytes_per_param=2.0)
+    assert np.isclose(m.joules_per_step, 1e12 / 5 * costs.JOULES_PER_FLOP)
+    assert np.isclose(m.joules_per_upload,
+                      2e8 * costs.JOULES_PER_BYTE_RADIO)
+    er = costs.energy_record(1e12, 1e8, 5)
+    assert er["joules_per_round"] > 0
+    assert np.isclose(er["joules_per_round"],
+                      5 * er["joules_per_local_step"]
+                      + 2 * er["joules_per_upload"])
+
+
+# ------------------------------------------------- policy registry edges ---
+
+def test_threshold_policy_has_no_stateless_schedule():
+    with pytest.raises(ValueError, match="battery-driven"):
+        participation_mask(Policy.THRESHOLD, 0, jnp.int32(0),
+                           jnp.asarray(_profile_E(4)))
+
+
+def test_fleet_mask_never_exceeds_battery():
+    """Whatever the policy wants, the feasibility gate wins."""
+    avail = jnp.asarray([0.0, 0.5, 1.0, 2.0], jnp.float32)
+    for pol in (Policy.SUSTAINABLE, Policy.GREEDY, Policy.THRESHOLD,
+                Policy.ALWAYS):
+        m = fleet_mask(pol, 0, jnp.int32(0), jnp.ones(4, jnp.int32), avail,
+                       jnp.full((4,), 1.0), threshold=0.25)
+        assert np.all(np.asarray(m)[np.asarray(avail) < 1.0] == 0.0), pol
+
+
+# -------------------------------------------- energy-closed-loop simulate ---
+
+def _toy_sim(policy, n=4, rounds=10, energy=None, phase=None, seed=0):
+    b = jnp.linspace(-1.0, 2.0, n)
+
+    def loss(params, batch, rng):
+        r = params["w"] - b[batch["client"]]
+        return 0.5 * jnp.sum(r * r)
+
+    def batch_fn(rnd, i):
+        return {"client": jnp.full((2,), i, jnp.int32)}
+
+    cfg = FedConfig(num_clients=n, local_steps=2, policy=policy, seed=seed,
+                    phase=phase)
+    return simulate(loss, sgd(0.1), cfg, {"w": jnp.zeros(())}, batch_fn,
+                    np.ones(n) / n, _profile_E(n, (1, 2, 4, 4)), rounds,
+                    jax.random.PRNGKey(seed), energy=energy), cfg
+
+
+def test_simulate_energy_closed_loop():
+    """core.simulate with an EnergyLoop: battery-gated masks drive training
+    and energy telemetry lands in the history."""
+    n = 4
+    loop = EnergyLoop(CompoundPoisson.create(n, rate=0.8, mean_amount=1.5),
+                      BatteryConfig(capacity=3.0, leak=0.01), 1.0,
+                      threshold=1.0)
+    res, _ = _toy_sim(Policy.THRESHOLD, n=n, energy=loop)
+    assert len(res.history) == 10
+    assert all("energy_mean_charge" in h and "energy_overflowed" in h
+               for h in res.history)
+    assert all(np.isfinite(h.get("loss", 0.0)) for h in res.history)
+    # participants recorded by the driver match the loop's telemetry
+    for h in res.history:
+        assert h["participants"] == int(h["energy_participants"])
+
+
+def test_simulate_threads_phase_into_masks():
+    """Satellite fix: FedConfig.phase reaches participation_mask — per-round
+    participant counts match the phased stateless schedule, not the unphased
+    one."""
+    n, rounds, seed = 4, 16, 3
+    E = _profile_E(n, (1, 2, 4, 4))
+    phase = (0, 1, 3, 2)
+    res, cfg = _toy_sim(Policy.SUSTAINABLE, n=n, rounds=rounds,
+                        phase=phase, seed=seed)
+    for r, h in enumerate(res.history):
+        m = participation_mask(Policy.SUSTAINABLE, seed, jnp.int32(r),
+                               jnp.asarray(E), phase=jnp.asarray(phase))
+        assert h["participants"] == int(np.asarray(m).sum()), r
+    unphased = [int(np.asarray(participation_mask(
+        Policy.SUSTAINABLE, seed, jnp.int32(r), jnp.asarray(E))).sum())
+        for r in range(rounds)]
+    assert unphased != [h["participants"] for h in res.history]
+
+
+def test_energy_feasible_honors_phase():
+    """Satellite fix: a phased sustainable schedule can violate the
+    round-0-aligned window check while being perfectly feasible in its own
+    (shifted) windows."""
+    E = np.asarray([2], np.int32)
+    phase = np.asarray([1], np.int32)
+    hit = False
+    for seed in range(60):
+        m = np.stack([np.asarray(participation_mask(
+            Policy.SUSTAINABLE, seed, jnp.int32(r), jnp.asarray(E),
+            phase=jnp.asarray(phase))) for r in range(8)])
+        # phased windows always satisfy the constraint
+        assert bool(energy_feasible(jnp.asarray(m), jnp.asarray(E),
+                                    phase=phase)), seed
+        if not bool(energy_feasible(jnp.asarray(m), jnp.asarray(E))):
+            hit = True  # unphased check mis-flags this feasible schedule
+            break
+    assert hit, "no seed exhibited the round-0-aligned false infeasibility"

@@ -64,6 +64,29 @@ def test_greedy_participates_on_arrival():
     assert np.array_equal(m, expected)
 
 
+def test_greedy_honors_phase_offsets():
+    """Footnote 1 for Benchmark 1: arrivals land at each client's own window
+    starts, rounds where (r + phase_i) mod E_i == 0."""
+    E = np.array([2, 4], np.int32)
+    phase = np.array([1, 3], np.int32)
+    m = np.stack([
+        np.asarray(participation_mask(Policy.GREEDY, 0, jnp.int32(r), E,
+                                      phase=phase)) for r in range(8)])
+    expected = np.stack([((np.arange(8) + p) % e == 0).astype(np.float32)
+                         for e, p in zip(E, phase)], axis=1)
+    assert np.array_equal(m, expected)
+
+
+def test_wait_all_rejects_phase_offsets():
+    """Phased arrivals need not ever coincide, so the every-E_max sync point
+    is undefined; the dispatcher must refuse rather than silently ignore."""
+    E = np.array([1, 2], np.int32)
+    import pytest
+    with pytest.raises(ValueError, match="phase"):
+        participation_mask(Policy.WAIT_ALL, 0, jnp.int32(0), E,
+                           phase=np.array([0, 1], np.int32))
+
+
 def test_wait_all_only_at_emax_multiples():
     E = np.array([1, 5, 10, 20], np.int32)
     m = masks_for(Policy.WAIT_ALL, 0, 41, E)
