@@ -1,7 +1,12 @@
 """Fleet-scale scheduling throughput: time `repro.energy.fleet.simulate_fleet`
 (one jitted lax.scan over rounds, whole-fleet battery + arrival state) at
-N in {1e3, 1e5, 1e6} clients and write ``BENCH_fleet.json`` — the repo's
-perf-trajectory artifact (uploaded per PR by CI's ``--smoke`` run).
+N in {1e3, 1e5, 1e6} clients host-local — plus, whenever more than one device
+is visible (CI runs an ``XLA_FLAGS=--xla_force_host_platform_device_count=8``
+job), a ``sharded`` section timing the mesh-sharded client axis at up to 1e7
+clients, and a ``controller`` section sweeping the battery-aware
+`ServerController` against the static schedule under a solar drought.
+Everything lands in ``BENCH_fleet.json`` — the repo's perf-trajectory
+artifact (uploaded per PR by CI's ``--smoke`` runs).
 
 Reported per (N, policy): compile time, steady-state wall time, rounds/sec
 and client-rounds/sec, plus mean participation so regressions in *behaviour*
@@ -17,11 +22,14 @@ import argparse
 import json
 import time
 
+import jax
 import numpy as np
 
 from repro.core import EnergyProfile, Policy
 from repro.energy import (BatteryConfig, Bernoulli, CompoundPoisson,
-                          FleetConfig, MarkovSolar, simulate_fleet)
+                          ControlBounds, DeviceCostModel, FleetConfig,
+                          MarkovSolar, ServerController, run_controlled,
+                          simulate_fleet)
 
 PROCESSES = {
     "bernoulli": lambda n: Bernoulli.create(n, prob=0.35, amount=1.2),
@@ -32,14 +40,14 @@ PROCESSES = {
 
 
 def bench_one(n: int, rounds: int, policy: Policy, process: str,
-              seed: int = 0) -> dict:
+              seed: int = 0, mesh=None) -> dict:
     proc = PROCESSES[process](n)
     bat = BatteryConfig(capacity=2.0, leak=0.01)
     E = np.asarray(EnergyProfile(n).cycles())  # the paper's §V profile
     cfg = FleetConfig(num_clients=n, policy=policy, seed=seed)
 
     def run():
-        return simulate_fleet(proc, bat, 1.0, cfg, rounds, E=E)
+        return simulate_fleet(proc, bat, 1.0, cfg, rounds, E=E, mesh=mesh)
 
     t0 = time.perf_counter()
     res = run()                      # compile + first run
@@ -47,7 +55,7 @@ def bench_one(n: int, rounds: int, policy: Policy, process: str,
     res = run()                      # steady state (jit cache hit)
     t2 = time.perf_counter()
     wall = t2 - t1
-    return {
+    rec = {
         "num_clients": n,
         "rounds": rounds,
         "policy": policy.value,
@@ -58,6 +66,44 @@ def bench_one(n: int, rounds: int, policy: Policy, process: str,
         "client_rounds_per_s": round(n * rounds / wall, 1),
         "mean_participation_rate": float(res.participation_rate.mean()),
         "total_overflowed_j": float(res.stats["overflowed"].sum()),
+    }
+    if mesh is not None:
+        rec["mesh_devices"] = int(np.prod(list(mesh.shape.values())))
+    return rec
+
+
+def bench_controller(n: int, rounds: int, control_every: int = 10) -> dict:
+    """Static §V schedule vs `ServerController` under a MarkovSolar drought
+    (short days, 20-round nights): the controller should cut depletion AND
+    lift participation by cheapening rounds / matching the ask rate."""
+    proc = MarkovSolar.create(n, p_stay_day=0.6, p_stay_night=0.95,
+                              day_mean=0.9)
+    bat = BatteryConfig(capacity=6.0, leak=0.01, init_charge=1.0)
+    cost = DeviceCostModel(joules_per_step=0.3, joules_per_upload=0.25,
+                           joules_per_download=0.25)
+    E0 = np.asarray(EnergyProfile(n).cycles())
+    cfg = FleetConfig(num_clients=n, policy=Policy.SUSTAINABLE, seed=0,
+                      local_steps=5)
+    static = simulate_fleet(proc, bat, cost, cfg, rounds, E=E0)
+    ctrl = ServerController(
+        T0=cfg.local_steps, E0=EnergyProfile(n).taus,
+        groups=np.arange(n) % len(EnergyProfile(n).taus),
+        bounds=ControlBounds(t_min=1, t_max=10, e_min=1, e_max=64))
+    t0 = time.perf_counter()
+    res, ctrl = run_controlled(proc, bat, cost, cfg, rounds, ctrl,
+                               control_every=control_every)
+    wall = time.perf_counter() - t0
+    return {
+        "num_clients": n,
+        "rounds": rounds,
+        "control_every": control_every,
+        "run_s": round(wall, 4),
+        "static_participation": float(static.participation_rate.mean()),
+        "controlled_participation": float(res.participation_rate.mean()),
+        "static_frac_depleted": float(static.stats["frac_depleted"].mean()),
+        "controlled_frac_depleted": float(res.stats["frac_depleted"].mean()),
+        "T_trace": [t["T"] for t in ctrl.trace],
+        "E_mean_trace": [t["E_mean"] for t in ctrl.trace],
     }
 
 
@@ -72,11 +118,15 @@ def main():
     if args.smoke:
         sizes = [1_000, 100_000]
         combos = [(Policy.THRESHOLD, "bernoulli"), (Policy.SUSTAINABLE, "solar")]
+        sharded_sizes = [200_000]
+        ctrl_n = 20_000
     else:
         sizes = [1_000, 100_000, 1_000_000]
         combos = [(Policy.THRESHOLD, "bernoulli"),
                   (Policy.GREEDY, "poisson"),
                   (Policy.SUSTAINABLE, "solar")]
+        sharded_sizes = [1_000_000, 10_000_000]
+        ctrl_n = 200_000
 
     results = []
     for n in sizes:
@@ -88,8 +138,35 @@ def main():
                   f"client-rounds/s={rec['client_rounds_per_s']:.2e}  "
                   f"part={rec['mean_participation_rate']:.3f}", flush=True)
 
+    # mesh-sharded client axis: only meaningful with >1 device (CI's
+    # 8-device host-emulation job; real multi-host meshes in production)
+    sharded = []
+    n_dev = jax.device_count()
+    if n_dev > 1:
+        mesh = jax.make_mesh((n_dev,), ("data",))
+        for n in sharded_sizes:
+            for policy, process in combos[:2]:
+                rec = bench_one(n, args.rounds, policy, process, mesh=mesh)
+                sharded.append(rec)
+                print(f"N={n:>9,} {policy.value:>11}/{process:<9} sharded/"
+                      f"{n_dev}dev run={rec['run_s']:.3f}s  "
+                      f"client-rounds/s={rec['client_rounds_per_s']:.2e}  "
+                      f"part={rec['mean_participation_rate']:.3f}", flush=True)
+    else:
+        print("single device: skipping sharded section "
+              "(set XLA_FLAGS=--xla_force_host_platform_device_count=8)")
+
+    ctrl_rec = bench_controller(ctrl_n, args.rounds)
+    print(f"controller N={ctrl_n:,}: participation "
+          f"{ctrl_rec['static_participation']:.4f} -> "
+          f"{ctrl_rec['controlled_participation']:.4f}, depleted "
+          f"{ctrl_rec['static_frac_depleted']:.3f} -> "
+          f"{ctrl_rec['controlled_frac_depleted']:.3f}, "
+          f"T {ctrl_rec['T_trace'][:4]}...", flush=True)
+
     out = {"bench": "fleet_scale", "smoke": args.smoke, "rounds": args.rounds,
-           "results": results}
+           "devices": n_dev, "results": results, "sharded": sharded,
+           "controller": ctrl_rec}
     with open(args.out, "w") as f:
         json.dump(out, f, indent=1)
     print(f"wrote {args.out}")

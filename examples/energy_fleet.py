@@ -12,6 +12,11 @@ no per-client Python loops.
 Also shows the closed-loop training hook: `core.simulate(..., energy=
 EnergyLoop(...))` drives an actual (tiny) training run from realized
 harvests instead of assumed cycles.
+
+Follow-ons: ``examples/battery_control.py`` closes the *server* loop too
+(`ServerController` adapting T/E from this telemetry), and any
+`simulate_fleet` call here takes ``mesh=`` to shard the client axis
+(`repro.dist.sharding.fleet_spec`) over multi-device meshes.
 """
 import jax
 import jax.numpy as jnp

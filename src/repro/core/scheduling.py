@@ -112,10 +112,14 @@ def participation_mask(policy: Policy | str, seed, rnd, E,
     """Dispatch: (N,) float32 mask for global round ``rnd`` under ``policy``."""
     pol = Policy(policy)
     if pol not in _POLICIES:
+        # fleet-only policies (THRESHOLD today, anything added to
+        # energy.fleet.FLEET_POLICIES without a _POLICIES entry tomorrow)
+        # need battery state this stateless dispatch does not have
         raise ValueError(
             f"policy {pol.value!r} is battery-driven and has no stateless "
-            f"(seed, round, E) schedule; run it through repro.energy.fleet."
-            f"simulate_fleet or core.simulate's energy-closed-loop mode")
+            f"(seed, round, E) schedule; battery-gated masks come from "
+            f"repro.energy.fleet.fleet_mask (via simulate_fleet or "
+            f"core.simulate's energy-closed-loop mode)")
     if phase is not None:
         if pol in (Policy.SUSTAINABLE, Policy.GREEDY):
             return _POLICIES[pol](jnp.asarray(seed), rnd, jnp.asarray(E),

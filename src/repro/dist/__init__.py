@@ -7,8 +7,9 @@ holds the axis-name reduction primitives for cross-client aggregation.
 """
 from repro.dist import collectives, sharding
 from repro.dist.sharding import (batch_spec, cache_specs, data_axes,
-                                 mesh_axis_size, param_shardings, param_specs,
-                                 shardings_of, stacked_constrainer)
+                                 fleet_spec, fleet_specs, mesh_axis_size,
+                                 param_shardings, param_specs, shardings_of,
+                                 stacked_constrainer)
 
 __all__ = [
     "collectives",
@@ -16,6 +17,8 @@ __all__ = [
     "batch_spec",
     "cache_specs",
     "data_axes",
+    "fleet_spec",
+    "fleet_specs",
     "mesh_axis_size",
     "param_shardings",
     "param_specs",

@@ -76,3 +76,34 @@ def masked_mean(value: jax.Array, alpha_i: jax.Array,
     num = jax.lax.psum(a * jnp.asarray(value, jnp.float32), axis_name)
     den = jax.lax.psum(a, axis_name)
     return num / jnp.maximum(den, 1.0)
+
+
+# ---------------------------------------------------- telemetry reductions --
+# Fleet-telemetry duals of the reductions above: the client axis is a sharded
+# TENSOR dim (the (N,) fleet layout, `dist.sharding.fleet_spec`), not a
+# mapped axis, so the cross-device sum is a plain ``jnp.sum`` that GSPMD
+# lowers to local-sum + all-reduce.  ``weight`` doubles as the validity mask
+# for the padded client lanes (0. on padding, 1. on real clients — or any
+# per-client weighting); passing ``axis_name`` switches to the psum form for
+# shard_map-style bodies where the client axis IS mapped.
+
+def masked_total(value: jax.Array, weight: jax.Array,
+                 axis_name: str | None = None) -> jax.Array:
+    """fp32 ``sum_i weight_i * value_i`` over the (sharded or mapped) fleet."""
+    s = jnp.sum(jnp.asarray(weight, jnp.float32)
+                * jnp.asarray(value, jnp.float32))
+    return jax.lax.psum(s, axis_name) if axis_name is not None else s
+
+
+def masked_average(value: jax.Array, weight: jax.Array,
+                   axis_name: str | None = None) -> jax.Array:
+    """Weight-normalized fleet mean: ``masked_total / sum(weight)``.
+
+    With an all-ones weight this is bit-identical to ``jnp.mean`` (the
+    denominator reduction of exact 1s is exact), so the unsharded fleet path
+    pays nothing for routing its telemetry through here.
+    """
+    num = masked_total(value, weight, axis_name)
+    den = masked_total(jnp.ones_like(jnp.asarray(value, jnp.float32)), weight,
+                       axis_name)
+    return num / jnp.maximum(den, 1.0)

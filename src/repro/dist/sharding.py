@@ -258,6 +258,38 @@ def cache_specs(cache: PyTree, mesh) -> PyTree:
     return jax.tree.map(spec, cache)
 
 
+# ------------------------------------------------------------ fleet state --
+def fleet_spec(mesh, ndim: int = 1) -> P:
+    """Spec for one fleet-state leaf: client dim 0 over ALL data axes.
+
+    The fleet simulator's state is flat ``(N, ...)`` pytrees (battery charge,
+    arrival-process state, per-client parameters).  There is exactly one rule:
+    dim 0 — the client axis — is sharded over the mesh's full data-axis tuple
+    (`data_axes`, so ``(pod, data)`` composes on multi-pod meshes) and every
+    trailing dim is replicated.  Divisibility is guaranteed by the caller
+    padding N up to a multiple of the data-axis product
+    (`energy.fleet.simulate_fleet`'s padding rule, DESIGN.md §7), never by
+    falling back to replication — a fleet that silently replicated 1e8
+    clients per host would defeat the point.
+    """
+    daxes = data_axes(mesh)
+    lead = daxes if len(daxes) > 1 else daxes[0]
+    return P(lead, *([None] * (ndim - 1)))
+
+
+def fleet_specs(tree: PyTree, num_clients: int, mesh) -> PyTree:
+    """Spec tree for a fleet pytree: leaves with a leading client dim of size
+    ``num_clients`` get `fleet_spec`; everything else (scalar battery fields,
+    shared constants) is replicated."""
+    def leaf(x):
+        shape = tuple(getattr(x, "shape", ()))
+        if shape and shape[0] == num_clients:
+            return fleet_spec(mesh, len(shape))
+        return P()
+
+    return jax.tree.map(leaf, tree)
+
+
 # ------------------------------------------------- stacked (parallel) mode --
 def stacked_constrainer(mesh, model_axis=MODEL_AXIS, zero_axis=None):
     """Constraint fn for client-stacked state in the parallel federated round.

@@ -14,8 +14,20 @@ from repro.energy.arrivals import (
     MarkovSolar,
     Scaled,
     Sum,
+    client_exponential,
+    client_keys,
+    client_uniform,
 )
 from repro.energy.battery import BatteryConfig, absorb, drain, step
+from repro.energy.control import (
+    BudgetRule,
+    CadenceRule,
+    ControlBounds,
+    ControlState,
+    ServerController,
+    Telemetry,
+    run_controlled,
+)
 from repro.energy.costs import (
     DeviceCostModel,
     energy_record,
@@ -33,8 +45,10 @@ from repro.energy.fleet import (
 
 __all__ = [
     "Bernoulli", "CompoundPoisson", "DeterministicRenewal", "MarkovSolar",
-    "Scaled", "Sum",
+    "Scaled", "Sum", "client_exponential", "client_keys", "client_uniform",
     "BatteryConfig", "absorb", "drain", "step",
+    "BudgetRule", "CadenceRule", "ControlBounds", "ControlState",
+    "ServerController", "Telemetry", "run_controlled",
     "DeviceCostModel", "energy_record", "from_dryrun", "from_flops",
     "FLEET_POLICIES", "EnergyLoop", "FleetConfig", "FleetResult",
     "fleet_mask", "simulate_fleet",

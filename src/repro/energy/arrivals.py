@@ -12,6 +12,16 @@ round loops (`core.simulate`'s energy-closed-loop mode).  Per-client
 parameters are stored as (N,) arrays — heterogeneous fleets are the default,
 scalars are broadcast by the ``create`` constructors.
 
+Randomness is derived **per client** (`client_uniform`/`client_exponential`:
+``fold_in(key, i)`` then a scalar draw, exactly the derivation
+`core.scheduling.sustainable_schedule` uses), never from the draw's *shape*:
+client ``i``'s harvest depends only on ``(key, i)``.  That makes every
+process *padding-invariant* — the mesh-sharded fleet path pads N up to the
+client-axis size and still reproduces the host-local harvests bit-exactly on
+the real clients — and keeps each client's stream independent of fleet size.
+(A plain ``uniform(key, (n,))`` draw has neither property: threefry counters
+are split by the total shape, so growing N reshuffles every client.)
+
 Processes
 ---------
 * ``Bernoulli`` — iid arrival of a fixed packet with probability ``prob``.
@@ -40,6 +50,28 @@ def _per_client(x, n: int) -> jax.Array:
     """Broadcast a scalar (or validate an (N,) array) to (N,) float32."""
     arr = jnp.asarray(x, jnp.float32)
     return jnp.broadcast_to(arr, (n,))
+
+
+def client_keys(key, n: int) -> jax.Array:
+    """(n,) per-client PRNG keys: ``key_i = fold_in(key, i)``.
+
+    Elementwise in the client index, so the keys shard cleanly over a
+    client-partitioned mesh axis and are invariant to padding N.
+    """
+    return jax.vmap(jax.random.fold_in, (None, 0))(
+        key, jnp.arange(n, dtype=jnp.uint32))
+
+
+def client_uniform(key, n: int) -> jax.Array:
+    """(n,) uniforms where value ``i`` depends only on ``(key, i)``."""
+    return jax.vmap(lambda k: jax.random.uniform(k, ()))(client_keys(key, n))
+
+
+def client_exponential(key, n: int, extra_shape: tuple = ()) -> jax.Array:
+    """(n, *extra_shape) Exp(1) marks, per-client-derived like
+    `client_uniform` (row ``i`` depends only on ``(key, i, extra_shape)``)."""
+    return jax.vmap(lambda k: jax.random.exponential(k, extra_shape))(
+        client_keys(key, n))
 
 
 def _pytree(data_fields: tuple[str, ...], meta_fields: tuple[str, ...] = ()):
@@ -76,7 +108,7 @@ class Bernoulli:
 
     def sample(self, key, t, state):
         del t
-        u = jax.random.uniform(key, self.prob.shape)
+        u = client_uniform(key, self.num_clients)
         return jnp.where(u < self.prob, self.amount, 0.0), state
 
 
@@ -117,7 +149,7 @@ class CompoundPoisson:
         k1, k2 = jax.random.split(key)
         # K via inverse-CDF on the truncated support {0..max_arrivals}:
         # pmf_0 = e^-rate, pmf_{j+1} = pmf_j * rate/(j+1); K = #{j: u > cdf_j}
-        u = jax.random.uniform(k1, self.rate.shape)
+        u = client_uniform(k1, self.num_clients)
         pmf = jnp.exp(-self.rate)
         cdf = pmf
         k = jnp.zeros(self.rate.shape, jnp.int32)
@@ -126,9 +158,9 @@ class CompoundPoisson:
             pmf = pmf * self.rate / (j + 1)
             cdf = cdf + pmf
         # sum of the first K exponential marks
-        marks = jax.random.exponential(k2, (self.max_arrivals,) + self.rate.shape)
-        active = (jnp.arange(self.max_arrivals)[:, None] < k[None, :])
-        harvest = self.mean_amount * jnp.sum(marks * active, axis=0)
+        marks = client_exponential(k2, self.num_clients, (self.max_arrivals,))
+        active = (jnp.arange(self.max_arrivals)[None, :] < k[:, None])
+        harvest = self.mean_amount * jnp.sum(marks * active, axis=1)
         return harvest, state
 
 
@@ -168,11 +200,11 @@ class MarkovSolar:
     def sample(self, key, t, state):
         del t
         k1, k2 = jax.random.split(key)
-        u = jax.random.uniform(k1, state.shape)
+        u = client_uniform(k1, self.num_clients)
         is_day = state == 1
         day_next = jnp.where(is_day, u < self.p_stay_day, u >= self.p_stay_night)
         mean = jnp.where(day_next, self.day_mean, self.night_mean)
-        harvest = mean * jax.random.exponential(k2, state.shape)
+        harvest = mean * client_exponential(k2, self.num_clients)
         return harvest, day_next.astype(jnp.int32)
 
 

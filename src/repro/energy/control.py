@@ -1,0 +1,274 @@
+"""Battery-aware server control: adapt round cadence and energy budgets from
+fleet telemetry.
+
+The paper's convergence guarantee assumes the server observes *nothing* about
+device energy — the sustainable schedule is derived from assumed renewal
+cycles alone.  Its experiments, and the related energy-footprint literature
+(Savazzi et al. 2022), show the opposite regime matters in practice: fleet
+energy telemetry is cheap (a handful of scalars per round, already produced
+by `energy.fleet`), and feeding it back into the *server's* knobs — the
+round cadence ``T`` (local steps per round, which prices a round) and the
+per-group renewal cycles ``E`` (how often each group is asked to
+participate) — closes the loop without touching any client-side decision.
+
+Control law: a small set of composable rules, each a pure function
+``(ControlState, Telemetry, ControlBounds) -> ControlState``:
+
+* **Hysteresis** — every rule has a *dead band* (``low < signal < high`` →
+  hold).  Under constant telemetry the state can only move monotonically
+  toward a bound or hold, so the controller converges and never oscillates
+  (property-tested).
+* **AIMD** on the *load* the server places on the fleet: when the depleted
+  fraction crosses ``high``, back off multiplicatively (halve ``T``, double
+  ``E``); when the fleet is energy-rich (depleted below ``low`` AND harvest
+  is being wasted as overflow), recover additively (``T + 1``, ``E − 1``).
+  Backing off fast and recovering slowly is the classic stable operating
+  point for feedback with delayed, noisy signals.
+
+Two consumers:
+
+* `run_controlled` — chunked `energy.fleet.simulate_fleet` horizons (the
+  scan stays single-jitted; the controller acts between chunks of
+  ``control_every`` rounds, which is also the realistic telemetry cadence —
+  a server does not re-plan mid-round).  Works with the mesh-sharded path.
+* `core.simulate(..., energy=EnergyLoop(..., controller=...))` — closed-loop
+  *training*: the driver reads ``controller.T``/``client_E()`` each round and
+  feeds the realized telemetry back.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Sequence
+
+import numpy as np
+
+from repro.energy import fleet as fleet_lib
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class ControlBounds:
+    """Hard box constraints on the controllable knobs; every rule clips into
+    these, so no rule composition can drive the system outside them."""
+
+    t_min: int = 1
+    t_max: int = 20
+    e_min: int = 1
+    e_max: int = 64
+
+
+@dataclasses.dataclass(frozen=True)
+class ControlState:
+    """The server's controllable knobs."""
+
+    T: int                # local steps per round (prices a round)
+    E: np.ndarray         # (G,) int per-group renewal cycles
+
+
+@dataclasses.dataclass(frozen=True)
+class Telemetry:
+    """One control period's fleet signals, reduced from `FleetResult.stats`
+    (or an `EnergyLoop.step` scalar dict) to the four the rules read."""
+
+    participation_rate: float   # mean participants / N
+    frac_depleted: float        # mean fraction unable to afford a round
+    overflow_frac: float        # overflowed / harvested (wasted harvest)
+    mean_charge: float
+
+    @classmethod
+    def from_stats(cls, stats: dict, num_clients: int) -> "Telemetry":
+        def arr(k):
+            return np.asarray(stats[k], np.float64)
+
+        harvested = float(arr("harvested").sum())
+        overflowed = float(arr("overflowed").sum())
+        return cls(
+            participation_rate=float(arr("participants").mean()) / num_clients,
+            frac_depleted=float(arr("frac_depleted").mean()),
+            overflow_frac=overflowed / max(harvested, 1e-12),
+            mean_charge=float(arr("mean_charge").mean()),
+        )
+
+
+Rule = Callable[[ControlState, Telemetry, ControlBounds], ControlState]
+
+
+@dataclasses.dataclass(frozen=True)
+class CadenceRule:
+    """AIMD + hysteresis on the round cadence ``T``.
+
+    Depleted fraction above ``depleted_high`` → rounds are too expensive:
+    multiplicative backoff (``T * backoff``, floored at ``t_min``).
+    Depleted below ``depleted_low`` *and* overflow above ``overflow_high``
+    (batteries full, harvest wasted) → the fleet can afford more local work:
+    additive increase (``T + grow``).  Anywhere in between: hold.
+    """
+
+    depleted_high: float = 0.3
+    depleted_low: float = 0.1
+    overflow_high: float = 0.2
+    backoff: float = 0.5
+    grow: int = 1
+
+    def __call__(self, state: ControlState, tel: Telemetry,
+                 bounds: ControlBounds) -> ControlState:
+        if tel.frac_depleted > self.depleted_high:
+            t = max(bounds.t_min, int(np.floor(state.T * self.backoff)))
+        elif (tel.frac_depleted < self.depleted_low
+              and tel.overflow_frac > self.overflow_high):
+            t = min(bounds.t_max, state.T + self.grow)
+        else:
+            t = state.T
+        return dataclasses.replace(state, T=t)
+
+
+@dataclasses.dataclass(frozen=True)
+class BudgetRule:
+    """AIMD + hysteresis on the per-group energy budget ``E``.
+
+    ``E_k`` is group k's renewal cycle — the *inverse* of the participation
+    load the server requests — so AIMD on load means: when the fleet is
+    depleted above ``depleted_high`` AND clients are missing their scheduled
+    slots (realized participation below ``slip`` × the asked rate
+    ``mean(1/E)`` — asking a dead battery more often cannot help),
+    multiplicative backoff of load (``E * grow``, capped at ``e_max``);
+    energy-rich (depleted low AND overflow high) → additive recovery
+    (``E − shrink``, floored at ``e_min``).  The slot-slip condition makes
+    the backoff self-terminating: growing E lowers the asked rate until it
+    meets what the batteries can actually sustain, then the rule holds —
+    monotone under constant telemetry, hence convergent.  The whole vector
+    moves together, preserving the relative group structure (the paper's §V
+    profile).
+    """
+
+    depleted_high: float = 0.3
+    depleted_low: float = 0.1
+    overflow_high: float = 0.2
+    slip: float = 0.3     # escalate only when >70% of asked slots are missed
+    grow: float = 2.0
+    shrink: int = 1
+
+    def __call__(self, state: ControlState, tel: Telemetry,
+                 bounds: ControlBounds) -> ControlState:
+        e = state.E
+        asked = float(np.mean(1.0 / np.maximum(e, 1)))
+        if (tel.frac_depleted > self.depleted_high
+                and tel.participation_rate < self.slip * asked):
+            e = np.minimum(bounds.e_max,
+                           np.ceil(e * self.grow).astype(e.dtype))
+        elif (tel.frac_depleted < self.depleted_low
+              and tel.overflow_frac > self.overflow_high):
+            e = np.maximum(bounds.e_min, e - self.shrink)
+        return dataclasses.replace(state, E=e)
+
+
+class ServerController:
+    """Stateful wrapper: applies the rule chain to each telemetry report and
+    exposes the current knobs.
+
+    Args:
+      T0: initial local steps per round.
+      E0: initial per-group renewal cycles, scalar or (G,).
+      bounds: `ControlBounds` box (rules clip into it).
+      rules: rule chain, applied in order (default: `CadenceRule` then
+        `BudgetRule`).
+      groups: optional (N,) client → group assignment for `client_E` (e.g.
+        ``arange(N) % G``, the paper's §V grouping).  ``None`` means E is
+        already per-client (G == N) or scalar-broadcast.
+    """
+
+    def __init__(self, T0: int = 5, E0=1, *,
+                 bounds: ControlBounds = ControlBounds(),
+                 rules: Sequence[Rule] | None = None, groups=None):
+        e0 = np.atleast_1d(np.asarray(E0, np.int64))
+        self.bounds = bounds
+        self.rules: tuple[Rule, ...] = (
+            (CadenceRule(), BudgetRule()) if rules is None else tuple(rules))
+        self.state = ControlState(
+            T=int(np.clip(T0, bounds.t_min, bounds.t_max)),
+            E=np.clip(e0, bounds.e_min, bounds.e_max))
+        self.groups = None if groups is None else np.asarray(groups, np.int64)
+        self.trace: list[dict] = []
+
+    @property
+    def T(self) -> int:
+        return self.state.T
+
+    @property
+    def E(self) -> np.ndarray:
+        return self.state.E
+
+    def client_E(self, num_clients: int | None = None) -> np.ndarray:
+        """(N,) per-client cycles: the group vector expanded by ``groups``,
+        or a scalar/size-1 E broadcast to ``num_clients`` — each client must
+        get its OWN entry (a shared (1,) E would collapse the sustainable
+        slot draw into one fleet-wide coin flip)."""
+        e = self.E if self.groups is None else self.E[self.groups]
+        if num_clients is not None:
+            if e.size == 1:
+                e = np.full((num_clients,), int(e[0]), e.dtype)
+            elif e.size != num_clients:
+                raise ValueError(
+                    f"controller E covers {e.size} clients (E0 size "
+                    f"{self.E.size}, groups "
+                    f"{'set' if self.groups is not None else 'unset'}) but "
+                    f"the fleet has {num_clients}")
+        return e
+
+    def update(self, stats: dict, num_clients: int) -> ControlState:
+        """Fold one control period's telemetry into the knobs."""
+        tel = Telemetry.from_stats(stats, num_clients)
+        state = self.state
+        for rule in self.rules:
+            state = rule(state, tel, self.bounds)
+        state = ControlState(
+            T=int(np.clip(state.T, self.bounds.t_min, self.bounds.t_max)),
+            E=np.clip(state.E, self.bounds.e_min, self.bounds.e_max))
+        self.state = state
+        self.trace.append({"T": state.T, "E_mean": float(state.E.mean()),
+                           "telemetry": tel})
+        return state
+
+
+def run_controlled(process, bat, cost, cfg, num_rounds: int,
+                   controller: ServerController, *, control_every: int = 10,
+                   mesh=None, phase=None,
+                   record_masks: bool = False):
+    """Closed-loop fleet horizon: `simulate_fleet` in chunks of
+    ``control_every`` rounds, with the controller adapting ``T`` (round
+    pricing via ``cfg.local_steps``) and per-group ``E`` between chunks.
+
+    The battery charge and arrival-process state flow across chunks through
+    ``FleetResult.final_state`` and the absolute round index through
+    ``round_offset``, so a run with a do-nothing controller is bit-identical
+    to one unchunked `simulate_fleet` call.  ``T``/``E``/``round_offset``
+    are traced scan inputs — the chunk program compiles once and every
+    subsequent chunk (sharded or host-local) hits the jit cache.
+
+    Returns ``(FleetResult over the full horizon, controller)``.
+    """
+    state = None
+    chunks: list[fleet_lib.FleetResult] = []
+    offset = 0
+    while offset < num_rounds:
+        chunk = min(control_every, num_rounds - offset)
+        ccfg = dataclasses.replace(cfg, local_steps=controller.T)
+        res = fleet_lib.simulate_fleet(
+            process, bat, cost, ccfg, chunk,
+            E=controller.client_E(cfg.num_clients),
+            phase=phase, record_masks=record_masks, mesh=mesh, state=state,
+            round_offset=offset)
+        state = res.final_state
+        chunks.append(res)
+        controller.update(res.stats, cfg.num_clients)
+        offset += chunk
+    stats = {k: np.concatenate([c.stats[k] for c in chunks])
+             for k in chunks[0].stats}
+    masks = (np.concatenate([np.asarray(c.masks) for c in chunks])
+             if record_masks else None)
+    out = fleet_lib.FleetResult(stats=stats,
+                                final_charge=chunks[-1].final_charge,
+                                masks=masks,
+                                final_pstate=chunks[-1].final_pstate)
+    return out, controller

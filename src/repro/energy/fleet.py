@@ -29,6 +29,18 @@ Telemetry per round (each an (R,) array in ``FleetResult.stats``): scheduled
 participants, energy harvested / consumed (spent) / leaked / overflowed
 (wasted at full batteries), mean stored charge, and the fraction of clients
 too depleted to afford a round.
+
+Mesh sharding (DESIGN.md §7): ``simulate_fleet(..., mesh=)`` shards the
+client axis of every ``(N,)`` state tensor over the mesh's data axes
+(`repro.dist.sharding.fleet_spec`), padding N up to a multiple of the
+data-axis product by edge-replicating the last client (padding lanes are
+excluded from telemetry by a ``valid`` weight mask; masks/charge are sliced
+back to N on return).  The scan body is unchanged — GSPMD partitions the
+elementwise battery/policy math along the client axis and lowers the
+`repro.dist.collectives` telemetry reductions to local-sum + all-reduce — so
+one compiled program sweeps 1e7–1e8 clients across hosts, and the sharded
+path is bit-exact with the host-local one (per-client RNG derivation,
+`energy.arrivals.client_uniform`).
 """
 from __future__ import annotations
 
@@ -42,6 +54,8 @@ import numpy as np
 
 from repro.core import scheduling
 from repro.core.scheduling import Policy
+from repro.dist import collectives
+from repro.dist import sharding as dist_sharding
 from repro.energy import battery as battery_lib
 from repro.energy.costs import DeviceCostModel
 
@@ -68,11 +82,19 @@ class FleetResult:
     stats: dict[str, np.ndarray | jax.Array]   # each (R,)
     final_charge: jax.Array                    # (N,)
     masks: jax.Array | None = None             # (R, N) when recorded
+    final_pstate: Any = None                   # arrival-process state after R
 
     @property
     def participation_rate(self):
         n = self.final_charge.shape[0]
         return np.asarray(self.stats["participants"]) / n
+
+    @property
+    def final_state(self):
+        """(charge, process state) — feed back via ``simulate_fleet(state=)``
+        to continue the horizon (the chunked `energy.control.run_controlled`
+        loop)."""
+        return self.final_charge, self.final_pstate
 
 
 def fleet_mask(policy: Policy | str, seed, rnd, E, available, round_cost,
@@ -107,17 +129,17 @@ def _round_cost_array(cost, cfg: FleetConfig) -> jax.Array:
 
 
 @partial(jax.jit, static_argnames=("policy", "num_rounds", "record_masks"))
-def _run_fleet_scan(process, bat, round_cost, E, phase, base_key, charge0,
-                    pstate0, seed, threshold, *, policy, num_rounds,
-                    record_masks):
+def _run_fleet_scan(process, bat, round_cost, E, phase, valid, base_key,
+                    charge0, pstate0, seed, threshold, offset, *, policy,
+                    num_rounds, record_masks):
     """The whole-fleet scan, jitted ONCE per (process/battery structure,
     shapes, policy, horizon): processes and `BatteryConfig` are registered
-    pytrees and seed/threshold are traced scalars, so repeated calls —
-    including seed sweeps — hit the jit cache instead of retracing
-    (`jax.jit` on a per-call lambda would recompile every invocation —
-    benchmark-visible)."""
+    pytrees and seed/threshold/offset are traced scalars, so repeated calls —
+    including seed sweeps and chunked controller runs — hit the jit cache
+    instead of retracing (`jax.jit` on a per-call lambda would recompile
+    every invocation — benchmark-visible)."""
     step = partial(_fleet_round, process, bat, policy, round_cost, E, phase,
-                   base_key, seed, threshold)
+                   valid, base_key, seed, threshold)
 
     def body(carry, r):
         carry, mask, stats = step(carry, r)
@@ -126,15 +148,18 @@ def _run_fleet_scan(process, bat, round_cost, E, phase, base_key, charge0,
         return carry, stats
 
     return jax.lax.scan(body, (charge0, pstate0),
-                        jnp.arange(num_rounds, dtype=jnp.int32))
+                        offset + jnp.arange(num_rounds, dtype=jnp.int32))
 
 
 def _fleet_round(process, bat: battery_lib.BatteryConfig, policy: Policy,
-                 round_cost, E, phase, base_key, seed, threshold, carry, r):
+                 round_cost, E, phase, valid, base_key, seed, threshold,
+                 carry, r):
     """One round of the fleet scan; shared by the jitted scan body and the
     host-side `EnergyLoop` so the two paths are the same program.  ``seed``
     and ``threshold`` are (traceable) scalars — only ``policy`` changes the
-    program structure."""
+    program structure.  ``valid`` is the (N,) real-client weight mask (0. on
+    padding lanes of the mesh-sharded path): telemetry reductions are
+    valid-weighted so phantom clients never leak into the stats."""
     charge, pstate = carry
     harvest, pstate = process.sample(jax.random.fold_in(base_key, r), r, pstate)
     available, aux = battery_lib.absorb(bat, charge, harvest)
@@ -142,22 +167,63 @@ def _fleet_round(process, bat: battery_lib.BatteryConfig, policy: Policy,
                       threshold=threshold, phase=phase)
     consumed = mask * round_cost
     charge = battery_lib.drain(available, consumed)
+    depleted = (available < round_cost).astype(jnp.float32)
     stats = {
-        "participants": jnp.sum(mask),
-        "harvested": jnp.sum(harvest),
-        "consumed": jnp.sum(consumed),
-        "leaked": jnp.sum(aux["leaked"]),
-        "overflowed": jnp.sum(aux["overflow"]),
-        "mean_charge": jnp.mean(charge),
-        "frac_depleted": jnp.mean((available < round_cost).astype(jnp.float32)),
+        "participants": collectives.masked_total(mask, valid),
+        "harvested": collectives.masked_total(harvest, valid),
+        "consumed": collectives.masked_total(consumed, valid),
+        "leaked": collectives.masked_total(aux["leaked"], valid),
+        "overflowed": collectives.masked_total(aux["overflow"], valid),
+        "mean_charge": collectives.masked_average(charge, valid),
+        "frac_depleted": collectives.masked_average(depleted, valid),
     }
     return (charge, pstate), mask, stats
+
+
+# ------------------------------------------------------ padding / sharding --
+def _pad_clients(tree: PyTree, n: int, n_pad: int) -> PyTree:
+    """Edge-pad every leaf with a leading client dim of size ``n`` to
+    ``n_pad`` clients by replicating the last real client.
+
+    Edge (not zero) padding keeps every per-round op well-defined on the
+    phantom lanes (no ``mod 0`` renewal cycles, no zero-capacity batteries);
+    their telemetry is excluded by the ``valid`` weight and their masks /
+    charge are sliced off before returning.
+    """
+    if n_pad == n:
+        return tree
+
+    def leaf(x):
+        x = jnp.asarray(x)
+        if x.ndim and x.shape[0] == n:
+            pad = [(0, n_pad - n)] + [(0, 0)] * (x.ndim - 1)
+            return jnp.pad(x, pad, mode="edge")
+        return x
+
+    return jax.tree.map(leaf, tree)
+
+
+def _slice_clients(tree: PyTree, n: int, n_pad: int) -> PyTree:
+    """Drop the padding lanes again: slice every (n_pad, ...) leaf to n."""
+    if n_pad == n:
+        return tree
+    return jax.tree.map(
+        lambda x: x[:n] if getattr(x, "ndim", 0) and x.shape[0] == n_pad
+        else x, tree)
+
+
+def _place_fleet(tree: PyTree, n_pad: int, mesh) -> PyTree:
+    """device_put a fleet pytree with `dist.sharding.fleet_specs` layouts:
+    (n_pad, ...) leaves sharded over the data axes, the rest replicated."""
+    specs = dist_sharding.fleet_specs(tree, n_pad, mesh)
+    return jax.device_put(tree, dist_sharding.shardings_of(specs, mesh))
 
 
 def simulate_fleet(process, bat: battery_lib.BatteryConfig, cost,
                    cfg: FleetConfig, num_rounds: int, *,
                    E=None, phase=None, record_masks: bool = False,
-                   use_jit: bool = True) -> FleetResult:
+                   use_jit: bool = True, mesh=None, pad_to: int | None = None,
+                   state=None, round_offset: int = 0) -> FleetResult:
     """Simulate ``num_rounds`` global rounds of battery-gated scheduling for
     the whole fleet.
 
@@ -175,6 +241,20 @@ def simulate_fleet(process, bat: battery_lib.BatteryConfig, cost,
       use_jit: jit the whole scan (default).  ``False`` runs the identical
         round function eagerly from a Python loop — the jit/no-jit parity
         oracle used in tests.
+      mesh: optional ``jax.sharding.Mesh`` — shard the client axis over the
+        mesh's data axes (`dist.sharding.fleet_spec`).  N is padded up to a
+        multiple of the data-axis product (edge-replicated phantom clients,
+        telemetry-masked); results are bit-exact with the host-local path
+        (per-client RNG).  Requires ``use_jit=True``.
+      pad_to: force the padded fleet width (>= N; a multiple of the data-axis
+        product when ``mesh`` is given).  Exists so the padding path is
+        testable without a multi-device mesh.
+      state: optional ``(charge, process_state)`` to resume from (e.g.
+        ``FleetResult.final_state`` of a previous chunk) instead of
+        ``bat.init`` / ``process.init()``.
+      round_offset: global index of the first simulated round — chunked runs
+        (`energy.control.run_controlled`) keep the per-round RNG stream and
+        SUSTAINABLE window arithmetic aligned with an unchunked horizon.
 
     Returns:
       `FleetResult` with per-round aggregate telemetry (host numpy arrays).
@@ -187,28 +267,64 @@ def simulate_fleet(process, bat: battery_lib.BatteryConfig, cost,
     E = jnp.ones((n,), jnp.int32) if E is None else jnp.asarray(E, jnp.int32)
     phase = None if phase is None else jnp.asarray(phase, jnp.int32)
     base_key = jax.random.PRNGKey(cfg.seed)
-    charge0, pstate0 = bat.init(n), process.init()
+    if state is None:
+        charge0, pstate0 = bat.init(n), process.init()
+    else:
+        charge0, pstate0 = state
+        charge0 = jnp.asarray(charge0, jnp.float32)
+
+    # --- client-axis padding (mesh divisibility and/or explicit pad_to) ----
+    n_pad = n
+    if mesh is not None:
+        if not use_jit:
+            raise ValueError("mesh-sharded simulate_fleet requires use_jit="
+                             "True (GSPMD partitions the jitted scan)")
+        axis = dist_sharding.mesh_axis_size(
+            mesh, dist_sharding.data_axes(mesh))
+        n_pad = -(-n // axis) * axis
+    if pad_to is not None:
+        if pad_to < n_pad:
+            raise ValueError(f"pad_to={pad_to} is below the required fleet "
+                             f"width {n_pad}")
+        if mesh is not None and pad_to % axis:
+            raise ValueError(f"pad_to={pad_to} must be a multiple of the "
+                             f"data-axis product {axis}")
+        n_pad = pad_to
+    valid = (jnp.arange(n_pad) < n).astype(jnp.float32)
+    process, bat, round_cost, E, phase, charge0, pstate0 = _pad_clients(
+        (process, bat, round_cost, E, phase, charge0, pstate0), n, n_pad)
+    if mesh is not None:
+        (process, bat, round_cost, E, phase, valid, charge0, pstate0) = \
+            _place_fleet((process, bat, round_cost, E, phase, valid, charge0,
+                          pstate0), n_pad, mesh)
+        base_key = jax.device_put(
+            base_key, dist_sharding.shardings_of(
+                jax.sharding.PartitionSpec(), mesh))
 
     # uint32: the traced seed is folded into PRNG key data downstream
     seed = jnp.uint32(cfg.seed)
     threshold = jnp.float32(cfg.threshold)
+    offset = jnp.int32(round_offset)
     if use_jit:
-        (charge, _), stats = _run_fleet_scan(
-            process, bat, round_cost, E, phase, base_key, charge0, pstate0,
-            seed, threshold, policy=cfg.policy, num_rounds=num_rounds,
-            record_masks=record_masks)
+        (charge, pstate), stats = _run_fleet_scan(
+            process, bat, round_cost, E, phase, valid, base_key, charge0,
+            pstate0, seed, threshold, offset, policy=cfg.policy,
+            num_rounds=num_rounds, record_masks=record_masks)
     else:
         step = partial(_fleet_round, process, bat, cfg.policy, round_cost, E,
-                       phase, base_key, seed, threshold)
+                       phase, valid, base_key, seed, threshold)
         carry, outs = (charge0, pstate0), []
         for r in range(num_rounds):
-            carry, mask, s = step(carry, jnp.int32(r))
+            carry, mask, s = step(carry, jnp.int32(round_offset + r))
             outs.append(dict(s, mask=mask) if record_masks else s)
-        charge = carry[0]
+        charge, pstate = carry
         stats = {k: jnp.stack([o[k] for o in outs]) for k in outs[0]}
     masks = stats.pop("mask", None) if record_masks else None
+    if masks is not None:
+        masks = masks[:, :n]
     stats = {k: np.asarray(v) for k, v in stats.items()}
-    return FleetResult(stats=stats, final_charge=charge, masks=masks)
+    return FleetResult(stats=stats, final_charge=charge[:n], masks=masks,
+                       final_pstate=_slice_clients(pstate, n, n_pad))
 
 
 class EnergyLoop:
@@ -219,11 +335,14 @@ class EnergyLoop:
     construction (shared `_fleet_round`)."""
 
     def __init__(self, process, bat: battery_lib.BatteryConfig, cost,
-                 threshold: float = 1.0):
+                 threshold: float = 1.0, controller=None):
         self.process = process
         self.bat = bat
         self.cost = cost
         self.threshold = threshold
+        # optional `energy.control.ServerController`: `core.simulate` reads
+        # its adapted (T, E) each round and feeds telemetry back after
+        self.controller = controller
         self._carry = None
 
     def reset(self) -> None:
@@ -244,10 +363,11 @@ class EnergyLoop:
                           policy=Policy(policy), local_steps=local_steps,
                           seed=seed, threshold=self.threshold)
         round_cost = _round_cost_array(self.cost, cfg)
+        valid = jnp.ones((cfg.num_clients,), jnp.float32)
         step = partial(_fleet_round, self.process, self.bat, cfg.policy,
                        round_cost, jnp.asarray(E, jnp.int32),
                        None if phase is None else jnp.asarray(phase, jnp.int32),
-                       jax.random.PRNGKey(seed), jnp.uint32(seed),
+                       valid, jax.random.PRNGKey(seed), jnp.uint32(seed),
                        jnp.float32(self.threshold))
         self._carry, mask, stats = step(self._carry, jnp.int32(rnd))
         return np.asarray(mask), {k: float(v) for k, v in stats.items()}

@@ -1,0 +1,98 @@
+"""Child process for ``test_fleet_sharded.py``: runs under
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` (the tier-1 pytest
+process must keep the real single CPU device — see conftest) and asserts
+mesh-sharded vs host-local bit-exactness of `simulate_fleet` for every
+fleet policy, on N both divisible and not divisible by the client-axis
+size, plus jit-cache reuse on the sharded path.  Exits non-zero on any
+failure; the parent test checks the return code.
+"""
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import EnergyProfile, Policy
+from repro.energy import (BatteryConfig, Bernoulli, FleetConfig, MarkovSolar,
+                          simulate_fleet)
+from repro.energy.fleet import FLEET_POLICIES, _run_fleet_scan
+
+
+def check_parity(mesh, n, rounds=30):
+    """Bit-exact masks AND telemetry: exact-arithmetic config (zero leak,
+    dyadic packet/cost/threshold grid), so every fp32 partial sum is exact
+    and the 8-way reduction tree cannot round differently than the
+    single-device one."""
+    E = np.asarray(EnergyProfile(n).cycles())
+    proc = Bernoulli.create(n, prob=0.375, amount=1.25)
+    bat = BatteryConfig(capacity=2.5, leak=0.0, init_charge=0.5)
+    for pol in FLEET_POLICIES:
+        cfg = FleetConfig(num_clients=n, policy=pol, threshold=1.5, seed=3)
+        kw = dict(E=E, record_masks=True)
+        host = simulate_fleet(proc, bat, 0.75, cfg, rounds, **kw)
+        shard = simulate_fleet(proc, bat, 0.75, cfg, rounds, mesh=mesh, **kw)
+        assert np.array_equal(np.asarray(host.masks),
+                              np.asarray(shard.masks)), (n, pol, "masks")
+        assert np.array_equal(np.asarray(host.final_charge),
+                              np.asarray(shard.final_charge)), (n, pol)
+        for k in host.stats:
+            assert np.array_equal(host.stats[k], shard.stats[k]), \
+                (n, pol, k, host.stats[k] - shard.stats[k])
+
+
+def check_stochastic(mesh, n, rounds=40):
+    """Leaky battery + Markov solar: masks/charge stay bit-exact (all
+    per-client state evolution is elementwise); telemetry reductions agree
+    to float tolerance."""
+    E = np.asarray(EnergyProfile(n).cycles())
+    proc = MarkovSolar.create(n, day_mean=0.8)
+    bat = BatteryConfig(capacity=2.5, leak=0.03, init_charge=0.5)
+    cfg = FleetConfig(num_clients=n, policy=Policy.THRESHOLD, threshold=1.2,
+                      seed=1)
+    host = simulate_fleet(proc, bat, 1.0, cfg, rounds, E=E, record_masks=True)
+    shard = simulate_fleet(proc, bat, 1.0, cfg, rounds, E=E,
+                           record_masks=True, mesh=mesh)
+    assert np.array_equal(np.asarray(host.masks), np.asarray(shard.masks))
+    assert np.array_equal(np.asarray(host.final_charge),
+                          np.asarray(shard.final_charge))
+    for k in host.stats:
+        assert np.allclose(host.stats[k], shard.stats[k], rtol=1e-5), k
+
+
+def check_sharded_cache_reuse(mesh, n):
+    """Repeat sharded calls with different seeds/thresholds must hit the jit
+    cache (same shapes, same shardings)."""
+    E = np.asarray(EnergyProfile(n).cycles())
+    proc = Bernoulli.create(n, prob=0.4)
+    bat = BatteryConfig(capacity=2.0, leak=0.01)
+
+    def run(seed, threshold):
+        cfg = FleetConfig(num_clients=n, policy=Policy.THRESHOLD, seed=seed,
+                          threshold=threshold)
+        return simulate_fleet(proc, bat, 1.0, cfg, 10, E=E, mesh=mesh)
+
+    run(0, 1.0)
+    size = _run_fleet_scan._cache_size()
+    run(7, 1.3)
+    run(11, 0.8)
+    assert _run_fleet_scan._cache_size() == size, \
+        "sharded simulate_fleet retraced on a seed/threshold sweep"
+
+
+def main():
+    n_dev = len(jax.devices())
+    assert n_dev == 8, f"expected 8 emulated CPU devices, got {n_dev}"
+    mesh = jax.make_mesh((8,), ("data",))
+    check_parity(mesh, n=24)    # divisible by the 8-way client axis
+    check_parity(mesh, n=21)    # padded 21 -> 24 (phantom-lane path)
+    check_stochastic(mesh, n=24)
+    check_stochastic(mesh, n=21)
+    check_sharded_cache_reuse(mesh, n=32)
+    # a mesh with a model axis: fleet state shards over data axes only
+    mesh2 = jax.make_mesh((4, 2), ("data", "model"))
+    check_parity(mesh2, n=21)   # padded 21 -> 24 (4-way data axis)
+    print("sharded parity OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,209 @@
+"""Oracle layer for the mesh-sharded fleet simulator (DESIGN.md §7).
+
+* **Parity oracle** — `simulate_fleet` with and without a client-axis mesh is
+  bit-identical for every fleet policy, on N divisible and NOT divisible by
+  the client-axis size.  Multi-device sharding needs
+  ``--xla_force_host_platform_device_count`` set before jax import, which the
+  tier-1 process must not do (conftest keeps the real single CPU device), so
+  the 8-device cases run in a child process (``_fleet_sharded_child.py``);
+  the padding path itself (phantom lanes, valid-masked telemetry) is also
+  exercised in-process via ``pad_to``.
+* **Spec validity** — `dist.sharding.fleet_spec` on the 16×16 (and 2×16×16)
+  production `SpecMesh`: padded fleet widths divide, scalars replicate.
+* **Retrace regression** — repeat `simulate_fleet` calls with different
+  seeds/thresholds must not retrace the cached scan (host-local here; the
+  sharded path's twin assertion lives in the child).
+"""
+import os
+import subprocess
+import sys
+
+import jax
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.core import EnergyProfile, Policy
+from repro.dist.sharding import fleet_spec, fleet_specs, mesh_axis_size
+from repro.energy import (BatteryConfig, Bernoulli, FleetConfig, MarkovSolar,
+                          simulate_fleet)
+from repro.energy.fleet import FLEET_POLICIES, _run_fleet_scan
+from repro.launch.mesh import SpecMesh, production_spec_mesh
+
+_REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _profile_E(n):
+    return np.asarray(EnergyProfile(n).cycles())
+
+
+# ----------------------------------------------------------- parity oracle --
+
+@pytest.mark.parametrize("policy", FLEET_POLICIES,
+                         ids=[p.value for p in FLEET_POLICIES])
+@pytest.mark.parametrize("n,pad_to", [(24, 24), (21, 24)],
+                         ids=["divisible", "padded"])
+def test_padding_parity_bit_exact(policy, n, pad_to):
+    """Padded vs unpadded fleets: bit-identical masks, telemetry and final
+    charge for every fleet policy.  Exact-arithmetic config (zero leak,
+    dyadic 0.25-grid packet/cost/threshold) so fp32 sums are exact under any
+    reduction order — telemetry equality is bitwise, not approximate."""
+    proc = Bernoulli.create(n, prob=0.375, amount=1.25)
+    bat = BatteryConfig(capacity=2.5, leak=0.0, init_charge=0.5)
+    cfg = FleetConfig(num_clients=n, policy=policy, threshold=1.5, seed=3)
+    kw = dict(E=_profile_E(n), record_masks=True)
+    base = simulate_fleet(proc, bat, 0.75, cfg, 30, **kw)
+    padded = simulate_fleet(proc, bat, 0.75, cfg, 30, pad_to=pad_to, **kw)
+    assert base.masks.shape == padded.masks.shape == (30, n)
+    assert np.array_equal(np.asarray(base.masks), np.asarray(padded.masks))
+    assert np.array_equal(np.asarray(base.final_charge),
+                          np.asarray(padded.final_charge))
+    for k in base.stats:
+        assert np.array_equal(base.stats[k], padded.stats[k]), k
+
+
+def test_padding_parity_stochastic_leaky():
+    """Leaky battery + Markov solar (non-exact arithmetic): the per-client
+    state evolution is elementwise, so masks/charge remain bit-exact under
+    padding; only the telemetry reductions are order-sensitive (allclose)."""
+    n = 21
+    proc = MarkovSolar.create(n, day_mean=0.8)
+    bat = BatteryConfig(capacity=2.5, leak=0.03, init_charge=0.5)
+    cfg = FleetConfig(num_clients=n, policy=Policy.THRESHOLD, threshold=1.2,
+                      seed=1)
+    kw = dict(E=_profile_E(n), record_masks=True)
+    base = simulate_fleet(proc, bat, 1.0, cfg, 40, **kw)
+    padded = simulate_fleet(proc, bat, 1.0, cfg, 40, pad_to=32, **kw)
+    assert np.array_equal(np.asarray(base.masks), np.asarray(padded.masks))
+    assert np.array_equal(np.asarray(base.final_charge),
+                          np.asarray(padded.final_charge))
+    for k in base.stats:
+        assert np.allclose(base.stats[k], padded.stats[k], rtol=1e-5), k
+
+
+def test_sharded_parity_multidevice():
+    """The real thing: 8 emulated CPU devices in a child process, sharded vs
+    host-local bit-exactness for every policy on divisible AND padded N, a
+    (data, model) mesh, and sharded jit-cache reuse."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["JAX_PLATFORMS"] = "cpu"
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(_REPO, "src")]
+        + ([env["PYTHONPATH"]] if env.get("PYTHONPATH") else []))
+    child = os.path.join(_REPO, "tests", "_fleet_sharded_child.py")
+    out = subprocess.run([sys.executable, child], env=env, cwd=_REPO,
+                         capture_output=True, text=True, timeout=600)
+    assert out.returncode == 0, f"child failed:\n{out.stdout}\n{out.stderr}"
+    assert "sharded parity OK" in out.stdout
+
+
+def test_arrival_rng_is_padding_invariant():
+    """The property the whole parity layer rests on: per-client RNG makes a
+    process's harvest for client i depend only on (key, i), never on N."""
+    key = jax.random.PRNGKey(7)
+    small = Bernoulli.create(8, prob=0.5, amount=1.0)
+    big = Bernoulli.create(12, prob=0.5, amount=1.0)
+    hs, _ = small.sample(key, 0, ())
+    hb, _ = big.sample(key, 0, ())
+    assert np.array_equal(np.asarray(hs), np.asarray(hb)[:8])
+    ms = MarkovSolar.create(8, day_mean=0.9)
+    mb = MarkovSolar.create(12, day_mean=0.9)
+    hs, ss = ms.sample(key, 0, ms.init())
+    hb, sb = mb.sample(key, 0, mb.init())
+    assert np.array_equal(np.asarray(hs), np.asarray(hb)[:8])
+    assert np.array_equal(np.asarray(ss), np.asarray(sb)[:8])
+
+
+# ------------------------------------------------------------ spec validity --
+
+def _assert_spec_valid(spec, shape, mesh):
+    assert len(spec) <= len(shape)
+    for dim, entry in enumerate(spec):
+        if entry is None:
+            continue
+        axes = entry if isinstance(entry, tuple) else (entry,)
+        size = mesh_axis_size(mesh, axes)
+        assert shape[dim] % size == 0, \
+            f"spec {spec} puts {axes} (size {size}) on dim {dim} of {shape}"
+
+
+@pytest.mark.parametrize("mesh", [production_spec_mesh(),
+                                  production_spec_mesh(multi_pod=True)],
+                         ids=["16x16", "2x16x16"])
+@pytest.mark.parametrize("n", [1_000, 4_096, 100_000])
+def test_fleet_spec_on_production_mesh(mesh, n):
+    """`fleet_spec` + the simulator's padding rule produce valid layouts on
+    the production meshes: the padded client axis divides the data-axis
+    product, trailing dims replicate, scalars replicate."""
+    from repro.dist.sharding import data_axes
+    axis = mesh_axis_size(mesh, data_axes(mesh))
+    n_pad = -(-n // axis) * axis
+    assert n_pad % axis == 0 and 0 <= n_pad - n < axis
+
+    spec = fleet_spec(mesh)
+    _assert_spec_valid(spec, (n_pad,), mesh)
+    spec2 = fleet_spec(mesh, ndim=3)
+    assert spec2[1:] == (None, None)
+    _assert_spec_valid(spec2, (n_pad, 4, 7), mesh)
+
+    # a fleet pytree mixing (N,) state, (N, k) state and scalar config
+    tree = {"charge": np.zeros((n_pad,)), "regime": np.zeros((n_pad, 2)),
+            "capacity": np.float32(2.0)}
+    specs = fleet_specs(tree, n_pad, mesh)
+    assert specs["capacity"] == P()
+    _assert_spec_valid(specs["charge"], (n_pad,), mesh)
+    _assert_spec_valid(specs["regime"], (n_pad, 2), mesh)
+
+
+def test_fleet_spec_composes_pod_and_data_axes():
+    mesh = production_spec_mesh(multi_pod=True)
+    assert fleet_spec(mesh) == P(("pod", "data"))
+    assert fleet_spec(production_spec_mesh()) == P("data")
+    # a data-only SpecMesh (no model axis) still works
+    assert fleet_spec(SpecMesh({"data": 8})) == P("data")
+
+
+# -------------------------------------------------------- retrace regression --
+
+def test_fleet_scan_cache_reuse_host_local():
+    """Repeat `simulate_fleet` calls with different seeds/thresholds (and
+    chunk offsets) must not retrace: seed/threshold/offset are traced
+    scalars of the cached scan."""
+    n = 16
+    proc = Bernoulli.create(n, prob=0.4)
+    bat = BatteryConfig(capacity=2.0, leak=0.01)
+    E = _profile_E(n)
+
+    def run(seed, threshold, offset=0):
+        cfg = FleetConfig(num_clients=n, policy=Policy.THRESHOLD, seed=seed,
+                          threshold=threshold)
+        return simulate_fleet(proc, bat, 1.0, cfg, 12, E=E,
+                              round_offset=offset)
+
+    run(0, 1.0)                       # may trace (cold cache for this shape)
+    size = _run_fleet_scan._cache_size()
+    run(5, 1.25)
+    run(9, 0.75)
+    run(5, 1.25, offset=12)           # chunked-continuation path
+    assert _run_fleet_scan._cache_size() == size, \
+        "simulate_fleet retraced on a seed/threshold/offset sweep"
+
+
+def test_fleet_scan_cache_reuse_padded():
+    """The padded shape is a distinct (one-time) trace; sweeps at that shape
+    then hit the cache too."""
+    n = 13
+    proc = Bernoulli.create(n, prob=0.4)
+    bat = BatteryConfig(capacity=2.0, leak=0.01)
+    E = _profile_E(n)
+
+    def run(seed):
+        cfg = FleetConfig(num_clients=n, policy=Policy.GREEDY, seed=seed)
+        return simulate_fleet(proc, bat, 1.0, cfg, 12, E=E, pad_to=16)
+
+    run(0)
+    size = _run_fleet_scan._cache_size()
+    run(3)
+    run(4)
+    assert _run_fleet_scan._cache_size() == size

@@ -87,6 +87,23 @@ def test_wait_all_rejects_phase_offsets():
                            phase=np.array([0, 1], np.int32))
 
 
+def test_fleet_only_policies_name_the_fleet_entry_point():
+    """Every fleet-only policy (battery-gated, no stateless schedule) must
+    fail with an error that names the battery-gated entry point —
+    `energy.fleet.fleet_mask` — not a generic refusal."""
+    import pytest
+    from repro.core.scheduling import _POLICIES
+    from repro.energy.fleet import FLEET_POLICIES
+    fleet_only = [p for p in FLEET_POLICIES if p not in _POLICIES]
+    assert Policy.THRESHOLD in fleet_only  # the known member today
+    for pol in fleet_only:
+        with pytest.raises(ValueError,
+                           match=r"energy\.fleet\.fleet_mask") as ei:
+            participation_mask(pol, 0, jnp.int32(0),
+                               np.array([1, 2], np.int32))
+        assert pol.value in str(ei.value)
+
+
 def test_wait_all_only_at_emax_multiples():
     E = np.array([1, 5, 10, 20], np.int32)
     m = masks_for(Policy.WAIT_ALL, 0, 41, E)
