@@ -1,0 +1,216 @@
+"""Serving-fleet throughput and admission-quality benchmark: time
+`repro.serve.fleet_serve.simulate_serve` (one jitted lax.scan over epochs,
+whole-fleet battery + traffic + harvest state) at N in {1e3, 1e5, 1e6}
+clients host-local — plus, whenever more than one device is visible (CI runs
+an ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` job), a
+``sharded`` section sweeping the mesh-sharded client axis at >= 1e6 clients
+x >= 50 epochs, and an ``admission`` section pitting battery-gated admission
+against energy-agnostic serving under a solar day/night + diurnal-traffic
+scenario (the acceptance comparison: shed/unanswered rate and depletion).
+Everything lands in ``BENCH_serve.json`` — uploaded per PR by CI's
+``serve-scale`` job.
+
+Reported per (N, traffic, policy): compile time, steady-state wall time,
+epochs/sec and client-epochs/sec, plus served/shed rates and joules/token so
+regressions in *behaviour* (not just speed) are visible in the artifact
+diff.
+
+Usage:
+    PYTHONPATH=src python benchmarks/serve_scale.py            # full sweep
+    PYTHONPATH=src python benchmarks/serve_scale.py --smoke    # CI (~seconds)
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import numpy as np
+
+from repro.energy import (AdmissionRule, BatteryConfig, ControlBounds,
+                          DecodeCostModel, MarkovSolar, ServerController)
+from repro.serve import (BatteryGated, DiurnalPoisson, EnergyAgnostic, MMPP,
+                         QoSSpec, ServeConfig, TrainLoad,
+                         run_serve_controlled, simulate_serve)
+
+QOS = QoSSpec(prompt_tokens=128.0, full_decode_tokens=256.0,
+              short_decode_tokens=32.0)
+# ~100M-active-param on-device model at the nominal edge constants:
+# ~0.77 J per full request, ~0.32 J degraded — the same order as the solar
+# harvest below, so admission decisions actually bind
+COST = DecodeCostModel.from_params(1e8)
+
+TRAFFIC = {
+    "diurnal": lambda n: DiurnalPoisson.create(
+        n, base=1.0, swing=0.9, phase=np.arange(n) % 24),
+    "mmpp": lambda n: MMPP.create(n, calm_rate=0.3, burst_rate=2.5),
+}
+
+POLICIES = {
+    "agnostic": lambda n: EnergyAgnostic(),
+    "gated": lambda n: BatteryGated.create(n, hi=2.0, lo=1.5),
+}
+
+
+def _solar(n):
+    return MarkovSolar.create(n, p_stay_day=0.9, p_stay_night=0.9,
+                              day_mean=3.0)
+
+
+def bench_one(n: int, epochs: int, traffic_name: str, policy_name: str,
+              seed: int = 0, mesh=None) -> dict:
+    traffic = TRAFFIC[traffic_name](n)
+    harvest = _solar(n)
+    bat = BatteryConfig(capacity=8.0, leak=0.01, init_charge=2.0)
+    pol = POLICIES[policy_name](n)
+    cfg = ServeConfig(num_clients=n, seed=seed)
+
+    def run():
+        return simulate_serve(traffic, harvest, bat, COST, QOS, pol, cfg,
+                              epochs, mesh=mesh)
+
+    t0 = time.perf_counter()
+    res = run()                      # compile + first run
+    t1 = time.perf_counter()
+    res = run()                      # steady state (jit cache hit)
+    t2 = time.perf_counter()
+    wall = t2 - t1
+    s = res.stats
+    offered = max(float(s["offered"].sum()), 1e-9)
+    rec = {
+        "num_clients": n,
+        "epochs": epochs,
+        "traffic": traffic_name,
+        "policy": policy_name,
+        "compile_plus_run_s": round(t1 - t0, 4),
+        "run_s": round(wall, 4),
+        "epochs_per_s": round(epochs / wall, 2),
+        "client_epochs_per_s": round(n * epochs / wall, 1),
+        "served_rate": float((s["served_full"].sum()
+                              + s["served_short"].sum()) / offered),
+        "shed_rate": float(s["shed"].sum() / offered),
+        "deadline_miss_rate": float(s["deadline_missed"].sum() / offered),
+        "frac_depleted": float(s["frac_depleted"].mean()),
+        "joules_per_token": res.joules_per_token,
+    }
+    if mesh is not None:
+        rec["mesh_devices"] = int(np.prod(list(mesh.shape.values())))
+    return rec
+
+
+def bench_admission(n: int, epochs: int, control_every: int = 24) -> dict:
+    """The acceptance comparison: solar day/night + diurnal traffic, with a
+    training load competing for the same batteries.  Battery-gated admission
+    (static margins, and closed-loop with `AdmissionRule`) vs the
+    energy-agnostic baseline, on unanswered-request rate and depletion."""
+    traffic = DiurnalPoisson.create(n, base=1.0, swing=0.9,
+                                    phase=np.arange(n) % 24)
+    harvest = _solar(n)
+    bat = BatteryConfig(capacity=8.0, leak=0.01, init_charge=2.0)
+    train_cost = 0.2   # joules per training round, same battery
+    cfg = ServeConfig(num_clients=n, seed=0)
+
+    def summarize(res):
+        s = res.stats
+        offered = max(float(s["offered"].sum()), 1e-9)
+        return {
+            "served_rate": float((s["served_full"].sum()
+                                  + s["served_short"].sum()) / offered),
+            "shed_rate": float(s["shed"].sum() / offered),
+            "deadline_miss_rate": float(s["deadline_missed"].sum() / offered),
+            "unanswered_rate": float((s["shed"].sum()
+                                      + s["deadline_missed"].sum()) / offered),
+            "frac_depleted": float(s["frac_depleted"].mean()),
+            "train_participants": float(s["participants"].mean()),
+            "joules_per_token": res.joules_per_token,
+        }
+
+    train = TrainLoad.create(np.full(n, 4), train_cost)
+    out = {"num_clients": n, "epochs": epochs}
+    t0 = time.perf_counter()
+    out["agnostic"] = summarize(simulate_serve(
+        traffic, harvest, bat, COST, QOS, EnergyAgnostic(), cfg, epochs,
+        train=train))
+    out["gated"] = summarize(simulate_serve(
+        traffic, harvest, bat, COST, QOS,
+        BatteryGated.create(n, hi=2.0, lo=1.5), cfg, epochs, train=train))
+    ctrl = ServerController(T0=5, E0=4, rules=(AdmissionRule(),),
+                            bounds=ControlBounds())
+    res, ctrl = run_serve_controlled(
+        traffic, harvest, bat, COST, QOS, BatteryGated.create(n), cfg,
+        epochs, ctrl, train_cost=train_cost, control_every=control_every)
+    out["controlled"] = summarize(res)
+    out["controlled"]["admit_trace"] = [t["admit"] for t in ctrl.trace]
+    out["run_s"] = round(time.perf_counter() - t0, 4)
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized sweep (seconds, not minutes)")
+    ap.add_argument("--out", default="BENCH_serve.json")
+    ap.add_argument("--epochs", type=int, default=96)
+    args = ap.parse_args()
+
+    if args.smoke:
+        sizes = [1_000, 100_000]
+        combos = [("diurnal", "gated"), ("mmpp", "agnostic")]
+        # acceptance: a >= 1e6-client x >= 50-epoch sharded sweep in CI's
+        # 8-device emulated job
+        sharded = [(1_000_000, max(50, args.epochs // 2))]
+        adm_n = 20_000
+    else:
+        sizes = [1_000, 100_000, 1_000_000]
+        combos = [("diurnal", "gated"), ("diurnal", "agnostic"),
+                  ("mmpp", "gated")]
+        sharded = [(1_000_000, args.epochs), (10_000_000, args.epochs)]
+        adm_n = 200_000
+
+    results = []
+    for n in sizes:
+        for traffic_name, policy_name in combos:
+            rec = bench_one(n, args.epochs, traffic_name, policy_name)
+            results.append(rec)
+            print(f"N={n:>9,} {traffic_name:>8}/{policy_name:<9} "
+                  f"run={rec['run_s']:.3f}s  epochs/s={rec['epochs_per_s']:.1f}  "
+                  f"client-epochs/s={rec['client_epochs_per_s']:.2e}  "
+                  f"served={rec['served_rate']:.3f}", flush=True)
+
+    sharded_results = []
+    n_dev = jax.device_count()
+    if n_dev > 1:
+        mesh = jax.make_mesh((n_dev,), ("data",))
+        for n, epochs in sharded:
+            for traffic_name, policy_name in combos[:1]:
+                rec = bench_one(n, epochs, traffic_name, policy_name,
+                                mesh=mesh)
+                sharded_results.append(rec)
+                print(f"N={n:>9,} {traffic_name:>8}/{policy_name:<9} sharded/"
+                      f"{n_dev}dev epochs={epochs} run={rec['run_s']:.3f}s  "
+                      f"client-epochs/s={rec['client_epochs_per_s']:.2e}",
+                      flush=True)
+    else:
+        print("single device: skipping sharded section "
+              "(set XLA_FLAGS=--xla_force_host_platform_device_count=8)")
+
+    adm = bench_admission(adm_n, args.epochs)
+    print(f"admission N={adm_n:,}: unanswered "
+          f"{adm['agnostic']['unanswered_rate']:.3f} (agnostic) -> "
+          f"{adm['gated']['unanswered_rate']:.3f} (gated) / "
+          f"{adm['controlled']['unanswered_rate']:.3f} (controlled); "
+          f"depleted {adm['agnostic']['frac_depleted']:.3f} -> "
+          f"{adm['gated']['frac_depleted']:.3f} / "
+          f"{adm['controlled']['frac_depleted']:.3f}", flush=True)
+
+    out = {"bench": "serve_scale", "smoke": args.smoke, "epochs": args.epochs,
+           "devices": n_dev, "results": results, "sharded": sharded_results,
+           "admission": adm}
+    with open(args.out, "w") as f:
+        json.dump(out, f, indent=1)
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -36,7 +36,7 @@ for arch in ["mamba2-1.3b", "granite-3-2b", "mixtral-8x7b",
         cache_len, ring, window = cfg.sliding_window, True, cfg.sliding_window
 
     t0 = time.time()
-    toks = generate(model, params, None, prompt, GEN, cache_len, ring=ring,
+    toks = generate(model, params, prompt, GEN, cache_len, ring=ring,
                     window=window, rng=rng)
     print(f"{arch:20s} [{cfg.family:7s}] generated {np.asarray(toks[0])[:6]}… "
           f"({time.time()-t0:.1f}s incl. compile)")

@@ -17,9 +17,11 @@ from repro.energy.arrivals import (
     client_exponential,
     client_keys,
     client_uniform,
+    truncated_poisson,
 )
 from repro.energy.battery import BatteryConfig, absorb, drain, step
 from repro.energy.control import (
+    AdmissionRule,
     BudgetRule,
     CadenceRule,
     ControlBounds,
@@ -29,6 +31,7 @@ from repro.energy.control import (
     run_controlled,
 )
 from repro.energy.costs import (
+    DecodeCostModel,
     DeviceCostModel,
     energy_record,
     from_dryrun,
@@ -46,10 +49,12 @@ from repro.energy.fleet import (
 __all__ = [
     "Bernoulli", "CompoundPoisson", "DeterministicRenewal", "MarkovSolar",
     "Scaled", "Sum", "client_exponential", "client_keys", "client_uniform",
+    "truncated_poisson",
     "BatteryConfig", "absorb", "drain", "step",
-    "BudgetRule", "CadenceRule", "ControlBounds", "ControlState",
-    "ServerController", "Telemetry", "run_controlled",
-    "DeviceCostModel", "energy_record", "from_dryrun", "from_flops",
+    "AdmissionRule", "BudgetRule", "CadenceRule", "ControlBounds",
+    "ControlState", "ServerController", "Telemetry", "run_controlled",
+    "DecodeCostModel", "DeviceCostModel", "energy_record", "from_dryrun",
+    "from_flops",
     "FLEET_POLICIES", "EnergyLoop", "FleetConfig", "FleetResult",
     "fleet_mask", "simulate_fleet",
 ]

@@ -74,6 +74,30 @@ def client_exponential(key, n: int, extra_shape: tuple = ()) -> jax.Array:
         client_keys(key, n))
 
 
+def truncated_poisson(u: jax.Array, rate: jax.Array,
+                      max_count: int) -> jax.Array:
+    """Poisson(``rate``) counts by inverse-CDF on the truncated support
+    {0..max_count}: ``K = #{j : u > cdf_j}``.
+
+    A fixed chain of O(max_count) fused elementwise ops —
+    ``jax.random.poisson``'s rejection sampler costs *seconds* per call at
+    N=1e6 on CPU and would dominate a fleet scan.  Pick ``max_count >=
+    rate + 6*sqrt(rate)`` for negligible truncation error.  Shared by
+    `CompoundPoisson` (energy arrivals) and the `repro.serve.traffic`
+    request processes, so both sides of the train/serve story draw counts
+    through the same kernel.
+    """
+    # pmf_0 = e^-rate, pmf_{j+1} = pmf_j * rate/(j+1)
+    pmf = jnp.exp(-rate)
+    cdf = pmf
+    k = jnp.zeros(jnp.shape(rate), jnp.int32)
+    for j in range(max_count):
+        k = k + (u > cdf).astype(jnp.int32)
+        pmf = pmf * rate / (j + 1)
+        cdf = cdf + pmf
+    return k
+
+
 def _pytree(data_fields: tuple[str, ...], meta_fields: tuple[str, ...] = ()):
     """Register an arrival process as a JAX pytree: array parameters are
     leaves, so a process can cross a jit boundary as an argument and the
@@ -147,16 +171,8 @@ class CompoundPoisson:
     def sample(self, key, t, state):
         del t
         k1, k2 = jax.random.split(key)
-        # K via inverse-CDF on the truncated support {0..max_arrivals}:
-        # pmf_0 = e^-rate, pmf_{j+1} = pmf_j * rate/(j+1); K = #{j: u > cdf_j}
         u = client_uniform(k1, self.num_clients)
-        pmf = jnp.exp(-self.rate)
-        cdf = pmf
-        k = jnp.zeros(self.rate.shape, jnp.int32)
-        for j in range(self.max_arrivals):
-            k = k + (u > cdf).astype(jnp.int32)
-            pmf = pmf * self.rate / (j + 1)
-            cdf = cdf + pmf
+        k = truncated_poisson(u, self.rate, self.max_arrivals)
         # sum of the first K exponential marks
         marks = client_exponential(k2, self.num_clients, (self.max_arrivals,))
         active = (jnp.arange(self.max_arrivals)[None, :] < k[:, None])

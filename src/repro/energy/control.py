@@ -56,6 +56,8 @@ class ControlBounds:
     t_max: int = 20
     e_min: int = 1
     e_max: int = 64
+    admit_min: float = 0.25   # admission-threshold scale (serving)
+    admit_max: float = 16.0
 
 
 @dataclasses.dataclass(frozen=True)
@@ -64,30 +66,58 @@ class ControlState:
 
     T: int                # local steps per round (prices a round)
     E: np.ndarray         # (G,) int per-group renewal cycles
+    admit: float = 1.0    # admission-threshold scale (`serve.admission`
+    #                       policies apply it via ``scaled()``)
 
 
 @dataclasses.dataclass(frozen=True)
 class Telemetry:
     """One control period's fleet signals, reduced from `FleetResult.stats`
-    (or an `EnergyLoop.step` scalar dict) to the four the rules read."""
+    / `ServeResult.stats` (or an `EnergyLoop.step` scalar dict) to what the
+    rules read.  The serving-ledger and per-group fields are populated only
+    when the producing simulator emitted them."""
 
     participation_rate: float   # mean participants / N
     frac_depleted: float        # mean fraction unable to afford a round
     overflow_frac: float        # overflowed / harvested (wasted harvest)
     mean_charge: float
+    # serving ledger (`repro.serve.fleet_serve` stats)
+    shed_rate: float = 0.0          # shed / offered requests
+    deadline_miss_rate: float = 0.0  # admitted-but-unaffordable / offered
+    # per-group signals (simulate_fleet(..., groups=)), each (G,)
+    group_frac_depleted: np.ndarray | None = None
+    group_participation_rate: np.ndarray | None = None
 
     @classmethod
-    def from_stats(cls, stats: dict, num_clients: int) -> "Telemetry":
+    def from_stats(cls, stats: dict, num_clients: int,
+                   group_sizes=None) -> "Telemetry":
         def arr(k):
             return np.asarray(stats[k], np.float64)
 
         harvested = float(arr("harvested").sum())
         overflowed = float(arr("overflowed").sum())
+        extra: dict = {}
+        if "offered" in stats:
+            offered = max(float(arr("offered").sum()), 1e-12)
+            extra["shed_rate"] = float(arr("shed").sum()) / offered
+            extra["deadline_miss_rate"] = \
+                float(arr("deadline_missed").sum()) / offered
+        if "group_frac_depleted" in stats:
+            # (R, G) per-round group signals -> (G,) period means
+            gd = arr("group_frac_depleted")
+            gp = arr("group_participants")
+            extra["group_frac_depleted"] = gd.reshape(-1, gd.shape[-1]).mean(0)
+            gp = gp.reshape(-1, gp.shape[-1]).mean(0)
+            sizes = (np.asarray(group_sizes, np.float64)
+                     if group_sizes is not None
+                     else np.full(gp.shape, num_clients / gp.shape[0]))
+            extra["group_participation_rate"] = gp / np.maximum(sizes, 1.0)
         return cls(
             participation_rate=float(arr("participants").mean()) / num_clients,
             frac_depleted=float(arr("frac_depleted").mean()),
             overflow_frac=overflowed / max(harvested, 1e-12),
             mean_charge=float(arr("mean_charge").mean()),
+            **extra,
         )
 
 
@@ -137,9 +167,16 @@ class BudgetRule:
     (``E − shrink``, floored at ``e_min``).  The slot-slip condition makes
     the backoff self-terminating: growing E lowers the asked rate until it
     meets what the batteries can actually sustain, then the rule holds —
-    monotone under constant telemetry, hence convergent.  The whole vector
-    moves together, preserving the relative group structure (the paper's §V
-    profile).
+    monotone under constant telemetry, hence convergent.
+
+    With fleet-wide telemetry only, the whole vector moves together
+    (preserving the relative group structure, the paper's §V profile).  When
+    the telemetry carries **per-group** signals (`simulate_fleet(...,
+    groups=)` → ``Telemetry.group_frac_depleted`` /
+    ``group_participation_rate``, one entry per E_k), each ``E_k`` moves
+    from its OWN group's depletion and slot slip instead — a drought in the
+    τ=20 group no longer throttles the τ=1 group.  Each component is
+    monotone under constant telemetry, so convergence is per-group.
     """
 
     depleted_high: float = 0.3
@@ -152,15 +189,67 @@ class BudgetRule:
     def __call__(self, state: ControlState, tel: Telemetry,
                  bounds: ControlBounds) -> ControlState:
         e = state.E
-        asked = float(np.mean(1.0 / np.maximum(e, 1)))
-        if (tel.frac_depleted > self.depleted_high
-                and tel.participation_rate < self.slip * asked):
-            e = np.minimum(bounds.e_max,
-                           np.ceil(e * self.grow).astype(e.dtype))
-        elif (tel.frac_depleted < self.depleted_low
-              and tel.overflow_frac > self.overflow_high):
-            e = np.maximum(bounds.e_min, e - self.shrink)
+        gd = tel.group_frac_depleted
+        if gd is not None and np.shape(gd) == e.shape:
+            dep = np.asarray(gd, np.float64)
+            part = np.asarray(tel.group_participation_rate, np.float64)
+            asked = 1.0 / np.maximum(e, 1)
+            backoff = (dep > self.depleted_high) & (part < self.slip * asked)
+            recover = ((dep < self.depleted_low)
+                       & (tel.overflow_frac > self.overflow_high))
+            e = np.where(
+                backoff,
+                np.minimum(bounds.e_max, np.ceil(e * self.grow)),
+                np.where(recover, np.maximum(bounds.e_min, e - self.shrink),
+                         e)).astype(e.dtype)
+        else:
+            asked = float(np.mean(1.0 / np.maximum(e, 1)))
+            if (tel.frac_depleted > self.depleted_high
+                    and tel.participation_rate < self.slip * asked):
+                e = np.minimum(bounds.e_max,
+                               np.ceil(e * self.grow).astype(e.dtype))
+            elif (tel.frac_depleted < self.depleted_low
+                  and tel.overflow_frac > self.overflow_high):
+                e = np.maximum(bounds.e_min, e - self.shrink)
         return dataclasses.replace(state, E=e)
+
+
+@dataclasses.dataclass(frozen=True)
+class AdmissionRule:
+    """AIMD + hysteresis on the serving admission-threshold scale ``admit``.
+
+    The serving dual of `CadenceRule`: ``admit`` multiplies the admission
+    policy's thresholds (`serve.admission` ``scaled()``), so raising it
+    sheds/degrades more traffic and protects the batteries — the knob by
+    which serving load yields to (or reclaims joules from) the training
+    cadence sharing the fleet.  Depleted fraction above ``depleted_high`` OR
+    deadline misses above ``miss_high`` (admission is writing checks the
+    batteries can't cash) → multiplicative backoff of served load
+    (``admit * backoff``); energy-comfortable (depleted below
+    ``depleted_low``) while refusing users (shed rate above ``shed_high``)
+    → additive recovery (``admit − recover``).  Dead band otherwise; moves
+    are monotone under constant telemetry, hence convergent in
+    ``[admit_min, admit_max]``.
+    """
+
+    depleted_high: float = 0.3
+    depleted_low: float = 0.1
+    miss_high: float = 0.05
+    shed_high: float = 0.1
+    backoff: float = 2.0
+    recover: float = 0.25
+
+    def __call__(self, state: ControlState, tel: Telemetry,
+                 bounds: ControlBounds) -> ControlState:
+        if (tel.frac_depleted > self.depleted_high
+                or tel.deadline_miss_rate > self.miss_high):
+            a = min(bounds.admit_max, state.admit * self.backoff)
+        elif (tel.frac_depleted < self.depleted_low
+              and tel.shed_rate > self.shed_high):
+            a = max(bounds.admit_min, state.admit - self.recover)
+        else:
+            a = state.admit
+        return dataclasses.replace(state, admit=a)
 
 
 class ServerController:
@@ -180,14 +269,16 @@ class ServerController:
 
     def __init__(self, T0: int = 5, E0=1, *,
                  bounds: ControlBounds = ControlBounds(),
-                 rules: Sequence[Rule] | None = None, groups=None):
+                 rules: Sequence[Rule] | None = None, groups=None,
+                 admit0: float = 1.0):
         e0 = np.atleast_1d(np.asarray(E0, np.int64))
         self.bounds = bounds
         self.rules: tuple[Rule, ...] = (
             (CadenceRule(), BudgetRule()) if rules is None else tuple(rules))
         self.state = ControlState(
             T=int(np.clip(T0, bounds.t_min, bounds.t_max)),
-            E=np.clip(e0, bounds.e_min, bounds.e_max))
+            E=np.clip(e0, bounds.e_min, bounds.e_max),
+            admit=float(np.clip(admit0, bounds.admit_min, bounds.admit_max)))
         self.groups = None if groups is None else np.asarray(groups, np.int64)
         self.trace: list[dict] = []
 
@@ -216,18 +307,29 @@ class ServerController:
                     f"the fleet has {num_clients}")
         return e
 
+    def group_sizes(self, num_clients: int) -> np.ndarray | None:
+        """(G,) client count per group, when a grouping is configured."""
+        if self.groups is not None:
+            return np.bincount(self.groups, minlength=self.E.size)
+        if self.E.size == num_clients:
+            return np.ones(self.E.size, np.int64)  # per-client E: G == N
+        return None
+
     def update(self, stats: dict, num_clients: int) -> ControlState:
         """Fold one control period's telemetry into the knobs."""
-        tel = Telemetry.from_stats(stats, num_clients)
+        tel = Telemetry.from_stats(stats, num_clients,
+                                   group_sizes=self.group_sizes(num_clients))
         state = self.state
         for rule in self.rules:
             state = rule(state, tel, self.bounds)
         state = ControlState(
             T=int(np.clip(state.T, self.bounds.t_min, self.bounds.t_max)),
-            E=np.clip(state.E, self.bounds.e_min, self.bounds.e_max))
+            E=np.clip(state.E, self.bounds.e_min, self.bounds.e_max),
+            admit=float(np.clip(state.admit, self.bounds.admit_min,
+                                self.bounds.admit_max)))
         self.state = state
         self.trace.append({"T": state.T, "E_mean": float(state.E.mean()),
-                           "telemetry": tel})
+                           "admit": state.admit, "telemetry": tel})
         return state
 
 
@@ -251,6 +353,10 @@ def run_controlled(process, bat, cost, cfg, num_rounds: int,
     state = None
     chunks: list[fleet_lib.FleetResult] = []
     offset = 0
+    # grouped controllers get per-group telemetry (BudgetRule then moves
+    # each E_k from its own group's depletion — ROADMAP per-group item)
+    groups = controller.groups
+    num_groups = None if groups is None else controller.E.size
     while offset < num_rounds:
         chunk = min(control_every, num_rounds - offset)
         ccfg = dataclasses.replace(cfg, local_steps=controller.T)
@@ -258,7 +364,7 @@ def run_controlled(process, bat, cost, cfg, num_rounds: int,
             process, bat, cost, ccfg, chunk,
             E=controller.client_E(cfg.num_clients),
             phase=phase, record_masks=record_masks, mesh=mesh, state=state,
-            round_offset=offset)
+            round_offset=offset, groups=groups, num_groups=num_groups)
         state = res.final_state
         chunks.append(res)
         controller.update(res.stats, cfg.num_clients)

@@ -17,6 +17,9 @@ from __future__ import annotations
 
 import dataclasses
 
+import jax
+import jax.numpy as jnp
+
 JOULES_PER_FLOP = 1e-11
 JOULES_PER_BYTE_RADIO = 1e-7
 
@@ -65,6 +68,89 @@ def from_dryrun(record: dict, local_steps: int = 5,
                       download_bytes=params * bytes_per_param,
                       joules_per_flop=joules_per_flop,
                       joules_per_byte=joules_per_byte)
+
+
+@dataclasses.dataclass(frozen=True)
+class DecodeCostModel:
+    """Joules debited per *inference request* component (the decode path).
+
+    Training rounds are priced by `DeviceCostModel`; this is its serving
+    dual: a request costs one prefill over the prompt, one decode step per
+    generated token, and one radio upload of the response.  Fields are
+    scalars or (N,) arrays (heterogeneous fleets), and the dataclass is a
+    registered pytree so it crosses the jitted serving scan's boundary as an
+    argument (`repro.serve.fleet_serve`) without retracing.
+    """
+
+    joules_per_prefill_token: float | jax.Array
+    joules_per_decode_step: float | jax.Array      # one generated token
+    joules_per_response_upload: float | jax.Array = 0.0
+
+    def request_cost(self, prompt_tokens, decode_tokens):
+        """Joules for one request: ``S`` prompt tokens prefilled,
+        ``decode_tokens`` generated, one response uploaded."""
+        return (jnp.asarray(prompt_tokens, jnp.float32)
+                * self.joules_per_prefill_token
+                + jnp.asarray(decode_tokens, jnp.float32)
+                * self.joules_per_decode_step
+                + self.joules_per_response_upload)
+
+    @classmethod
+    def from_params(cls, num_params: float, bytes_per_response: float = 512.0,
+                    joules_per_flop: float = JOULES_PER_FLOP,
+                    joules_per_byte: float = JOULES_PER_BYTE_RADIO
+                    ) -> "DecodeCostModel":
+        """Analytic model: ~2*N FLOPs per token for both the prefill and the
+        decode matmuls of an N-(active-)parameter decoder."""
+        per_tok = 2.0 * num_params * joules_per_flop
+        return cls(joules_per_prefill_token=per_tok,
+                   joules_per_decode_step=per_tok,
+                   joules_per_response_upload=(bytes_per_response
+                                               * joules_per_byte))
+
+    @classmethod
+    def from_dryrun(cls, decode_record: dict, prefill_record: dict | None = None,
+                    batch: int | None = None, prompt_len: int | None = None,
+                    bytes_per_response: float = 512.0,
+                    joules_per_flop: float = JOULES_PER_FLOP,
+                    joules_per_byte: float = JOULES_PER_BYTE_RADIO
+                    ) -> "DecodeCostModel":
+        """Decode-path cost model from `launch/dryrun.py` records.
+
+        ``decode_record`` must be a ``kind == "decode"`` record: its
+        ``cost.flops_per_device`` covers ONE decode step over the shape's
+        whole batch, so joules per generated token divide by the batch.
+        ``prefill_record`` (``kind == "prefill"``) prices prompt tokens the
+        same way (flops / (batch * seq)); without one, prefill tokens fall
+        back to the decode per-token figure (both are ~2*N FLOPs/token).
+        ``batch``/``prompt_len`` override the shape-registry lookup of
+        ``record["shape"]`` for hand-built records.
+        """
+        def shape_of(record):
+            from repro.configs.base import INPUT_SHAPES
+            return INPUT_SHAPES[record["shape"]]
+
+        b = batch if batch is not None else shape_of(decode_record).global_batch
+        dec_flops = float(decode_record["cost"]["flops_per_device"])
+        per_decode = dec_flops / max(b, 1) * joules_per_flop
+        if prefill_record is not None:
+            shape = shape_of(prefill_record)
+            pb = batch if batch is not None else shape.global_batch
+            ps = prompt_len if prompt_len is not None else shape.seq_len
+            pre_flops = float(prefill_record["cost"]["flops_per_device"])
+            per_prefill = pre_flops / max(pb * ps, 1) * joules_per_flop
+        else:
+            per_prefill = per_decode
+        return cls(joules_per_prefill_token=per_prefill,
+                   joules_per_decode_step=per_decode,
+                   joules_per_response_upload=(bytes_per_response
+                                               * joules_per_byte))
+
+
+jax.tree_util.register_dataclass(
+    DecodeCostModel,
+    ["joules_per_prefill_token", "joules_per_decode_step",
+     "joules_per_response_upload"], [])
 
 
 def energy_record(flops_per_device: float, num_params: float,

@@ -128,10 +128,11 @@ def _round_cost_array(cost, cfg: FleetConfig) -> jax.Array:
                             (cfg.num_clients,))
 
 
-@partial(jax.jit, static_argnames=("policy", "num_rounds", "record_masks"))
+@partial(jax.jit, static_argnames=("policy", "num_rounds", "record_masks",
+                                   "num_groups"))
 def _run_fleet_scan(process, bat, round_cost, E, phase, valid, base_key,
-                    charge0, pstate0, seed, threshold, offset, *, policy,
-                    num_rounds, record_masks):
+                    charge0, pstate0, seed, threshold, offset, groups=None, *,
+                    policy, num_rounds, record_masks, num_groups=None):
     """The whole-fleet scan, jitted ONCE per (process/battery structure,
     shapes, policy, horizon): processes and `BatteryConfig` are registered
     pytrees and seed/threshold/offset are traced scalars, so repeated calls —
@@ -139,7 +140,7 @@ def _run_fleet_scan(process, bat, round_cost, E, phase, valid, base_key,
     instead of retracing (`jax.jit` on a per-call lambda would recompile
     every invocation — benchmark-visible)."""
     step = partial(_fleet_round, process, bat, policy, round_cost, E, phase,
-                   valid, base_key, seed, threshold)
+                   valid, base_key, seed, threshold, groups, num_groups)
 
     def body(carry, r):
         carry, mask, stats = step(carry, r)
@@ -153,13 +154,18 @@ def _run_fleet_scan(process, bat, round_cost, E, phase, valid, base_key,
 
 def _fleet_round(process, bat: battery_lib.BatteryConfig, policy: Policy,
                  round_cost, E, phase, valid, base_key, seed, threshold,
-                 carry, r):
+                 groups, num_groups, carry, r):
     """One round of the fleet scan; shared by the jitted scan body and the
     host-side `EnergyLoop` so the two paths are the same program.  ``seed``
-    and ``threshold`` are (traceable) scalars — only ``policy`` changes the
-    program structure.  ``valid`` is the (N,) real-client weight mask (0. on
-    padding lanes of the mesh-sharded path): telemetry reductions are
-    valid-weighted so phantom clients never leak into the stats."""
+    and ``threshold`` are (traceable) scalars — only ``policy`` (and the
+    presence of ``groups``) changes the program structure.  ``valid`` is the
+    (N,) real-client weight mask (0. on padding lanes of the mesh-sharded
+    path): telemetry reductions are valid-weighted so phantom clients never
+    leak into the stats.  ``groups`` (optional (N,) int32, with static
+    ``num_groups``) additionally reduces participation/depletion per group —
+    the same `masked_total` with a group-indicator weight folded into
+    ``valid``, so the per-group stats inherit the padding/sharding
+    guarantees of the fleet-wide ones."""
     charge, pstate = carry
     harvest, pstate = process.sample(jax.random.fold_in(base_key, r), r, pstate)
     available, aux = battery_lib.absorb(bat, charge, harvest)
@@ -177,6 +183,14 @@ def _fleet_round(process, bat: battery_lib.BatteryConfig, policy: Policy,
         "mean_charge": collectives.masked_average(charge, valid),
         "frac_depleted": collectives.masked_average(depleted, valid),
     }
+    if groups is not None:
+        gweights = jax.vmap(
+            lambda g: valid * (groups == g).astype(jnp.float32))(
+            jnp.arange(num_groups, dtype=jnp.int32))            # (G, N)
+        stats["group_participants"] = jax.vmap(
+            collectives.masked_total, (None, 0))(mask, gweights)
+        stats["group_frac_depleted"] = jax.vmap(
+            collectives.masked_average, (None, 0))(depleted, gweights)
     return (charge, pstate), mask, stats
 
 
@@ -223,7 +237,8 @@ def simulate_fleet(process, bat: battery_lib.BatteryConfig, cost,
                    cfg: FleetConfig, num_rounds: int, *,
                    E=None, phase=None, record_masks: bool = False,
                    use_jit: bool = True, mesh=None, pad_to: int | None = None,
-                   state=None, round_offset: int = 0) -> FleetResult:
+                   state=None, round_offset: int = 0, groups=None,
+                   num_groups: int | None = None) -> FleetResult:
     """Simulate ``num_rounds`` global rounds of battery-gated scheduling for
     the whole fleet.
 
@@ -255,6 +270,13 @@ def simulate_fleet(process, bat: battery_lib.BatteryConfig, cost,
       round_offset: global index of the first simulated round — chunked runs
         (`energy.control.run_controlled`) keep the per-round RNG stream and
         SUSTAINABLE window arithmetic aligned with an unchunked horizon.
+      groups: optional (N,) int32 client → group assignment (with static
+        ``num_groups``): telemetry additionally carries per-group
+        ``group_participants``/``group_frac_depleted`` — each an
+        ``(R, num_groups)`` array reduced via group-indicator weights through
+        `collectives.masked_total` — so `energy.control.BudgetRule` can move
+        each group's E_k from its OWN depletion instead of fleet-wide
+        signals.
 
     Returns:
       `FleetResult` with per-round aggregate telemetry (host numpy arrays).
@@ -266,6 +288,10 @@ def simulate_fleet(process, bat: battery_lib.BatteryConfig, cost,
     round_cost = _round_cost_array(cost, cfg)
     E = jnp.ones((n,), jnp.int32) if E is None else jnp.asarray(E, jnp.int32)
     phase = None if phase is None else jnp.asarray(phase, jnp.int32)
+    if groups is not None:
+        groups = jnp.asarray(groups, jnp.int32)
+        if num_groups is None:
+            num_groups = int(np.asarray(groups).max()) + 1
     base_key = jax.random.PRNGKey(cfg.seed)
     if state is None:
         charge0, pstate0 = bat.init(n), process.init()
@@ -291,12 +317,14 @@ def simulate_fleet(process, bat: battery_lib.BatteryConfig, cost,
                              f"data-axis product {axis}")
         n_pad = pad_to
     valid = (jnp.arange(n_pad) < n).astype(jnp.float32)
-    process, bat, round_cost, E, phase, charge0, pstate0 = _pad_clients(
-        (process, bat, round_cost, E, phase, charge0, pstate0), n, n_pad)
+    (process, bat, round_cost, E, phase, charge0, pstate0, groups) = \
+        _pad_clients((process, bat, round_cost, E, phase, charge0, pstate0,
+                      groups), n, n_pad)
     if mesh is not None:
-        (process, bat, round_cost, E, phase, valid, charge0, pstate0) = \
-            _place_fleet((process, bat, round_cost, E, phase, valid, charge0,
-                          pstate0), n_pad, mesh)
+        (process, bat, round_cost, E, phase, valid, charge0, pstate0,
+         groups) = _place_fleet(
+            (process, bat, round_cost, E, phase, valid, charge0, pstate0,
+             groups), n_pad, mesh)
         base_key = jax.device_put(
             base_key, dist_sharding.shardings_of(
                 jax.sharding.PartitionSpec(), mesh))
@@ -308,11 +336,13 @@ def simulate_fleet(process, bat: battery_lib.BatteryConfig, cost,
     if use_jit:
         (charge, pstate), stats = _run_fleet_scan(
             process, bat, round_cost, E, phase, valid, base_key, charge0,
-            pstate0, seed, threshold, offset, policy=cfg.policy,
-            num_rounds=num_rounds, record_masks=record_masks)
+            pstate0, seed, threshold, offset, groups, policy=cfg.policy,
+            num_rounds=num_rounds, record_masks=record_masks,
+            num_groups=num_groups)
     else:
         step = partial(_fleet_round, process, bat, cfg.policy, round_cost, E,
-                       phase, valid, base_key, seed, threshold)
+                       phase, valid, base_key, seed, threshold, groups,
+                       num_groups)
         carry, outs = (charge0, pstate0), []
         for r in range(num_rounds):
             carry, mask, s = step(carry, jnp.int32(round_offset + r))
@@ -368,6 +398,6 @@ class EnergyLoop:
                        round_cost, jnp.asarray(E, jnp.int32),
                        None if phase is None else jnp.asarray(phase, jnp.int32),
                        valid, jax.random.PRNGKey(seed), jnp.uint32(seed),
-                       jnp.float32(self.threshold))
+                       jnp.float32(self.threshold), None, None)
         self._carry, mask, stats = step(self._carry, jnp.int32(rnd))
         return np.asarray(mask), {k: float(v) for k, v in stats.items()}

@@ -3,43 +3,78 @@
 CPU-capable with --smoke (reduced config); on hardware the same step functions
 run over the production mesh with the shardings from launch/steps.py.
 
+Decode energy is reported next to throughput: joules/token and joules/request
+from the `repro.energy.costs.DecodeCostModel` analytic pricing (~2*N FLOPs
+per token at the nominal edge constants), the same model the battery-gated
+serving fleet debits (`repro.serve`).
+
   PYTHONPATH=src python -m repro.launch.serve --arch mamba2-1.3b --smoke \\
-      --batch 4 --prompt-len 32 --gen 16
+      --batch 4 --prompt-len 32 --gen 16 --sample --temperature 0.8
 """
 from __future__ import annotations
 
 import argparse
+import functools
 import time
+from functools import partial
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config, get_smoke_config
+from repro.energy.costs import DecodeCostModel
 from repro.models import get_model
 
 
-def generate(model, params, batch, prompt, gen_steps: int, cache_len: int,
-             ring: bool = False, window=None, greedy: bool = True, rng=None):
-    """Batched greedy/temperature generation.  prompt: (B, S) int32."""
+@functools.lru_cache(maxsize=32)
+def _jitted_steps(prefill_fn, decode_fn, cache_len: int, ring: bool, window):
+    """Jitted (prefill, decode) pair, cached on the model's bound step
+    functions + serving shape knobs: repeat `generate` calls on the same
+    model hit the jit cache instead of rebuilding per-call lambdas (the
+    recompile-every-invocation anti-pattern `_run_fleet_scan` documents)."""
+    prefill = jax.jit(partial(prefill_fn, cache_len=cache_len, window=window))
+    decode = jax.jit(partial(decode_fn, ring=ring, window=window))
+    return prefill, decode
+
+
+def generate(model, params, prompt, gen_steps: int, cache_len: int,
+             ring: bool = False, window=None, greedy: bool = True,
+             temperature: float = 1.0, rng=None):
+    """Batched greedy or temperature-sampled generation.
+
+    prompt: dict with (B, S) int32 ``tokens`` (+ modality extras).  With
+    ``greedy=False`` each step draws from ``softmax(logits / temperature)``
+    (requires ``rng`` and ``temperature > 0``); ``greedy=True`` ignores
+    temperature.
+    """
+    if not greedy and rng is None:
+        raise ValueError("sampling (greedy=False) requires an rng key")
+    if not greedy and not temperature > 0.0:
+        # logits/0 would silently sample the first +inf-logit token
+        raise ValueError(
+            f"temperature must be > 0 for sampling (got {temperature}); "
+            f"use greedy=True for argmax decoding")
     B, S = prompt["tokens"].shape
-    prefill = jax.jit(lambda p, b: model.prefill(p, b, cache_len=cache_len,
-                                                 window=window))
-    decode = jax.jit(lambda p, t, c, pos: model.decode_step(
-        p, t, c, pos, ring=ring, window=window))
+    prefill, decode = _jitted_steps(model.prefill, model.decode_step,
+                                    cache_len, ring, window)
 
     logits, cache = prefill(params, prompt)
     logits = logits[:, -1] if logits.ndim == 3 else logits
     out = []
-    tok = jnp.argmax(logits, -1).astype(jnp.int32)
+
+    def pick(logits, rng):
+        if greedy:
+            return jnp.argmax(logits, -1).astype(jnp.int32), rng
+        rng, k = jax.random.split(rng)
+        tok = jax.random.categorical(k, logits / temperature)
+        return tok.astype(jnp.int32), rng
+
+    tok, rng = pick(logits, rng)
     for i in range(gen_steps):
         out.append(tok)
         logits, cache = decode(params, tok, cache, jnp.int32(S + i))
-        if greedy or rng is None:
-            tok = jnp.argmax(logits, -1).astype(jnp.int32)
-        else:
-            rng, k = jax.random.split(rng)
-            tok = jax.random.categorical(k, logits).astype(jnp.int32)
+        tok, rng = pick(logits, rng)
     out.append(tok)
     return jnp.stack(out, axis=1)
 
@@ -52,6 +87,9 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--sample", action="store_true",
+                    help="temperature-sample instead of greedy argmax")
+    ap.add_argument("--temperature", type=float, default=1.0)
     args = ap.parse_args()
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
@@ -80,12 +118,22 @@ def main():
         cache_len, ring, window = cfg.sliding_window, True, cfg.sliding_window
 
     t0 = time.time()
-    toks = generate(model, params, None, prompt, args.gen, cache_len,
-                    ring=ring, window=window, rng=rng)
+    toks = generate(model, params, prompt, args.gen, cache_len,
+                    ring=ring, window=window, greedy=not args.sample,
+                    temperature=args.temperature, rng=rng)
     dt = time.time() - t0
-    print(f"arch={cfg.name} batch={B} prompt={S} generated={args.gen}")
+    mode = (f"sampled@T={args.temperature}" if args.sample else "greedy")
+    print(f"arch={cfg.name} batch={B} prompt={S} generated={args.gen} ({mode})")
     print("tokens[0]:", np.asarray(toks[0]))
     print(f"{B * args.gen / dt:.1f} tok/s (wall, incl. compile)")
+
+    # decode-path energy: what this generation debits an edge battery
+    cost = DecodeCostModel.from_params(cfg.num_active_params())
+    per_request = float(cost.request_cost(S, args.gen))
+    total_j = B * per_request
+    print(f"energy (nominal edge device): {total_j / (B * args.gen):.3e} "
+          f"J/token, {per_request:.3e} J/request "
+          f"({B} requests, {total_j:.3e} J total)")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,24 @@
+"""Battery-gated inference serving: diurnal request traffic, decode energy
+accounting, and admission control on the (shardable) energy-harvesting fleet.
+
+See DESIGN.md §8.  `repro.energy` makes the paper's *training* energy story
+physical; this package does the same for the serving traffic that dominates
+a deployed fleet's lifetime energy budget — request processes (`traffic`),
+QoS grades and their decode-path pricing (`qos` + `energy.costs.
+DecodeCostModel`), serve/degrade/shed admission policies (`admission`), and
+a single-jitted-scan fleet serving simulator with an optional competing
+training load (`fleet_serve`).
+"""
+from repro.serve.admission import BatteryGated, ChargeGated, EnergyAgnostic
+from repro.serve.fleet_serve import (ServeConfig, ServeResult, TrainLoad,
+                                     run_serve_controlled, simulate_serve)
+from repro.serve.qos import DEGRADED, FULL, SHED, QoSSpec
+from repro.serve.traffic import MMPP, Constant, DiurnalPoisson
+
+__all__ = [
+    "BatteryGated", "ChargeGated", "EnergyAgnostic",
+    "ServeConfig", "ServeResult", "TrainLoad",
+    "run_serve_controlled", "simulate_serve",
+    "DEGRADED", "FULL", "SHED", "QoSSpec",
+    "MMPP", "Constant", "DiurnalPoisson",
+]

@@ -1,0 +1,102 @@
+"""Battery-gated admission policies: serve / degrade-to-short-gen / shed.
+
+An admission policy maps each client's post-absorb *available* charge and
+this epoch's offered load to a mode in {`qos.FULL`, `qos.DEGRADED`,
+`qos.SHED`} — the serving analogue of `energy.fleet.fleet_mask`.  Whatever
+the policy decides, the simulator's physical gate still applies: a client
+serves at most ``floor(available / per_request_cost)`` requests, so an
+admission mistake surfaces as *deadline misses* (admitted but unaffordable),
+never as negative charge.
+
+Policies are registered pytrees (threshold fields are leaves, scalar or
+per-client (N,)) so swapping threshold *values* — including the server
+controller's `AdmissionRule` scaling knob, applied via ``scaled()`` inside
+the jitted scan — never retraces the serving program; only swapping the
+policy *class* does.
+
+* ``EnergyAgnostic`` — always serve full; the baseline every gated policy is
+  benchmarked against (`examples/serve_fleet.py`, `BENCH_serve.json`).
+* ``BatteryGated`` — thresholds relative to this epoch's offered cost:
+  serve full when ``available >= hi *`` (epoch's full-grade cost), degrade
+  when ``available >= lo *`` (epoch's short-grade cost), else shed.
+  Load-adaptive: a traffic burst raises the bar.
+* ``ChargeGated`` — absolute joule thresholds (state-of-charge gating),
+  independent of offered load: a cheap, traffic-oblivious device policy.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.energy.arrivals import _per_client, _pytree
+from repro.serve.qos import DEGRADED, FULL, SHED
+
+
+def _modes(full_ok, short_ok) -> jax.Array:
+    """(N,) int32 modes from the two admission predicates."""
+    return jnp.where(full_ok, FULL, jnp.where(short_ok, DEGRADED, SHED)) \
+        .astype(jnp.int32)
+
+
+@_pytree(())
+@dataclasses.dataclass(frozen=True)
+class EnergyAgnostic:
+    """Serve everything at full grade; the battery is someone else's problem."""
+
+    def decide(self, available, epoch_full_cost, epoch_short_cost):
+        del epoch_full_cost, epoch_short_cost
+        return jnp.full(jnp.shape(available), FULL, jnp.int32)
+
+    def scaled(self, factor) -> "EnergyAgnostic":
+        del factor
+        return self
+
+
+@_pytree(("hi", "lo"))
+@dataclasses.dataclass(frozen=True)
+class BatteryGated:
+    """Admission relative to this epoch's offered cost.
+
+    ``hi``/``lo`` are margins (>= 1 hedges against lean epochs ahead) over
+    the epoch's full-grade / short-grade cost respectively.
+    """
+
+    hi: jax.Array  # (N,) full-service margin x epoch full cost
+    lo: jax.Array  # (N,) degraded-service margin x epoch short cost
+
+    @classmethod
+    def create(cls, num_clients: int, hi=1.0, lo=1.0) -> "BatteryGated":
+        return cls(_per_client(hi, num_clients), _per_client(lo, num_clients))
+
+    def decide(self, available, epoch_full_cost, epoch_short_cost):
+        return _modes(available >= self.hi * epoch_full_cost,
+                      available >= self.lo * epoch_short_cost)
+
+    def scaled(self, factor) -> "BatteryGated":
+        """Thresholds scaled by the controller's admission knob (traced
+        scalar: sweeping it hits the jit cache)."""
+        f = jnp.asarray(factor, jnp.float32)
+        return dataclasses.replace(self, hi=self.hi * f, lo=self.lo * f)
+
+
+@_pytree(("hi", "lo"))
+@dataclasses.dataclass(frozen=True)
+class ChargeGated:
+    """Absolute state-of-charge thresholds (joules), load-oblivious."""
+
+    hi: jax.Array  # (N,) serve-full above this charge
+    lo: jax.Array  # (N,) degrade above this charge, shed below
+
+    @classmethod
+    def create(cls, num_clients: int, hi=1.0, lo=0.25) -> "ChargeGated":
+        return cls(_per_client(hi, num_clients), _per_client(lo, num_clients))
+
+    def decide(self, available, epoch_full_cost, epoch_short_cost):
+        del epoch_full_cost, epoch_short_cost
+        return _modes(available >= self.hi, available >= self.lo)
+
+    def scaled(self, factor) -> "ChargeGated":
+        f = jnp.asarray(factor, jnp.float32)
+        return dataclasses.replace(self, hi=self.hi * f, lo=self.lo * f)

@@ -1,0 +1,391 @@
+"""Fleet-scale battery-gated *serving* simulator.
+
+The training-side dual of `energy.fleet.simulate_fleet`: one jitted
+``lax.scan`` over serving epochs carries the whole fleet's state — battery
+charge (N,), traffic-process state, harvest-process state — so millions of
+clients answering diurnal query traffic run as a single compiled program.
+
+Per epoch t (order of operations; `energy.battery` contract on the energy
+side):
+
+    harvest, hstate  = harvest.sample(fold_in(ekey, 0), t, hstate)
+    requests, tstate = traffic.sample(fold_in(ekey, 1), t, tstate)
+    available, aux   = battery.absorb(bat, charge, harvest)
+    mode             = policy.decide(available, offered full/short cost)
+    served           = min(admitted, floor(available / per_request_cost))
+    charge           = available - served * per_request_cost
+    [train]          = fleet_mask on the *remaining* charge, then drain
+
+The physical gate mirrors the fleet simulator's: whatever admission wants, a
+client never serves more requests than its battery covers — the shortfall is
+*deadline-missed* telemetry (admitted but unaffordable), distinct from
+*shed* (refused up front).  The optional `TrainLoad` makes serving load and
+training cadence compete for the same battery joules inside one scan:
+serving drains first (user-facing traffic has priority), the battery-gated
+training mask sees only what is left.
+
+Telemetry per epoch (each an (E,) array in ``ServeResult.stats``): the
+energy seven of the fleet simulator (participants / harvested / consumed /
+leaked / overflowed / mean_charge / frac_depleted — so
+`energy.control.Telemetry.from_stats` reads both) plus the serving ledger:
+offered, served_full, served_short, shed, deadline_missed, tokens_decoded,
+consumed_serve, and consumed_train under a `TrainLoad`.  Request
+conservation holds by construction (tested):
+
+    offered == served_full + served_short + shed + deadline_missed
+
+Mesh sharding is exactly DESIGN.md §7's: ``simulate_serve(..., mesh=)``
+shards the client axis of every ``(N,)`` tensor over the mesh's data axes
+(`dist.sharding.fleet_spec`), pads N up with edge-replicated phantom clients
+excluded from telemetry by a ``valid`` weight, and is bit-exact with the
+host-local path (per-client RNG, `energy.arrivals.client_uniform`).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.scheduling import Policy
+from repro.dist import collectives
+from repro.dist import sharding as dist_sharding
+from repro.energy import battery as battery_lib
+from repro.energy.costs import DecodeCostModel, DeviceCostModel
+from repro.energy.fleet import (_pad_clients, _place_fleet, _slice_clients,
+                                fleet_mask)
+from repro.serve.qos import DEGRADED, FULL, QoSSpec, SHED
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    """Serving-simulation hyperparameters."""
+
+    num_clients: int
+    seed: int = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainLoad:
+    """A federated-training load sharing the serving fleet's batteries.
+
+    The training mask (`energy.fleet.fleet_mask`, ``policy`` over ``E``) is
+    evaluated on the charge LEFT after serving and drains ``round_cost``
+    joules per participant per epoch — one epoch doubles as one global
+    round.  Registered pytree: ``E``/``round_cost``/``threshold`` are traced
+    leaves (the server controller re-prices them between chunks without
+    retracing), ``policy`` is structure.
+    """
+
+    E: jax.Array            # (N,) int32 renewal cycles
+    round_cost: jax.Array   # (N,) f32 joules per participated round
+    threshold: jax.Array = 1.0   # THRESHOLD policy margin
+    policy: Policy = Policy.SUSTAINABLE
+
+    @classmethod
+    def create(cls, E, cost, local_steps: int = 5, threshold: float = 1.0,
+               policy: Policy = Policy.SUSTAINABLE) -> "TrainLoad":
+        """Price a `DeviceCostModel` (or scalar joules) at ``local_steps``."""
+        E = jnp.asarray(E, jnp.int32)
+        if isinstance(cost, DeviceCostModel):
+            cost = cost.round_cost(local_steps)
+        round_cost = jnp.broadcast_to(jnp.asarray(cost, jnp.float32), E.shape)
+        return cls(E=E, round_cost=round_cost,
+                   threshold=jnp.float32(threshold), policy=Policy(policy))
+
+
+jax.tree_util.register_dataclass(
+    TrainLoad, ["E", "round_cost", "threshold"], ["policy"])
+
+
+@dataclasses.dataclass
+class ServeResult:
+    stats: dict[str, np.ndarray | jax.Array]   # each (E,) (or (E, N) modes)
+    final_charge: jax.Array                    # (N,)
+    modes: jax.Array | None = None             # (E, N) int32 when recorded
+    final_tstate: Any = None                   # traffic state after E epochs
+    final_hstate: Any = None                   # harvest state after E epochs
+
+    @property
+    def final_state(self):
+        """(charge, traffic state, harvest state) — feed back via
+        ``simulate_serve(state=)`` to continue the horizon."""
+        return self.final_charge, self.final_tstate, self.final_hstate
+
+    def _rate(self, key):
+        offered = np.maximum(np.asarray(self.stats["offered"], np.float64),
+                             1e-12)
+        return np.asarray(self.stats[key], np.float64) / offered
+
+    @property
+    def shed_rate(self):
+        """(E,) fraction of offered requests refused up front."""
+        return self._rate("shed")
+
+    @property
+    def deadline_miss_rate(self):
+        """(E,) fraction of offered requests admitted but unaffordable."""
+        return self._rate("deadline_missed")
+
+    @property
+    def served_rate(self):
+        """(E,) fraction of offered requests answered (either grade)."""
+        return self._rate("served_full") + self._rate("served_short")
+
+    @property
+    def joules_per_token(self):
+        """Scalar: serving joules per generated token over the horizon."""
+        toks = float(np.asarray(self.stats["tokens_decoded"]).sum())
+        return float(np.asarray(self.stats["consumed_serve"]).sum()) \
+            / max(toks, 1e-12)
+
+
+def _serve_epoch(traffic, harvest, bat: battery_lib.BatteryConfig,
+                 cost: DecodeCostModel, qos: QoSSpec, policy, train,
+                 valid, base_key, seed, admit, carry, t):
+    """One serving epoch; shared by the jitted scan body and the eager
+    (``use_jit=False``) parity path.  ``seed`` and ``admit`` (the
+    controller's admission-threshold scale) are traced scalars; only the
+    policy/process/train *structure* changes the program."""
+    charge, tstate, hstate = carry
+    ekey = jax.random.fold_in(base_key, t)
+    harvest_j, hstate = harvest.sample(jax.random.fold_in(ekey, 0), t, hstate)
+    requests, tstate = traffic.sample(jax.random.fold_in(ekey, 1), t, tstate)
+    requests = jnp.asarray(requests, jnp.float32)
+    available, aux = battery_lib.absorb(bat, charge, harvest_j)
+
+    full_req = jnp.broadcast_to(
+        jnp.asarray(qos.request_cost(cost), jnp.float32), requests.shape)
+    short_req = jnp.broadcast_to(
+        jnp.asarray(qos.request_cost(cost, degraded=True), jnp.float32),
+        requests.shape)
+    mode = policy.scaled(admit).decide(available, requests * full_req,
+                                       requests * short_req)
+    per_req = jnp.where(mode == FULL, full_req, short_req)
+    admitted = jnp.where(mode > SHED, requests, 0.0)
+    affordable = jnp.floor(available / jnp.maximum(per_req, 1e-20))
+    served = jnp.minimum(admitted, affordable)
+    consumed_serve = served * per_req
+    charge = battery_lib.drain(available, consumed_serve)
+
+    served_full = jnp.where(mode == FULL, served, 0.0)
+    served_short = jnp.where(mode == DEGRADED, served, 0.0)
+    shed = jnp.where(mode == SHED, requests, 0.0)
+    missed = admitted - served
+    depleted = (available < short_req).astype(jnp.float32)
+
+    if train is not None:
+        tmask = fleet_mask(train.policy, seed, t, train.E, charge,
+                           train.round_cost, threshold=train.threshold)
+        consumed_train = tmask * train.round_cost
+        charge = battery_lib.drain(charge, consumed_train)
+    else:
+        tmask = jnp.zeros_like(charge)
+        consumed_train = jnp.zeros_like(charge)
+
+    stats = {
+        # the fleet simulator's energy seven (Telemetry.from_stats reads both)
+        "participants": collectives.masked_total(tmask, valid),
+        "harvested": collectives.masked_total(harvest_j, valid),
+        "consumed": collectives.masked_total(consumed_serve + consumed_train,
+                                             valid),
+        "leaked": collectives.masked_total(aux["leaked"], valid),
+        "overflowed": collectives.masked_total(aux["overflow"], valid),
+        "mean_charge": collectives.masked_average(charge, valid),
+        "frac_depleted": collectives.masked_average(depleted, valid),
+        # the serving ledger
+        "offered": collectives.masked_total(requests, valid),
+        "served_full": collectives.masked_total(served_full, valid),
+        "served_short": collectives.masked_total(served_short, valid),
+        "shed": collectives.masked_total(shed, valid),
+        "deadline_missed": collectives.masked_total(missed, valid),
+        "tokens_decoded": collectives.masked_total(
+            qos.decoded_tokens(served_full, served_short), valid),
+        "consumed_serve": collectives.masked_total(consumed_serve, valid),
+        "consumed_train": collectives.masked_total(consumed_train, valid),
+    }
+    return (charge, tstate, hstate), mode, stats
+
+
+@partial(jax.jit, static_argnames=("num_epochs", "record_modes"))
+def _run_serve_scan(traffic, harvest, bat, cost, qos, policy, train, valid,
+                    base_key, charge0, tstate0, hstate0, seed, admit, offset,
+                    *, num_epochs, record_modes):
+    """The whole-fleet serving scan, jitted ONCE per (process/policy/train
+    structure, shapes, horizon): every process, the `QoSSpec`, the
+    `DecodeCostModel` and the admission policy are registered pytrees, and
+    seed/admit/offset are traced scalars — so repeat calls (seed sweeps,
+    admission-threshold sweeps, chunked controller runs) hit the jit cache
+    instead of retracing."""
+    step = partial(_serve_epoch, traffic, harvest, bat, cost, qos, policy,
+                   train, valid, base_key, seed, admit)
+
+    def body(carry, t):
+        carry, mode, stats = step(carry, t)
+        if record_modes:
+            stats = dict(stats, mode=mode)
+        return carry, stats
+
+    return jax.lax.scan(body, (charge0, tstate0, hstate0),
+                        offset + jnp.arange(num_epochs, dtype=jnp.int32))
+
+
+def simulate_serve(traffic, harvest, bat: battery_lib.BatteryConfig,
+                   cost: DecodeCostModel, qos: QoSSpec, policy,
+                   cfg: ServeConfig, num_epochs: int, *,
+                   train: TrainLoad | None = None, admit: float = 1.0,
+                   record_modes: bool = False, use_jit: bool = True,
+                   mesh=None, pad_to: int | None = None, state=None,
+                   epoch_offset: int = 0) -> ServeResult:
+    """Simulate ``num_epochs`` serving epochs of battery-gated admission for
+    the whole fleet.
+
+    Args:
+      traffic: request process (`serve.traffic` contract) sized to the fleet.
+      harvest: energy-arrival process (`energy.arrivals` contract).
+      bat: `BatteryConfig` (scalar or per-client fields).
+      cost: `DecodeCostModel` pricing requests.
+      qos: `QoSSpec` token budgets for the full/degraded grades.
+      policy: admission policy (`serve.admission`).
+      cfg: `ServeConfig`.
+      num_epochs: E.
+      train: optional `TrainLoad` — a federated-training schedule competing
+        for the same batteries (drained AFTER serving each epoch).
+      admit: admission-threshold scale (the server controller's knob); a
+        traced scalar, so sweeping it hits the jit cache.
+      record_modes: also return the (E, N) admission modes — O(E*N) memory,
+        for tests/small fleets.
+      use_jit: jit the whole scan (default); ``False`` runs the identical
+        epoch function eagerly (the jit/no-jit parity oracle).
+      mesh: optional ``jax.sharding.Mesh`` — shard the client axis over the
+        mesh's data axes exactly like `energy.fleet.simulate_fleet` (padding
+        + valid-masked telemetry; bit-exact with host-local).
+      pad_to: force the padded fleet width (tests the padding path without a
+        multi-device mesh).
+      state: optional ``(charge, traffic_state, harvest_state)`` to resume
+        from (``ServeResult.final_state`` of a previous chunk).
+      epoch_offset: global index of the first simulated epoch — keeps the
+        per-epoch RNG stream and diurnal phase aligned across chunked runs.
+
+    Returns:
+      `ServeResult` with per-epoch aggregate telemetry (host numpy arrays).
+    """
+    n = cfg.num_clients
+    for name, proc in (("traffic", traffic), ("harvest", harvest)):
+        if proc.num_clients != n:
+            raise ValueError(
+                f"{name} process is sized for {proc.num_clients} clients, "
+                f"ServeConfig.num_clients={n}")
+    base_key = jax.random.PRNGKey(cfg.seed)
+    if state is None:
+        charge0, tstate0, hstate0 = bat.init(n), traffic.init(), harvest.init()
+    else:
+        charge0, tstate0, hstate0 = state
+        charge0 = jnp.asarray(charge0, jnp.float32)
+
+    # --- client-axis padding (mesh divisibility and/or explicit pad_to) ----
+    n_pad = n
+    if mesh is not None:
+        if not use_jit:
+            raise ValueError("mesh-sharded simulate_serve requires use_jit="
+                             "True (GSPMD partitions the jitted scan)")
+        axis = dist_sharding.mesh_axis_size(
+            mesh, dist_sharding.data_axes(mesh))
+        n_pad = -(-n // axis) * axis
+    if pad_to is not None:
+        if pad_to < n_pad:
+            raise ValueError(f"pad_to={pad_to} is below the required fleet "
+                             f"width {n_pad}")
+        if mesh is not None and pad_to % axis:
+            raise ValueError(f"pad_to={pad_to} must be a multiple of the "
+                             f"data-axis product {axis}")
+        n_pad = pad_to
+    valid = (jnp.arange(n_pad) < n).astype(jnp.float32)
+    (traffic, harvest, bat, cost, qos, policy, train, charge0, tstate0,
+     hstate0) = _pad_clients(
+        (traffic, harvest, bat, cost, qos, policy, train, charge0, tstate0,
+         hstate0), n, n_pad)
+    if mesh is not None:
+        (traffic, harvest, bat, cost, qos, policy, train, valid, charge0,
+         tstate0, hstate0) = _place_fleet(
+            (traffic, harvest, bat, cost, qos, policy, train, valid, charge0,
+             tstate0, hstate0), n_pad, mesh)
+        base_key = jax.device_put(
+            base_key, dist_sharding.shardings_of(
+                jax.sharding.PartitionSpec(), mesh))
+
+    seed = jnp.uint32(cfg.seed)
+    admit_t = jnp.float32(admit)
+    offset = jnp.int32(epoch_offset)
+    if use_jit:
+        (charge, tstate, hstate), stats = _run_serve_scan(
+            traffic, harvest, bat, cost, qos, policy, train, valid, base_key,
+            charge0, tstate0, hstate0, seed, admit_t, offset,
+            num_epochs=num_epochs, record_modes=record_modes)
+    else:
+        step = partial(_serve_epoch, traffic, harvest, bat, cost, qos,
+                       policy, train, valid, base_key, seed, admit_t)
+        carry, outs = (charge0, tstate0, hstate0), []
+        for t in range(num_epochs):
+            carry, mode, s = step(carry, jnp.int32(epoch_offset + t))
+            outs.append(dict(s, mode=mode) if record_modes else s)
+        charge, tstate, hstate = carry
+        stats = {k: jnp.stack([o[k] for o in outs]) for k in outs[0]}
+    modes = stats.pop("mode", None) if record_modes else None
+    if modes is not None:
+        modes = modes[:, :n]
+    stats = {k: np.asarray(v) for k, v in stats.items()}
+    return ServeResult(stats=stats, final_charge=charge[:n], modes=modes,
+                       final_tstate=_slice_clients(tstate, n, n_pad),
+                       final_hstate=_slice_clients(hstate, n, n_pad))
+
+
+def run_serve_controlled(traffic, harvest, bat, cost: DecodeCostModel,
+                         qos: QoSSpec, policy, cfg: ServeConfig,
+                         num_epochs: int, controller, *,
+                         train_cost=None, control_every: int = 24,
+                         mesh=None, record_modes: bool = False):
+    """Closed-loop serving horizon: `simulate_serve` in chunks of
+    ``control_every`` epochs, with an `energy.control.ServerController`
+    adapting its knobs between chunks — the admission-threshold scale
+    (`AdmissionRule` on ``admit``), and under a ``train_cost``
+    (`DeviceCostModel` or scalar joules) the competing training load's
+    cadence ``T`` and per-group cycles ``E`` (`CadenceRule`/`BudgetRule`) —
+    so serving load and training cadence bargain over the same batteries.
+
+    Battery/traffic/harvest state flows across chunks through
+    ``ServeResult.final_state`` and the absolute epoch index through
+    ``epoch_offset``; ``admit``/``E``/``round_cost`` are traced, so every
+    chunk after the first hits the jit cache.
+
+    Returns ``(ServeResult over the full horizon, controller)``.
+    """
+    n = cfg.num_clients
+    state = None
+    chunks: list[ServeResult] = []
+    offset = 0
+    while offset < num_epochs:
+        chunk = min(control_every, num_epochs - offset)
+        train = None if train_cost is None else TrainLoad.create(
+            controller.client_E(n), train_cost, local_steps=controller.T)
+        res = simulate_serve(
+            traffic, harvest, bat, cost, qos, policy, cfg, chunk,
+            train=train, admit=controller.state.admit, mesh=mesh,
+            record_modes=record_modes, state=state, epoch_offset=offset)
+        state = res.final_state
+        chunks.append(res)
+        controller.update(res.stats, n)
+        offset += chunk
+    stats = {k: np.concatenate([c.stats[k] for c in chunks])
+             for k in chunks[0].stats}
+    modes = (np.concatenate([np.asarray(c.modes) for c in chunks])
+             if record_modes else None)
+    out = ServeResult(stats=stats, final_charge=chunks[-1].final_charge,
+                      modes=modes, final_tstate=chunks[-1].final_tstate,
+                      final_hstate=chunks[-1].final_hstate)
+    return out, controller

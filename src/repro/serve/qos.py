@@ -1,0 +1,56 @@
+"""QoS tiers for battery-gated serving: what a request costs at each grade.
+
+A request is served at one of two generation grades — **full** (the product
+experience) or **degraded** (a short-generation answer, the middle rung of
+admission control: cheaper than full service, better than shedding) — or it
+is **shed** (dropped; the user gets nothing).  `QoSSpec` holds the token
+budgets that price the two grades through a `DecodeCostModel`
+(`repro.energy.costs`): a request = prefill over ``prompt_tokens`` + one
+decode step per generated token + one response upload.
+
+Registered pytree (token budgets are leaves, scalar or per-client (N,)), so
+a spec rides through the jitted serving scan without retracing.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.energy.costs import DecodeCostModel
+
+# admission modes (`serve.admission` decides one per client per epoch)
+SHED, DEGRADED, FULL = 0, 1, 2
+
+
+@dataclasses.dataclass(frozen=True)
+class QoSSpec:
+    """Token budgets of the two service grades.
+
+    ``short_decode_tokens < full_decode_tokens`` is what makes the degraded
+    tier an admission-control rung: same prompt, shorter answer, smaller
+    battery debit.
+    """
+
+    prompt_tokens: float | jax.Array = 128.0
+    full_decode_tokens: float | jax.Array = 256.0
+    short_decode_tokens: float | jax.Array = 32.0
+
+    def request_cost(self, model: DecodeCostModel,
+                     degraded: bool = False) -> jax.Array:
+        """Joules for one request at the given grade."""
+        toks = self.short_decode_tokens if degraded else self.full_decode_tokens
+        return model.request_cost(self.prompt_tokens, toks)
+
+    def decoded_tokens(self, served_full, served_short) -> jax.Array:
+        """Generated-token count for a (full, degraded) served split — the
+        denominator of the simulator's joules/token telemetry."""
+        return (jnp.asarray(served_full, jnp.float32) * self.full_decode_tokens
+                + jnp.asarray(served_short, jnp.float32)
+                * self.short_decode_tokens)
+
+
+jax.tree_util.register_dataclass(
+    QoSSpec,
+    ["prompt_tokens", "full_decode_tokens", "short_decode_tokens"], [])

@@ -1,0 +1,156 @@
+"""Composable request-arrival processes for the serving fleet.
+
+Mirrors `repro.energy.arrivals` exactly: one functional contract, vectorized
+over the fleet —
+
+    state0 = traffic.init()                       # pytree of (N,)-leaved arrays (or ())
+    requests, state1 = traffic.sample(key, t, state0)  # requests: (N,) f32 counts
+
+``sample`` is pure and shape-stable (drives the jitted serving scan,
+`serve.fleet_serve`), and randomness is derived **per client**
+(`energy.arrivals.client_uniform`: ``fold_in(key, i)`` then a scalar draw),
+never from the draw's shape — so traffic is *padding/partition-invariant*:
+the mesh-sharded serving path pads N up to the client-axis size and still
+reproduces host-local request streams bit-exactly on the real clients.
+Poisson counts go through `energy.arrivals.truncated_poisson` (fixed-chain
+inverse-CDF), the same kernel the energy side uses for `CompoundPoisson`.
+
+Processes
+---------
+* ``DiurnalPoisson`` — per-client Poisson with a sinusoidal diurnal rate
+  profile (the "millions of users" day/night query cycle): ``rate_i(t) =
+  base_i * (1 + swing_i * sin(2*pi*(t + phase_i) / period))``.  ``swing=0``
+  degenerates to a homogeneous Poisson stream.
+* ``MMPP`` — bursty Markov-modulated Poisson: a two-state (calm/burst)
+  per-client regime chain (the `MarkovSolar` transition structure) selects
+  the epoch's Poisson rate.  Models flash crowds / hot sessions.
+* ``Constant`` — exactly ``rate_i`` requests every epoch; the deterministic
+  degenerate case (and the exact-arithmetic config of the parity oracle).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.energy.arrivals import (PyTree, _per_client, _pytree,
+                                   client_uniform, truncated_poisson)
+
+
+@_pytree(("base", "swing", "phase"), ("period", "max_requests"))
+@dataclasses.dataclass(frozen=True)
+class DiurnalPoisson:
+    """Poisson requests at a diurnal (period-``period`` sinusoidal) rate.
+
+    ``base_i`` is client i's mean requests per epoch averaged over a day;
+    ``swing_i`` in [0, 1] is the peak-to-mean modulation depth; ``phase_i``
+    shifts client i's local time (time zones: a fleet with scattered phases
+    has a flatter *aggregate* profile than any one client).
+    """
+
+    base: jax.Array    # (N,) mean requests per epoch
+    swing: jax.Array   # (N,) diurnal modulation depth in [0, 1]
+    phase: jax.Array   # (N,) local-time offset, epochs
+    period: int = 24   # epochs per day
+    max_requests: int = 16
+
+    @classmethod
+    def create(cls, num_clients: int, base=1.0, swing=0.8, phase=0.0,
+               period: int = 24, max_requests: int = 16) -> "DiurnalPoisson":
+        return cls(_per_client(base, num_clients),
+                   _per_client(swing, num_clients),
+                   _per_client(phase, num_clients), period, max_requests)
+
+    @property
+    def num_clients(self) -> int:
+        return self.base.shape[0]
+
+    def rate_at(self, t) -> jax.Array:
+        """(N,) instantaneous mean requests per epoch at epoch ``t``."""
+        ang = 2.0 * jnp.pi * (jnp.asarray(t, jnp.float32) + self.phase) \
+            / self.period
+        return self.base * (1.0 + self.swing * jnp.sin(ang))
+
+    def init(self) -> PyTree:
+        return ()
+
+    def sample(self, key, t, state):
+        u = client_uniform(key, self.num_clients)
+        k = truncated_poisson(u, self.rate_at(t), self.max_requests)
+        return k.astype(jnp.float32), state
+
+
+@_pytree(("p_stay_calm", "p_stay_burst", "calm_rate", "burst_rate"),
+         ("max_requests",))
+@dataclasses.dataclass(frozen=True)
+class MMPP:
+    """Markov-modulated Poisson process: bursty request traffic.
+
+    A per-client two-state regime chain (stay calm with ``p_stay_calm``,
+    stay bursting with ``p_stay_burst``; expected burst length
+    ``1/(1-p_stay_burst)`` epochs) picks the epoch's Poisson rate.
+
+    State: (N,) int32 regime (1 = burst); all clients start calm.
+    """
+
+    p_stay_calm: jax.Array   # (N,)
+    p_stay_burst: jax.Array  # (N,)
+    calm_rate: jax.Array     # (N,) mean requests per calm epoch
+    burst_rate: jax.Array    # (N,) mean requests per bursting epoch
+    max_requests: int = 16
+
+    @classmethod
+    def create(cls, num_clients: int, p_stay_calm=0.9, p_stay_burst=0.7,
+               calm_rate=0.5, burst_rate=4.0,
+               max_requests: int = 16) -> "MMPP":
+        return cls(_per_client(p_stay_calm, num_clients),
+                   _per_client(p_stay_burst, num_clients),
+                   _per_client(calm_rate, num_clients),
+                   _per_client(burst_rate, num_clients), max_requests)
+
+    @property
+    def num_clients(self) -> int:
+        return self.calm_rate.shape[0]
+
+    def init(self) -> PyTree:
+        return jnp.zeros((self.num_clients,), jnp.int32)
+
+    def sample(self, key, t, state):
+        del t
+        k1, k2 = jax.random.split(key)
+        u = client_uniform(k1, self.num_clients)
+        is_burst = state == 1
+        burst_next = jnp.where(is_burst, u < self.p_stay_burst,
+                               u >= self.p_stay_calm)
+        rate = jnp.where(burst_next, self.burst_rate, self.calm_rate)
+        k = truncated_poisson(client_uniform(k2, self.num_clients), rate,
+                              self.max_requests)
+        return k.astype(jnp.float32), burst_next.astype(jnp.int32)
+
+
+@_pytree(("rate",))
+@dataclasses.dataclass(frozen=True)
+class Constant:
+    """Exactly ``rate_i`` requests every epoch (no randomness).
+
+    Integer-valued rates keep every downstream quantity on an exact
+    fp32-representable grid — the parity oracle's exact-arithmetic traffic.
+    """
+
+    rate: jax.Array  # (N,) requests per epoch
+
+    @classmethod
+    def create(cls, num_clients: int, rate=1.0) -> "Constant":
+        return cls(_per_client(rate, num_clients))
+
+    @property
+    def num_clients(self) -> int:
+        return self.rate.shape[0]
+
+    def init(self) -> PyTree:
+        return ()
+
+    def sample(self, key, t, state):
+        del key, t
+        return self.rate, state

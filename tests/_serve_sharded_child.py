@@ -1,0 +1,114 @@
+"""Child process for ``test_serve.py``: runs under
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` (the tier-1 pytest
+process must keep the real single CPU device — see conftest) and asserts
+mesh-sharded vs host-local bit-exactness of `simulate_serve` for every
+admission policy, on N both divisible and not divisible by the client-axis
+size, plus jit-cache reuse on the sharded path.  Exits non-zero on any
+failure; the parent test checks the return code.
+"""
+import numpy as np
+
+import jax
+
+from repro.energy import BatteryConfig, Bernoulli, DecodeCostModel, MarkovSolar
+from repro.serve import (BatteryGated, ChargeGated, Constant, DiurnalPoisson,
+                         EnergyAgnostic, QoSSpec, ServeConfig, TrainLoad,
+                         simulate_serve)
+from repro.serve.fleet_serve import _run_serve_scan
+
+QOS = QoSSpec(prompt_tokens=64.0, full_decode_tokens=128.0,
+              short_decode_tokens=32.0)
+
+
+def _policies(n):
+    return [EnergyAgnostic(), BatteryGated.create(n, hi=1.0, lo=1.0),
+            ChargeGated.create(n, hi=1.0, lo=0.25)]
+
+
+def check_parity(mesh, n, epochs=30):
+    """Bit-exact modes AND telemetry: exact-arithmetic config (zero leak,
+    integer request counts, dyadic per-token joules), so every fp32 partial
+    sum is exact and the 8-way reduction tree cannot round differently than
+    the single-device one."""
+    traffic = Constant.create(n, rate=2.0)
+    harvest = Bernoulli.create(n, prob=0.375, amount=1.25)
+    bat = BatteryConfig(capacity=2.5, leak=0.0, init_charge=0.5)
+    cost = DecodeCostModel(2.0 ** -8, 2.0 ** -9, 2.0 ** -6)
+    train = TrainLoad.create(np.full(n, 4), 0.25)
+    for pol in _policies(n):
+        cfg = ServeConfig(num_clients=n, seed=3)
+        kw = dict(record_modes=True, train=train)
+        host = simulate_serve(traffic, harvest, bat, cost, QOS, pol, cfg,
+                              epochs, **kw)
+        shard = simulate_serve(traffic, harvest, bat, cost, QOS, pol, cfg,
+                               epochs, mesh=mesh, **kw)
+        assert np.array_equal(np.asarray(host.modes),
+                              np.asarray(shard.modes)), (n, pol, "modes")
+        assert np.array_equal(np.asarray(host.final_charge),
+                              np.asarray(shard.final_charge)), (n, pol)
+        for k in host.stats:
+            assert np.array_equal(host.stats[k], shard.stats[k]), \
+                (n, pol, k, host.stats[k] - shard.stats[k])
+
+
+def check_stochastic(mesh, n, epochs=40):
+    """Diurnal Poisson traffic + Markov solar + leaky battery: modes/charge
+    stay bit-exact (all per-client state evolution is elementwise);
+    telemetry reductions agree to float tolerance."""
+    traffic = DiurnalPoisson.create(n, base=1.5, swing=0.9,
+                                    phase=np.arange(n) % 24)
+    harvest = MarkovSolar.create(n, day_mean=0.8)
+    bat = BatteryConfig(capacity=2.5, leak=0.03, init_charge=0.5)
+    cost = DecodeCostModel(1e-3, 2e-3, 5e-2)
+    cfg = ServeConfig(num_clients=n, seed=1)
+    pol = BatteryGated.create(n, hi=1.2, lo=1.0)
+    host = simulate_serve(traffic, harvest, bat, cost, QOS, pol, cfg, epochs,
+                          record_modes=True)
+    shard = simulate_serve(traffic, harvest, bat, cost, QOS, pol, cfg, epochs,
+                           record_modes=True, mesh=mesh)
+    assert np.array_equal(np.asarray(host.modes), np.asarray(shard.modes))
+    assert np.array_equal(np.asarray(host.final_charge),
+                          np.asarray(shard.final_charge))
+    for k in host.stats:
+        assert np.allclose(host.stats[k], shard.stats[k], rtol=1e-5), k
+
+
+def check_sharded_cache_reuse(mesh, n):
+    """Repeat sharded calls with different seeds/admission scales must hit
+    the jit cache (same shapes, same shardings)."""
+    traffic = DiurnalPoisson.create(n, base=1.0)
+    harvest = Bernoulli.create(n, prob=0.4)
+    bat = BatteryConfig(capacity=2.0, leak=0.01)
+    cost = DecodeCostModel(1e-3, 2e-3, 5e-2)
+    pol = BatteryGated.create(n)
+
+    def run(seed, admit):
+        cfg = ServeConfig(num_clients=n, seed=seed)
+        return simulate_serve(traffic, harvest, bat, cost, QOS, pol, cfg, 10,
+                              admit=admit, mesh=mesh)
+
+    run(0, 1.0)
+    size = _run_serve_scan._cache_size()
+    run(7, 1.5)
+    run(11, 0.5)
+    assert _run_serve_scan._cache_size() == size, \
+        "sharded simulate_serve retraced on a seed/admit sweep"
+
+
+def main():
+    n_dev = len(jax.devices())
+    assert n_dev == 8, f"expected 8 emulated CPU devices, got {n_dev}"
+    mesh = jax.make_mesh((8,), ("data",))
+    check_parity(mesh, n=24)    # divisible by the 8-way client axis
+    check_parity(mesh, n=21)    # padded 21 -> 24 (phantom-lane path)
+    check_stochastic(mesh, n=24)
+    check_stochastic(mesh, n=21)
+    check_sharded_cache_reuse(mesh, n=32)
+    # a mesh with a model axis: serve state shards over data axes only
+    mesh2 = jax.make_mesh((4, 2), ("data", "model"))
+    check_parity(mesh2, n=21)   # padded 21 -> 24 (4-way data axis)
+    print("serve sharded parity OK")
+
+
+if __name__ == "__main__":
+    main()

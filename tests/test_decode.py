@@ -89,3 +89,65 @@ def test_hybrid_cache_is_window_bounded():
     model = get_model(cfg)
     cache = model.init_cache(B, 10_000)  # requested length must be ignored
     assert cache["attn"]["k"].shape[2] == cfg.local_window
+
+
+# --------------------------------------------------- generation / sampling --
+
+_GEN_CACHE = {}
+
+
+def _gen_setup(arch="mamba2-1.3b", gen=6):
+    """One model/params per arch across the generation tests — with
+    `serve._jitted_steps`' lru cache this compiles prefill/decode once for
+    the whole module instead of per `generate` call."""
+    from repro.launch.serve import generate
+    if arch not in _GEN_CACHE:
+        cfg = get_smoke_config(arch)
+        model = get_model(cfg)
+        rng = jax.random.PRNGKey(0)
+        params = model.init_params(rng)
+        prompt = {"tokens": jax.random.randint(rng, (B, S), 0,
+                                               cfg.vocab_size)}
+        _GEN_CACHE[arch] = (cfg, model, params, prompt)
+    cfg, model, params, prompt = _GEN_CACHE[arch]
+    kw = dict(gen_steps=gen, cache_len=S + gen + 1)
+    return generate, cfg, model, params, prompt, kw
+
+
+def test_generate_sampling_path():
+    """The categorical (temperature) path: valid token range, deterministic
+    given the rng, and different draws for different keys at a hot
+    temperature (the path `--sample` exercises — previously dead code)."""
+    generate, cfg, model, params, prompt, kw = _gen_setup()
+    t1 = generate(model, params, prompt, greedy=False, temperature=2.0,
+                  rng=jax.random.PRNGKey(1), **kw)
+    t1b = generate(model, params, prompt, greedy=False, temperature=2.0,
+                   rng=jax.random.PRNGKey(1), **kw)
+    t2 = generate(model, params, prompt, greedy=False, temperature=2.0,
+                  rng=jax.random.PRNGKey(2), **kw)
+    a1, a2 = np.asarray(t1), np.asarray(t2)
+    assert a1.shape == (B, kw["gen_steps"] + 1)
+    assert np.all(a1 >= 0) and np.all(a1 < cfg.vocab_size)
+    assert np.array_equal(a1, np.asarray(t1b)), "sampling not reproducible"
+    assert not np.array_equal(a1, a2), "rng does not reach the sampler"
+
+
+def test_generate_low_temperature_matches_greedy():
+    """T -> 0 sampling collapses onto argmax: the two decode paths agree."""
+    generate, cfg, model, params, prompt, kw = _gen_setup()
+    g = generate(model, params, prompt, greedy=True, **kw)
+    s = generate(model, params, prompt, greedy=False, temperature=1e-4,
+                 rng=jax.random.PRNGKey(7), **kw)
+    assert np.array_equal(np.asarray(g), np.asarray(s))
+
+
+def test_generate_sampling_requires_rng():
+    generate, cfg, model, params, prompt, kw = _gen_setup()
+    with pytest.raises(ValueError, match="requires an rng"):
+        generate(model, params, prompt, greedy=False, rng=None, **kw)
+    # T=0 would turn logits into +/-inf and sample the first inf token —
+    # refused, not silently wrong
+    for bad_t in (0.0, -1.0):
+        with pytest.raises(ValueError, match="temperature must be > 0"):
+            generate(model, params, prompt, greedy=False, temperature=bad_t,
+                     rng=jax.random.PRNGKey(0), **kw)

@@ -11,10 +11,10 @@ from hypothesis import given, settings, strategies as st
 from repro.core import (EnergyProfile, FedConfig, Policy, energy_feasible,
                         participation_mask, simulate, sustainable_schedule)
 from repro.energy import (BatteryConfig, Bernoulli, BudgetRule, CadenceRule,
-                          CompoundPoisson, ControlBounds, DeterministicRenewal,
-                          DeviceCostModel, EnergyLoop, FleetConfig,
-                          MarkovSolar, Scaled, ServerController, Sum,
-                          Telemetry, costs, fleet_mask, run_controlled,
+                          CompoundPoisson, ControlBounds, DecodeCostModel,
+                          DeterministicRenewal, DeviceCostModel, EnergyLoop,
+                          FleetConfig, MarkovSolar, Scaled, ServerController,
+                          Sum, Telemetry, costs, fleet_mask, run_controlled,
                           simulate_fleet)
 from repro.energy import battery as battery_lib
 from repro.optim import sgd
@@ -202,6 +202,44 @@ def test_cost_model_from_dryrun_record():
                       + 2 * er["joules_per_upload"])
 
 
+def test_decode_cost_model_from_dryrun_oracle():
+    """`DecodeCostModel.from_dryrun` against hand-computed joules: a decode
+    record's FLOPs cover ONE step over the registered shape's whole batch
+    (decode_32k: B=128), a prefill record's cover batch x seq
+    (prefill_32k: 32 x 32768); request_cost composes them per token."""
+    dec = {"cost": {"flops_per_device": 2.56e12}, "shape": "decode_32k"}
+    pre = {"cost": {"flops_per_device": 2.097152e15},
+           "shape": "prefill_32k"}
+    m = DecodeCostModel.from_dryrun(dec, prefill_record=pre,
+                                    bytes_per_response=512.0)
+    assert np.isclose(m.joules_per_decode_step,
+                      2.56e12 / 128 * costs.JOULES_PER_FLOP)
+    assert np.isclose(m.joules_per_prefill_token,
+                      2.097152e15 / (32 * 32768) * costs.JOULES_PER_FLOP)
+    assert np.isclose(m.joules_per_response_upload,
+                      512.0 * costs.JOULES_PER_BYTE_RADIO)
+    # one request = S prefill tokens + G decode steps + one upload
+    S, G = 100, 40
+    want = (S * m.joules_per_prefill_token + G * m.joules_per_decode_step
+            + m.joules_per_response_upload)
+    assert np.isclose(float(m.request_cost(S, G)), want)
+    # no prefill record: prompt tokens priced at the decode per-token figure;
+    # explicit batch overrides the shape-registry lookup
+    m2 = DecodeCostModel.from_dryrun(dec, batch=64)
+    assert np.isclose(m2.joules_per_decode_step,
+                      2.56e12 / 64 * costs.JOULES_PER_FLOP)
+    assert np.isclose(m2.joules_per_prefill_token, m2.joules_per_decode_step)
+
+
+def test_decode_cost_model_from_params():
+    """Analytic pricing: ~2*N FLOPs per token on both phases."""
+    m = DecodeCostModel.from_params(1e9)
+    per_tok = 2.0 * 1e9 * costs.JOULES_PER_FLOP
+    assert np.isclose(m.joules_per_prefill_token, per_tok)
+    assert np.isclose(m.joules_per_decode_step, per_tok)
+    assert float(m.request_cost(0, 1)) > per_tok  # upload included
+
+
 # ------------------------------------------------- policy registry edges ---
 
 def test_threshold_policy_has_no_stateless_schedule():
@@ -369,6 +407,116 @@ def test_controller_scalar_E0_broadcasts_per_client():
     assert any(0 < p < n for p in parts), parts
     with pytest.raises(ValueError, match="covers 3 clients"):
         ServerController(T0=5, E0=[1, 2, 4], rules=()).client_E(n)
+
+
+def _const_group_stats(dep, part, n=20, sizes=(10, 10), overflow=0.0):
+    """Fleet stats carrying per-group depletion/participation signals."""
+    dep = np.asarray(dep, np.float64)
+    part = np.asarray(part, np.float64)
+    sizes = np.asarray(sizes, np.float64)
+    return {"participants": float((part * sizes).sum()), "harvested": 1.0,
+            "overflowed": overflow, "consumed": 0.2, "leaked": 0.01,
+            "mean_charge": 1.0, "frac_depleted": float(dep.mean()),
+            "group_frac_depleted": dep, "group_participants": part * sizes}
+
+
+def test_fleet_per_group_telemetry():
+    """simulate_fleet(groups=): per-group participants/depletion land in the
+    stats as (R, G) arrays whose group axis sums back to the fleet-wide
+    signals, identically through the padded (phantom-lane) path."""
+    n, rounds, G = 24, 20, 4
+    groups = np.arange(n) % G
+    proc = Bernoulli.create(n, prob=0.375, amount=1.25)
+    bat = BatteryConfig(capacity=2.5, leak=0.0, init_charge=0.5)
+    cfg = FleetConfig(num_clients=n, policy=Policy.GREEDY, seed=3)
+    res = simulate_fleet(proc, bat, 0.75, cfg, rounds, E=_profile_E(n),
+                         groups=groups, num_groups=G)
+    assert res.stats["group_participants"].shape == (rounds, G)
+    assert res.stats["group_frac_depleted"].shape == (rounds, G)
+    assert np.allclose(res.stats["group_participants"].sum(axis=1),
+                       res.stats["participants"], atol=1e-3)
+    # equal groups: fleet depletion is the group mean
+    assert np.allclose(res.stats["group_frac_depleted"].mean(axis=1),
+                       res.stats["frac_depleted"], atol=1e-5)
+    padded = simulate_fleet(proc, bat, 0.75, cfg, rounds, E=_profile_E(n),
+                            groups=groups, num_groups=G, pad_to=32)
+    for k in res.stats:
+        assert np.array_equal(res.stats[k], padded.stats[k]), k
+
+
+def test_budget_rule_moves_each_group_from_its_own_depletion():
+    """Satellite semantics: with per-group telemetry, only the depleted,
+    slot-missing group's E_k backs off — the healthy group holds (fleet-wide
+    signals would have moved both)."""
+    bounds = ControlBounds(e_min=1, e_max=64)
+    rule = BudgetRule()
+    state = ServerController(T0=5, E0=[2, 4], bounds=bounds).state
+    # group 0 drowning and missing slots (part 0.05 < 0.3 * 1/2), group 1 fine
+    tel = Telemetry.from_stats(
+        _const_group_stats(dep=[0.9, 0.0], part=[0.05, 0.25]),
+        num_clients=20, group_sizes=[10, 10])
+    s = rule(state, tel, bounds)
+    assert list(s.E) == [4, 4], s.E
+    # both rich + overflow: additive recovery everywhere
+    tel2 = Telemetry.from_stats(
+        _const_group_stats(dep=[0.0, 0.0], part=[0.4, 0.2], overflow=0.9),
+        num_clients=20, group_sizes=[10, 10])
+    s2 = rule(state, tel2, bounds)
+    assert list(s2.E) == [1, 3], s2.E
+    # depleted but slots landing (part ~= asked rate): hold — asking less
+    # often can't help a group that IS making its slots
+    tel3 = Telemetry.from_stats(
+        _const_group_stats(dep=[0.9, 0.9], part=[0.5, 0.25]),
+        num_clients=20, group_sizes=[10, 10])
+    assert list(rule(state, tel3, bounds).E) == [2, 4]
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.floats(0.0, 1.0), st.floats(0.0, 1.0), st.floats(0.0, 1.0),
+       st.floats(0.0, 0.6), st.floats(0.0, 0.6), st.integers(1, 20))
+def test_controller_bounds_and_convergence_per_group(dep0, dep1, over,
+                                                     part0, part1, E0):
+    """The controller's bound/convergence property survives the per-group
+    BudgetRule path: under ANY constant per-group telemetry every E_k stays
+    inside `ControlBounds` and the state stops changing (each component is
+    monotone + clipped, so no oscillation)."""
+    bounds = ControlBounds(t_min=1, t_max=10, e_min=1, e_max=32)
+    ctrl = ServerController(T0=5, E0=[E0, 2 * E0], bounds=bounds,
+                            groups=np.arange(20) % 2)
+    stats = _const_group_stats(dep=[dep0, dep1], part=[part0, part1],
+                               overflow=over)
+    states = []
+    for _ in range(64):
+        s = ctrl.update(stats, num_clients=20)
+        assert np.all(s.E >= bounds.e_min) and np.all(s.E <= bounds.e_max)
+        assert bounds.t_min <= s.T <= bounds.t_max
+        states.append((s.T, tuple(s.E)))
+    assert states[-1] == states[-2] == states[-3], \
+        f"per-group controller oscillates: {states[-4:]}"
+
+
+def test_run_controlled_grouped_uses_per_group_signals():
+    """End to end: a two-group fleet where ONLY group 1 is in drought — the
+    grouped controller backs off E_1 while leaving E_0 at its bound-clipped
+    initial value (fleet-wide signals would over-throttle group 0)."""
+    n, rounds = 40, 60
+    groups = np.arange(n) % 2
+    # group 0 harvests richly, group 1 is starved
+    day_mean = np.where(groups == 0, 2.0, 0.02).astype(np.float32)
+    proc = MarkovSolar.create(n, p_stay_day=0.95, p_stay_night=0.05,
+                              day_mean=day_mean)
+    bat = BatteryConfig(capacity=4.0, leak=0.01, init_charge=0.5)
+    cfg = FleetConfig(num_clients=n, policy=Policy.SUSTAINABLE, seed=0)
+    ctrl = ServerController(T0=5, E0=[1, 1], groups=groups,
+                            rules=(BudgetRule(),),
+                            bounds=ControlBounds(e_min=1, e_max=64))
+    res, ctrl = run_controlled(proc, bat, 1.0, cfg, rounds, ctrl,
+                               control_every=10)
+    tel = ctrl.trace[-1]["telemetry"]
+    assert tel.group_frac_depleted is not None
+    assert tel.group_frac_depleted[1] > tel.group_frac_depleted[0]
+    assert ctrl.E[1] > ctrl.E[0], ctrl.E
+    assert ctrl.E[0] == 1
 
 
 def test_telemetry_from_stats_reduces_chunks():

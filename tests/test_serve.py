@@ -1,0 +1,479 @@
+"""Invariants and oracles for the `repro.serve` subsystem: traffic-process
+RNG contracts, admission semantics, the serving simulator's request/energy
+conservation laws, jit/eager and padded/sharded parity, retrace regression,
+the train-vs-serve battery competition, and the closed-loop admission
+controller."""
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.energy import (AdmissionRule, BatteryConfig, Bernoulli,
+                          ControlBounds, DecodeCostModel, MarkovSolar,
+                          ServerController, Telemetry)
+from repro.serve import (BatteryGated, ChargeGated, Constant, DiurnalPoisson,
+                         EnergyAgnostic, MMPP, QoSSpec, ServeConfig,
+                         TrainLoad, run_serve_controlled, simulate_serve)
+from repro.serve.fleet_serve import _run_serve_scan
+from repro.serve.qos import DEGRADED, FULL, SHED
+
+_REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+QOS = QoSSpec(prompt_tokens=64.0, full_decode_tokens=128.0,
+              short_decode_tokens=32.0)
+COST = DecodeCostModel(joules_per_prefill_token=1e-3,
+                       joules_per_decode_step=2e-3,
+                       joules_per_response_upload=5e-2)
+
+
+def _make_traffic(name, n):
+    return {
+        "constant": lambda: Constant.create(n, rate=2.0),
+        "diurnal": lambda: DiurnalPoisson.create(
+            n, base=1.5, swing=0.9, phase=np.arange(n) % 24),
+        "mmpp": lambda: MMPP.create(n, calm_rate=0.5, burst_rate=4.0),
+    }[name]()
+
+
+def _make_policy(name, n):
+    return {
+        "agnostic": lambda: EnergyAgnostic(),
+        "gated": lambda: BatteryGated.create(n, hi=1.2, lo=1.0),
+        "charge": lambda: ChargeGated.create(n, hi=1.0, lo=0.25),
+    }[name]()
+
+
+# ------------------------------------------------------- traffic processes --
+
+def test_traffic_rng_is_padding_invariant():
+    """The property the sharded serving path rests on: per-client RNG makes
+    a traffic process's requests for client i depend only on (key, i),
+    never on N."""
+    key = jax.random.PRNGKey(7)
+    for small, big in [(DiurnalPoisson.create(8, base=2.0),
+                        DiurnalPoisson.create(12, base=2.0)),
+                       (MMPP.create(8), MMPP.create(12))]:
+        rs, ss = small.sample(key, 3, small.init())
+        rb, sb = big.sample(key, 3, big.init())
+        assert np.array_equal(np.asarray(rs), np.asarray(rb)[:8])
+        if np.ndim(ss):
+            assert np.array_equal(np.asarray(ss), np.asarray(sb)[:8])
+
+
+def test_diurnal_rate_profile():
+    """The sinusoidal profile peaks a quarter-period after phase 0 and
+    bottoms out a quarter-period before; realized counts track it."""
+    n = 2000
+    proc = DiurnalPoisson.create(n, base=2.0, swing=0.9, period=24)
+    assert np.allclose(np.asarray(proc.rate_at(6)), 2.0 * 1.9, atol=1e-5)
+    assert np.allclose(np.asarray(proc.rate_at(18)), 2.0 * 0.1, atol=1e-5)
+    key = jax.random.PRNGKey(0)
+    peak, _ = proc.sample(key, 6, ())
+    trough, _ = proc.sample(key, 18, ())
+    assert np.asarray(peak).mean() > 4 * np.asarray(trough).mean()
+
+
+def test_mmpp_bursts_raise_rate():
+    """Clients in the burst regime draw at the burst rate: long-run mean
+    sits between calm and burst rates, and bursts are temporally clustered
+    (the regime persists)."""
+    n, epochs = 4000, 30
+    proc = MMPP.create(n, p_stay_calm=0.9, p_stay_burst=0.7, calm_rate=0.3,
+                       burst_rate=5.0)
+    state = proc.init()
+    key = jax.random.PRNGKey(1)
+    means, states = [], []
+    for t in range(epochs):
+        r, state = proc.sample(jax.random.fold_in(key, t), t, state)
+        means.append(float(np.asarray(r).mean()))
+        states.append(np.asarray(state))
+    # stationary burst fraction = (1-p_cc) / ((1-p_cc) + (1-p_bb)) = 0.25
+    frac_burst = np.mean([s.mean() for s in states[10:]])
+    assert 0.15 < frac_burst < 0.35
+    assert 0.3 < np.mean(means[10:]) < 5.0
+    # regime persistence: consecutive states agree far more often than 50%
+    agree = np.mean([(states[t] == states[t + 1]).mean()
+                     for t in range(10, epochs - 1)])
+    assert agree > 0.75
+
+
+def test_constant_traffic_is_deterministic():
+    proc = Constant.create(5, rate=3.0)
+    r1, _ = proc.sample(jax.random.PRNGKey(0), 0, ())
+    r2, _ = proc.sample(jax.random.PRNGKey(9), 7, ())
+    assert np.array_equal(np.asarray(r1), np.asarray(r2))
+    assert np.all(np.asarray(r1) == 3.0)
+
+
+# ------------------------------------------------------- admission policies --
+
+def test_admission_mode_semantics():
+    """BatteryGated: full above hi x full-cost, degraded above lo x
+    short-cost, shed below; EnergyAgnostic always serves full."""
+    avail = jnp.asarray([0.0, 0.5, 1.0, 2.0, 10.0], jnp.float32)
+    full_cost = jnp.full((5,), 2.0)
+    short_cost = jnp.full((5,), 0.6)
+    pol = BatteryGated.create(5, hi=1.0, lo=1.0)
+    modes = np.asarray(pol.decide(avail, full_cost, short_cost))
+    assert list(modes) == [SHED, SHED, DEGRADED, FULL, FULL]
+    assert np.all(np.asarray(EnergyAgnostic().decide(
+        avail, full_cost, short_cost)) == FULL)
+    charge = ChargeGated.create(5, hi=2.0, lo=0.5)
+    assert list(np.asarray(charge.decide(avail, full_cost, short_cost))) == \
+        [SHED, DEGRADED, DEGRADED, FULL, FULL]
+
+
+def test_admission_scaled_raises_the_bar():
+    """The controller's admit knob scales thresholds: a stricter scale can
+    only lower modes (more degrade/shed), never raise them."""
+    avail = jnp.linspace(0.0, 5.0, 21)
+    full_cost = jnp.full((21,), 2.0)
+    short_cost = jnp.full((21,), 0.6)
+    pol = BatteryGated.create(21, hi=1.0, lo=1.0)
+    base = np.asarray(pol.decide(avail, full_cost, short_cost))
+    strict = np.asarray(pol.scaled(2.0).decide(avail, full_cost, short_cost))
+    assert np.all(strict <= base) and np.any(strict < base)
+    # EnergyAgnostic is immune to the knob
+    assert np.all(np.asarray(EnergyAgnostic().scaled(8.0).decide(
+        avail, full_cost, short_cost)) == FULL)
+
+
+# ------------------------------------------------- simulator conservation --
+
+@settings(max_examples=12, deadline=None)
+@given(st.sampled_from(["constant", "diurnal", "mmpp"]),
+       st.sampled_from(["agnostic", "gated", "charge"]),
+       st.integers(0, 2 ** 16), st.floats(0.0, 0.1), st.floats(1.0, 4.0))
+def test_serve_conservation_laws(traffic_name, policy_name, seed, leak, cap):
+    """Over randomized traffic x admission policy x battery: (a) the request
+    ledger balances — offered == served_full + served_short + shed +
+    deadline_missed; (b) energy conserves — harvest − consumed − leaked −
+    overflow = Δcharge; (c) charge stays in [0, capacity] (no client serves
+    requests its battery can't cover)."""
+    n, epochs = 24, 40
+    traffic = _make_traffic(traffic_name, n)
+    harvest = MarkovSolar.create(n, day_mean=0.8)
+    bat = BatteryConfig(capacity=cap, leak=leak, init_charge=0.5 * cap)
+    cfg = ServeConfig(num_clients=n, seed=seed)
+    train = TrainLoad.create(np.full(n, 4), 0.2)
+    res = simulate_serve(traffic, harvest, bat, COST, QOS,
+                         _make_policy(policy_name, n), cfg, epochs,
+                         train=train)
+    s = res.stats
+    assert np.allclose(
+        s["offered"],
+        s["served_full"] + s["served_short"] + s["shed"]
+        + s["deadline_missed"], atol=1e-3)
+    charge = np.asarray(res.final_charge)
+    assert np.all(charge >= -1e-5) and np.all(charge <= cap + 1e-4)
+    delta = charge.sum() - np.asarray(bat.init(n)).sum()
+    lhs = (s["harvested"].sum() - s["consumed"].sum() - s["leaked"].sum()
+           - s["overflowed"].sum())
+    assert np.allclose(lhs, delta, atol=1e-2), (lhs, delta)
+    assert np.allclose(s["consumed"], s["consumed_serve"]
+                       + s["consumed_train"], atol=1e-3)
+    assert all(np.all(np.isfinite(v)) for v in s.values())
+
+
+def test_abundant_battery_serves_everything():
+    """With battery never binding, every offered request is served at full
+    grade whatever the admission policy, and tokens/joules follow exactly."""
+    n, epochs = 12, 20
+    traffic = Constant.create(n, rate=3.0)
+    harvest = Bernoulli.create(n, prob=1.0, amount=10.0)
+    bat = BatteryConfig(capacity=100.0, leak=0.0, init_charge=50.0)
+    for pol_name in ["agnostic", "gated"]:
+        res = simulate_serve(traffic, harvest, bat, COST, QOS,
+                             _make_policy(pol_name, n),
+                             ServeConfig(num_clients=n), epochs)
+        s = res.stats
+        assert np.allclose(s["served_full"], 3.0 * n), pol_name
+        assert np.all(s["shed"] == 0) and np.all(s["deadline_missed"] == 0)
+        assert np.allclose(s["tokens_decoded"], 3.0 * n * 128.0)
+        per_req = float(np.asarray(QOS.request_cost(COST)))
+        assert np.allclose(s["consumed_serve"], 3.0 * n * per_req, rtol=1e-5)
+
+
+def test_physical_gate_caps_served_requests():
+    """EnergyAgnostic admission writes checks the battery can't cash: served
+    requests are capped at floor(available / request_cost) and the
+    shortfall lands in deadline_missed — charge still never goes negative."""
+    n, epochs = 8, 15
+    traffic = Constant.create(n, rate=4.0)
+    harvest = Bernoulli.create(n, prob=0.5, amount=0.3)   # starved
+    bat = BatteryConfig(capacity=1.0, leak=0.0, init_charge=0.4)
+    res = simulate_serve(traffic, harvest, bat, COST, QOS, EnergyAgnostic(),
+                         ServeConfig(num_clients=n), epochs)
+    s = res.stats
+    assert s["deadline_missed"].sum() > 0
+    assert np.all(np.asarray(res.final_charge) >= -1e-6)
+    # agnostic never sheds; every unanswered request is a deadline miss
+    assert np.all(s["shed"] == 0)
+
+
+# ------------------------------------------------------------ parity oracle --
+
+def _exact_setup(n):
+    """Exact-arithmetic serving config: integer request counts, dyadic
+    harvest packet / per-token joules, zero leak — fp32 sums exact under any
+    reduction order."""
+    traffic = Constant.create(n, rate=2.0)
+    harvest = Bernoulli.create(n, prob=0.375, amount=1.25)
+    bat = BatteryConfig(capacity=2.5, leak=0.0, init_charge=0.5)
+    cost = DecodeCostModel(2.0 ** -8, 2.0 ** -9, 2.0 ** -6)
+    return traffic, harvest, bat, cost
+
+
+@pytest.mark.parametrize("policy_name", ["agnostic", "gated", "charge"])
+@pytest.mark.parametrize("n,pad_to", [(24, 24), (21, 24)],
+                         ids=["divisible", "padded"])
+def test_padding_parity_bit_exact(policy_name, n, pad_to):
+    """Padded vs unpadded serving fleets: bit-identical modes, telemetry and
+    final charge for every admission policy (the PR 3 fleet-parity pattern
+    on the serving scan)."""
+    traffic, harvest, bat, cost = _exact_setup(n)
+    cfg = ServeConfig(num_clients=n, seed=3)
+    train = TrainLoad.create(np.arange(1, n + 1) % 5 + 1, 0.25)
+    kw = dict(record_modes=True, train=train)
+    pol = _make_policy(policy_name, n)
+    base = simulate_serve(traffic, harvest, bat, cost, QOS, pol, cfg, 30, **kw)
+    pad = simulate_serve(traffic, harvest, bat, cost, QOS, pol, cfg, 30,
+                         pad_to=pad_to, **kw)
+    assert base.modes.shape == pad.modes.shape == (30, n)
+    assert np.array_equal(np.asarray(base.modes), np.asarray(pad.modes))
+    assert np.array_equal(np.asarray(base.final_charge),
+                          np.asarray(pad.final_charge))
+    for k in base.stats:
+        assert np.array_equal(base.stats[k], pad.stats[k]), k
+
+
+def test_jit_eager_parity():
+    """The jitted scan and the eager Python loop are the same program."""
+    n = 10
+    traffic = DiurnalPoisson.create(n, base=1.5, swing=0.8)
+    harvest = MarkovSolar.create(n, day_mean=0.7)
+    bat = BatteryConfig(capacity=3.0, leak=0.02, init_charge=1.0)
+    cfg = ServeConfig(num_clients=n, seed=2)
+    pol = BatteryGated.create(n, hi=1.2, lo=1.0)
+    kw = dict(record_modes=True,
+              train=TrainLoad.create(np.full(n, 3), 0.3))
+    r_jit = simulate_serve(traffic, harvest, bat, COST, QOS, pol, cfg, 25,
+                           use_jit=True, **kw)
+    r_eager = simulate_serve(traffic, harvest, bat, COST, QOS, pol, cfg, 25,
+                             use_jit=False, **kw)
+    assert np.array_equal(np.asarray(r_jit.modes), np.asarray(r_eager.modes))
+    for k in r_jit.stats:
+        assert np.allclose(r_jit.stats[k], r_eager.stats[k], atol=1e-5), k
+    assert np.allclose(np.asarray(r_jit.final_charge),
+                       np.asarray(r_eager.final_charge), atol=1e-5)
+
+
+def test_sharded_parity_multidevice():
+    """8 emulated CPU devices in a child process: sharded vs host-local
+    bit-exactness for every admission policy on divisible AND padded N, a
+    (data, model) mesh, and sharded jit-cache reuse."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["JAX_PLATFORMS"] = "cpu"
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(_REPO, "src")]
+        + ([env["PYTHONPATH"]] if env.get("PYTHONPATH") else []))
+    child = os.path.join(_REPO, "tests", "_serve_sharded_child.py")
+    out = subprocess.run([sys.executable, child], env=env, cwd=_REPO,
+                         capture_output=True, text=True, timeout=600)
+    assert out.returncode == 0, f"child failed:\n{out.stdout}\n{out.stderr}"
+    assert "serve sharded parity OK" in out.stdout
+
+
+# ------------------------------------------------------ retrace regression --
+
+def test_serve_scan_cache_reuse_host_local():
+    """Repeat `simulate_serve` calls with different seeds / admission scales
+    / chunk offsets must not retrace: seed, admit and offset are traced
+    scalars of the cached scan (the `_run_fleet_scan` twin)."""
+    n = 16
+    traffic, harvest, bat, cost = _exact_setup(n)
+    pol = BatteryGated.create(n)
+
+    def run(seed, admit, offset=0):
+        cfg = ServeConfig(num_clients=n, seed=seed)
+        return simulate_serve(traffic, harvest, bat, cost, QOS, pol, cfg, 12,
+                              admit=admit, epoch_offset=offset)
+
+    run(0, 1.0)                       # may trace (cold cache for this shape)
+    size = _run_serve_scan._cache_size()
+    run(5, 1.25)
+    run(9, 0.75)
+    run(5, 1.25, offset=12)           # chunked-continuation path
+    assert _run_serve_scan._cache_size() == size, \
+        "simulate_serve retraced on a seed/admit/offset sweep"
+
+
+def test_serve_scan_cache_reuse_padded():
+    """The padded shape is a distinct (one-time) trace; sweeps at that shape
+    then hit the cache too."""
+    n = 13
+    traffic, harvest, bat, cost = _exact_setup(n)
+    pol = BatteryGated.create(n)
+
+    def run(seed):
+        cfg = ServeConfig(num_clients=n, seed=seed)
+        return simulate_serve(traffic, harvest, bat, cost, QOS, pol, cfg, 12,
+                              pad_to=16)
+
+    run(0)
+    size = _run_serve_scan._cache_size()
+    run(3)
+    run(4)
+    assert _run_serve_scan._cache_size() == size
+
+
+# ------------------------------------------------- train/serve competition --
+
+def test_serving_load_starves_training():
+    """The joint scenario's point: with the same harvest and batteries, heavy
+    query traffic drains charge the training schedule would have spent —
+    train participation under load is strictly below the traffic-free run."""
+    n, epochs = 32, 60
+    harvest = MarkovSolar.create(n, day_mean=0.6)
+    bat = BatteryConfig(capacity=3.0, leak=0.01, init_charge=1.0)
+    train = TrainLoad.create(np.full(n, 2), 0.5)
+    cfg = ServeConfig(num_clients=n, seed=0)
+    quiet = simulate_serve(Constant.create(n, rate=0.0), harvest, bat, COST,
+                           QOS, EnergyAgnostic(), cfg, epochs, train=train)
+    busy = simulate_serve(Constant.create(n, rate=6.0), harvest, bat, COST,
+                          QOS, EnergyAgnostic(), cfg, epochs, train=train)
+    assert busy.stats["participants"].mean() \
+        < 0.8 * quiet.stats["participants"].mean()
+
+
+def test_battery_gated_beats_energy_agnostic():
+    """The acceptance scenario in miniature: solar day/night harvest +
+    diurnal traffic.  Battery-gated admission answers more requests (fewer
+    unanswered = shed + deadline-missed) and depletes less than
+    energy-agnostic serving."""
+    n, epochs = 64, 96
+    traffic = DiurnalPoisson.create(n, base=2.0, swing=0.9,
+                                    phase=np.arange(n) % 24)
+    harvest = MarkovSolar.create(n, p_stay_day=0.9, p_stay_night=0.9,
+                                 day_mean=1.2)
+    bat = BatteryConfig(capacity=4.0, leak=0.01, init_charge=1.0)
+    cfg = ServeConfig(num_clients=n, seed=0)
+    agnostic = simulate_serve(traffic, harvest, bat, COST, QOS,
+                              EnergyAgnostic(), cfg, epochs)
+    # hedging margins (hi=2, lo=1.5): degrade early so lean epochs ahead are
+    # still affordable — beats agnostic on BOTH metrics
+    gated = simulate_serve(traffic, harvest, bat, COST, QOS,
+                           BatteryGated.create(n, hi=2.0, lo=1.5), cfg,
+                           epochs)
+    unanswered = lambda r: (r.stats["shed"].sum()
+                            + r.stats["deadline_missed"].sum()) \
+        / max(r.stats["offered"].sum(), 1e-9)
+    assert unanswered(gated) < unanswered(agnostic)
+    assert gated.stats["frac_depleted"].mean() \
+        < agnostic.stats["frac_depleted"].mean()
+
+
+# ------------------------------------------------------- closed-loop admit --
+
+def test_run_serve_controlled_chunks_match_unchunked():
+    """With an empty rule chain and no training load, the chunked controller
+    loop is bit-identical to one unchunked `simulate_serve` horizon —
+    state/offset threading is lossless."""
+    n, epochs = 18, 40
+    traffic = DiurnalPoisson.create(n, base=1.5, swing=0.8)
+    harvest = MarkovSolar.create(n, day_mean=0.7)
+    bat = BatteryConfig(capacity=2.5, leak=0.02, init_charge=0.4)
+    cfg = ServeConfig(num_clients=n, seed=11)
+    pol = BatteryGated.create(n, hi=1.2, lo=1.0)
+    full = simulate_serve(traffic, harvest, bat, COST, QOS, pol, cfg, epochs,
+                          record_modes=True)
+    ctrl = ServerController(T0=5, E0=1, rules=())
+    chunked, _ = run_serve_controlled(traffic, harvest, bat, COST, QOS, pol,
+                                      cfg, epochs, ctrl, control_every=10,
+                                      record_modes=True)
+    assert np.array_equal(np.asarray(full.modes), np.asarray(chunked.modes))
+    for k in full.stats:
+        assert np.array_equal(full.stats[k], chunked.stats[k]), k
+    assert np.array_equal(np.asarray(full.final_charge),
+                          np.asarray(chunked.final_charge))
+
+
+def test_admission_rule_directions():
+    """Semantics: depletion or deadline misses escalate the admission
+    threshold multiplicatively; an energy-rich fleet shedding users recovers
+    additively; dead band holds; bounds are respected and the rule
+    converges under constant telemetry."""
+    bounds = ControlBounds(admit_min=0.25, admit_max=16.0)
+
+    def tel(dep, shed, miss):
+        return Telemetry(participation_rate=0.1, frac_depleted=dep,
+                         overflow_frac=0.0, mean_charge=1.0, shed_rate=shed,
+                         deadline_miss_rate=miss)
+
+    rule = AdmissionRule()
+    s0 = ServerController(T0=5, E0=1, rules=(rule,), bounds=bounds).state
+    assert rule(s0, tel(0.9, 0.0, 0.0), bounds).admit == 2.0   # depleted
+    assert rule(s0, tel(0.0, 0.0, 0.5), bounds).admit == 2.0   # missing
+    assert rule(s0, tel(0.0, 0.5, 0.0), bounds).admit == 0.75  # rich + shed
+    assert rule(s0, tel(0.2, 0.5, 0.0), bounds).admit == 1.0   # dead band
+    # convergence + bounds under constant telemetry, via the controller
+    for t in [tel(0.9, 0.0, 0.3), tel(0.0, 0.9, 0.0)]:
+        ctrl = ServerController(T0=5, E0=1, rules=(AdmissionRule(),),
+                                bounds=bounds)
+        admits = []
+        for _ in range(40):
+            stats = {"participants": 1.0, "harvested": 1.0, "overflowed": 0.0,
+                     "consumed": 0.1, "leaked": 0.0, "mean_charge": 1.0,
+                     "frac_depleted": t.frac_depleted,
+                     "offered": 10.0, "shed": 10.0 * t.shed_rate,
+                     "deadline_missed": 10.0 * t.deadline_miss_rate}
+            s = ctrl.update(stats, num_clients=10)
+            assert bounds.admit_min <= s.admit <= bounds.admit_max
+            admits.append(s.admit)
+        assert admits[-1] == admits[-2] == admits[-3], admits[-5:]
+
+
+def test_admission_controller_sheds_under_drought_then_recovers():
+    """End to end: a solar fleet under the full controller — the admit knob
+    rises when night-time depletion bites and the shed telemetry is read
+    back from the serving scan itself."""
+    n, epochs = 32, 120
+    traffic = DiurnalPoisson.create(n, base=3.0, swing=0.5)
+    # night-heavy solar: long nights starve the fleet
+    harvest = MarkovSolar.create(n, p_stay_day=0.5, p_stay_night=0.95,
+                                 day_mean=0.8)
+    bat = BatteryConfig(capacity=3.0, leak=0.01, init_charge=1.5)
+    cfg = ServeConfig(num_clients=n, seed=0)
+    ctrl = ServerController(T0=5, E0=1, rules=(AdmissionRule(),))
+    _, ctrl = run_serve_controlled(traffic, harvest, bat, COST, QOS,
+                                   BatteryGated.create(n), cfg, epochs, ctrl,
+                                   control_every=24)
+    admits = [t["admit"] for t in ctrl.trace]
+    assert max(admits) > 1.0, admits
+    assert all(ControlBounds().admit_min <= a <= ControlBounds().admit_max
+               for a in admits)
+
+
+# ------------------------------------------------------------ input errors --
+
+def test_simulate_serve_size_mismatch_raises():
+    traffic = Constant.create(4, rate=1.0)
+    harvest = Bernoulli.create(8, prob=0.5)
+    bat = BatteryConfig()
+    with pytest.raises(ValueError, match="harvest process is sized for 8"):
+        simulate_serve(traffic, harvest, bat, COST, QOS, EnergyAgnostic(),
+                       ServeConfig(num_clients=4), 3)
+    with pytest.raises(ValueError, match="traffic process is sized for 4"):
+        simulate_serve(traffic, harvest, bat, COST, QOS, EnergyAgnostic(),
+                       ServeConfig(num_clients=8), 3)
+    with pytest.raises(ValueError, match="pad_to=2 is below"):
+        simulate_serve(Constant.create(4, rate=1.0),
+                       Bernoulli.create(4, prob=0.5), bat, COST, QOS,
+                       EnergyAgnostic(), ServeConfig(num_clients=4), 3,
+                       pad_to=2)
