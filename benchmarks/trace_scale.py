@@ -1,0 +1,208 @@
+"""Trace-replay throughput and calibration-fidelity benchmark: time
+`repro.traces` replay through both fleet scans — `simulate_fleet` under
+`TraceHarvest` and `simulate_serve` under `TraceTraffic` + `TraceHarvest` —
+at N in {1e3, 1e5, 1e6} clients host-local, plus, whenever more than one
+device is visible (CI runs an ``XLA_FLAGS=--xla_force_host_platform_
+device_count=8`` job), a ``sharded`` section sweeping the mesh-sharded
+client axis at >= 1e6 clients x >= 50 epochs.
+
+A ``calibration`` section records estimator fidelity per PR: each synthetic
+process is re-fit from its own sampled paths (`fit_markov_solar` /
+`fit_diurnal_poisson` / `fit_mmpp`) and the true-vs-fitted parameters land
+in the artifact, so a regression in recovery error (not just speed) is
+visible in the ``BENCH_traces.json`` diff — uploaded per PR by CI's
+``trace-scale`` job.
+
+Usage:
+    PYTHONPATH=src python benchmarks/trace_scale.py            # full sweep
+    PYTHONPATH=src python benchmarks/trace_scale.py --smoke    # CI (~seconds)
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import numpy as np
+
+from repro.core import Policy
+from repro.energy import (BatteryConfig, DecodeCostModel, FleetConfig,
+                          MarkovSolar, TraceHarvest, simulate_fleet)
+from repro.serve import (MMPP, BatteryGated, DiurnalPoisson, QoSSpec,
+                         ServeConfig, TraceTraffic, simulate_serve)
+from repro.traces import (fit_diurnal_poisson, fit_markov_solar, fit_mmpp,
+                          request_profile_table, rescale, sample_paths,
+                          solar_profile_table)
+
+QOS = QoSSpec(prompt_tokens=128.0, full_decode_tokens=256.0,
+              short_decode_tokens=32.0)
+COST = DecodeCostModel.from_params(1e8)
+
+
+def _procs(n, seed=0):
+    solar = rescale(solar_profile_table(), 1.5)
+    requests = rescale(request_profile_table(), 1.0)
+    return (TraceHarvest.create(solar, n, seed=seed, gain_jitter=0.3),
+            TraceTraffic.create(requests, n, seed=seed, gain_jitter=0.3))
+
+
+def bench_fleet(n: int, rounds: int, seed: int = 0, mesh=None) -> dict:
+    harvest, _ = _procs(n, seed)
+    bat = BatteryConfig(capacity=4.0, leak=0.01, init_charge=1.0)
+    cfg = FleetConfig(num_clients=n, policy=Policy.THRESHOLD, seed=seed)
+
+    def run():
+        return simulate_fleet(harvest, bat, 1.0, cfg, rounds, mesh=mesh)
+
+    t0 = time.perf_counter()
+    res = run()                      # compile + first run
+    t1 = time.perf_counter()
+    res = run()                      # steady state (jit cache hit)
+    t2 = time.perf_counter()
+    wall = t2 - t1
+    rec = {
+        "scan": "fleet", "num_clients": n, "rounds": rounds,
+        "compile_plus_run_s": round(t1 - t0, 4),
+        "run_s": round(wall, 4),
+        "rounds_per_s": round(rounds / wall, 2),
+        "client_rounds_per_s": round(n * rounds / wall, 1),
+        "participation": float(res.stats["participants"].mean() / n),
+        "frac_depleted": float(res.stats["frac_depleted"].mean()),
+    }
+    if mesh is not None:
+        rec["mesh_devices"] = int(np.prod(list(mesh.shape.values())))
+    return rec
+
+
+def bench_serve(n: int, epochs: int, seed: int = 0, mesh=None) -> dict:
+    harvest, traffic = _procs(n, seed)
+    bat = BatteryConfig(capacity=8.0, leak=0.01, init_charge=2.0)
+    cfg = ServeConfig(num_clients=n, seed=seed)
+    pol = BatteryGated.create(n, hi=2.0, lo=1.5)
+
+    def run():
+        return simulate_serve(traffic, harvest, bat, COST, QOS, pol, cfg,
+                              epochs, mesh=mesh)
+
+    t0 = time.perf_counter()
+    res = run()
+    t1 = time.perf_counter()
+    res = run()
+    t2 = time.perf_counter()
+    wall = t2 - t1
+    s = res.stats
+    offered = max(float(s["offered"].sum()), 1e-9)
+    rec = {
+        "scan": "serve", "num_clients": n, "epochs": epochs,
+        "compile_plus_run_s": round(t1 - t0, 4),
+        "run_s": round(wall, 4),
+        "epochs_per_s": round(epochs / wall, 2),
+        "client_epochs_per_s": round(n * epochs / wall, 1),
+        "served_rate": float((s["served_full"].sum()
+                              + s["served_short"].sum()) / offered),
+        "shed_rate": float(s["shed"].sum() / offered),
+        "joules_per_token": res.joules_per_token,
+    }
+    if mesh is not None:
+        rec["mesh_devices"] = int(np.prod(list(mesh.shape.values())))
+    return rec
+
+
+def bench_calibration(fit_n: int, fit_r: int) -> dict:
+    """Round-trip fidelity: fit each synthetic process on its own sampled
+    paths and record true vs fitted parameters (+ wall time), so estimator
+    regressions show in the artifact diff."""
+    out = {"fit_clients": fit_n, "fit_rounds": fit_r}
+
+    true_solar = {"p_stay_day": 0.9, "p_stay_night": 0.85, "day_mean": 1.2,
+                  "night_mean": 0.05}
+    proc = MarkovSolar.create(fit_n, **true_solar)
+    t0 = time.perf_counter()
+    fit = fit_markov_solar(sample_paths(proc, fit_r, seed=1), 1)
+    out["markov_solar"] = {
+        "true": true_solar, "fit_s": round(time.perf_counter() - t0, 3),
+        "fitted": {k: round(float(getattr(fit, k)[0]), 4)
+                   for k in true_solar}}
+
+    true_diurnal = {"base": 1.0, "swing": 0.7, "phase": 9.0}
+    proc = DiurnalPoisson.create(fit_n, **true_diurnal)
+    t0 = time.perf_counter()
+    fit = fit_diurnal_poisson(sample_paths(proc, fit_r, seed=2), 1)
+    out["diurnal_poisson"] = {
+        "true": true_diurnal, "fit_s": round(time.perf_counter() - t0, 3),
+        "fitted": {k: round(float(getattr(fit, k)[0]), 4)
+                   for k in true_diurnal}}
+
+    true_mmpp = {"p_stay_calm": 0.9, "p_stay_burst": 0.7, "calm_rate": 0.4,
+                 "burst_rate": 4.0}
+    proc = MMPP.create(fit_n, **true_mmpp)
+    t0 = time.perf_counter()
+    fit = fit_mmpp(sample_paths(proc, fit_r, seed=3), 1)
+    out["mmpp"] = {
+        "true": true_mmpp, "fit_s": round(time.perf_counter() - t0, 3),
+        "fitted": {k: round(float(getattr(fit, k)[0]), 4)
+                   for k in true_mmpp}}
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized sweep (seconds, not minutes)")
+    ap.add_argument("--out", default="BENCH_traces.json")
+    ap.add_argument("--epochs", type=int, default=96)
+    args = ap.parse_args()
+
+    if args.smoke:
+        sizes = [1_000, 100_000]
+        # acceptance: a >= 1e6-client x >= 50-epoch sharded sweep in CI's
+        # 8-device emulated job
+        sharded = [(1_000_000, max(50, args.epochs // 2))]
+        fit_n, fit_r = 128, 192
+    else:
+        sizes = [1_000, 100_000, 1_000_000]
+        sharded = [(1_000_000, args.epochs), (10_000_000, args.epochs)]
+        fit_n, fit_r = 256, 480
+
+    results = []
+    for n in sizes:
+        for bench in (bench_fleet, bench_serve):
+            rec = bench(n, args.epochs)
+            results.append(rec)
+            per_s = rec.get("client_rounds_per_s",
+                            rec.get("client_epochs_per_s"))
+            print(f"N={n:>9,} {rec['scan']:>6} run={rec['run_s']:.3f}s  "
+                  f"client-steps/s={per_s:.2e}", flush=True)
+
+    sharded_results = []
+    n_dev = jax.device_count()
+    if n_dev > 1:
+        mesh = jax.make_mesh((n_dev,), ("data",))
+        for n, epochs in sharded:
+            rec = bench_serve(n, epochs, mesh=mesh)
+            sharded_results.append(rec)
+            print(f"N={n:>9,}  serve sharded/{n_dev}dev epochs={epochs} "
+                  f"run={rec['run_s']:.3f}s  "
+                  f"client-epochs/s={rec['client_epochs_per_s']:.2e}",
+                  flush=True)
+    else:
+        print("single device: skipping sharded section "
+              "(set XLA_FLAGS=--xla_force_host_platform_device_count=8)")
+
+    cal = bench_calibration(fit_n, fit_r)
+    for name in ("markov_solar", "diurnal_poisson", "mmpp"):
+        print(f"calibration {name}: true={cal[name]['true']} "
+              f"fitted={cal[name]['fitted']} ({cal[name]['fit_s']}s)",
+              flush=True)
+
+    out = {"bench": "trace_scale", "smoke": args.smoke, "epochs": args.epochs,
+           "devices": n_dev, "results": results, "sharded": sharded_results,
+           "calibration": cal}
+    with open(args.out, "w") as f:
+        json.dump(out, f, indent=1)
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,71 @@
+"""Shared scenario plumbing for the fleet examples.
+
+`examples/energy_fleet.py`, `examples/serve_fleet.py` and
+`examples/trace_fleet.py` all pick their harvest/traffic processes through
+this module, so every example exposes the SAME ``--trace`` / ``--synthetic``
+flag pair (plus ``--seed`` and ``--trace-path``) and a trace run is directly
+comparable to its synthetic twin: identical scenario scale (mean joules /
+mean requests per epoch), identical seed plumbing (the seed feeds both the
+trace client-assignment draw and the simulator configs), different *shape*
+of the arrival law — which is exactly the axis trace-driven evaluation
+isolates (DESIGN.md §10).
+"""
+import argparse
+
+import numpy as np
+
+from repro.energy import MarkovSolar, TraceHarvest
+from repro.serve import DiurnalPoisson, TraceTraffic
+from repro.traces import (load_trace, request_profile_table, rescale,
+                          solar_profile_table)
+
+
+def add_scenario_flags(parser: argparse.ArgumentParser,
+                       clients: int) -> argparse.ArgumentParser:
+    """The shared flag pair + seed plumbing (one source of truth)."""
+    mode = parser.add_mutually_exclusive_group()
+    mode.add_argument("--trace", action="store_true",
+                      help="replay bundled NSRDB-style solar / request-log "
+                           "day profiles (repro.traces)")
+    mode.add_argument("--synthetic", action="store_true",
+                      help="synthetic processes (default; the trace runs' "
+                           "calibratable twins)")
+    parser.add_argument("--trace-path", default=None,
+                        help="optional .npy/.csv profile table replacing the "
+                             "bundled traces (used by --trace)")
+    parser.add_argument("--seed", type=int, default=0,
+                        help="seed for client assignment AND the simulators")
+    parser.add_argument("--clients", type=int, default=clients)
+    return parser
+
+
+def solar_harvest(args, n: int, *, day_mean: float = 1.0,
+                  p_stay: float = 0.9):
+    """Day/night solar harvest at mean ``day_mean/2`` J per epoch (a ~50%
+    day fraction): `TraceHarvest` over the bundled season x cloud profiles
+    under ``--trace``, else the `MarkovSolar` twin."""
+    if args.trace:
+        table = (load_trace(args.trace_path) if args.trace_path
+                 else solar_profile_table())
+        return TraceHarvest.create(rescale(table, day_mean / 2.0), n,
+                                   seed=args.seed, gain_jitter=0.3)
+    return MarkovSolar.create(n, p_stay_day=p_stay, p_stay_night=p_stay,
+                              day_mean=day_mean)
+
+
+def assistant_traffic(args, n: int, *, base: float = 1.0):
+    """Diurnal query traffic at mean ``base`` requests per epoch:
+    `TraceTraffic` over the bundled weekday/weekend/launch request profiles
+    under ``--trace``, else the `DiurnalPoisson` twin (time zones scattered
+    over the day either way)."""
+    if args.trace:
+        table = (load_trace(args.trace_path) if args.trace_path
+                 else request_profile_table())
+        return TraceTraffic.create(rescale(table, base), n, seed=args.seed,
+                                   gain_jitter=0.3)
+    return DiurnalPoisson.create(n, base=base, swing=0.9,
+                                 phase=np.arange(n) % 24)
+
+
+def scenario_name(args) -> str:
+    return "trace replay" if args.trace else "synthetic"

@@ -17,7 +17,15 @@ admission strategies:
   `AdmissionRule` (`energy.control.ServerController`) adapting the
   admission-threshold scale from shed/miss/depletion telemetry each day.
 
-Run:  PYTHONPATH=src python examples/serve_fleet.py
+Run:  PYTHONPATH=src python examples/serve_fleet.py           # synthetic
+      PYTHONPATH=src python examples/serve_fleet.py --trace   # replay the
+                                          # bundled solar + request-log
+                                          # day profiles (repro.traces)
+
+``--trace``/``--synthetic``, ``--seed`` and ``--trace-path`` are the shared
+scenario flags (`examples/_cli.py`, same plumbing as
+`examples/energy_fleet.py`): both modes run the same scenario scale and
+seeds, so trace and synthetic results are directly comparable.
 
 Add devices to shard the client axis, e.g.
 ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` — `simulate_serve`
@@ -25,24 +33,27 @@ passes ``mesh=`` straight through to the sharded fleet path.
 `benchmarks/serve_scale.py` records this comparison (plus throughput sweeps)
 in ``BENCH_serve.json`` per PR.
 """
+import argparse
+
 import jax
 import numpy as np
 
+from _cli import (add_scenario_flags, assistant_traffic, scenario_name,
+                  solar_harvest)
 from repro.energy import (AdmissionRule, BatteryConfig, ControlBounds,
-                          DecodeCostModel, MarkovSolar, ServerController)
-from repro.serve import (BatteryGated, DiurnalPoisson, EnergyAgnostic,
-                         QoSSpec, ServeConfig, TrainLoad,
-                         run_serve_controlled, simulate_serve)
+                          DecodeCostModel, ServerController)
+from repro.serve import (BatteryGated, EnergyAgnostic, QoSSpec, ServeConfig,
+                         TrainLoad, run_serve_controlled, simulate_serve)
 
-N, EPOCHS, CONTROL_EVERY = 100_000, 192, 24
+args = add_scenario_flags(argparse.ArgumentParser(description=__doc__), clients=100_000) \
+    .parse_args()
+N, EPOCHS, CONTROL_EVERY = args.clients, 192, 24
 
-# query traffic: ~1 request/client/epoch with a 90% day/night swing,
-# local time scattered over 24 time zones
-traffic = DiurnalPoisson.create(N, base=1.0, swing=0.9,
-                                phase=np.arange(N) % 24)
+# query traffic: ~1 request/client/epoch, day/night modulated (replayed
+# request-log profiles under --trace, the DiurnalPoisson twin otherwise)
+traffic = assistant_traffic(args, N, base=1.0)
 # solar harvest: ~50% day fraction, 3 J mean per daytime epoch
-harvest = MarkovSolar.create(N, p_stay_day=0.9, p_stay_night=0.9,
-                             day_mean=3.0)
+harvest = solar_harvest(args, N, day_mean=3.0)
 battery = BatteryConfig(capacity=8.0, leak=0.01, init_charge=2.0)
 # ~100M-active-param on-device model: ~0.77 J per full request (256 generated
 # tokens), ~0.32 J degraded (32 tokens)
@@ -51,7 +62,7 @@ qos = QoSSpec(prompt_tokens=128.0, full_decode_tokens=256.0,
               short_decode_tokens=32.0)
 # a federated training round every ~4 epochs, 0.2 J, from the SAME battery
 train = TrainLoad.create(np.full(N, 4), 0.2)
-cfg = ServeConfig(num_clients=N, seed=0)
+cfg = ServeConfig(num_clients=N, seed=args.seed)
 
 mesh = None
 if jax.device_count() > 1:
@@ -60,7 +71,8 @@ if jax.device_count() > 1:
 
 full_j = float(np.asarray(qos.request_cost(cost)))
 short_j = float(np.asarray(qos.request_cost(cost, degraded=True)))
-print(f"fleet: N={N:,}, {EPOCHS} epochs; request={full_j:.2f} J full / "
+print(f"fleet: N={N:,}, {EPOCHS} epochs, {scenario_name(args)} scenario, "
+      f"seed={args.seed}; request={full_j:.2f} J full / "
       f"{short_j:.2f} J degraded; training round=0.2 J every ~4 epochs\n")
 
 runs = {

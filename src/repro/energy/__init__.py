@@ -16,6 +16,7 @@ from repro.energy.arrivals import (
     Sum,
     client_exponential,
     client_keys,
+    client_randint,
     client_uniform,
     truncated_poisson,
 )
@@ -48,8 +49,8 @@ from repro.energy.fleet import (
 
 __all__ = [
     "Bernoulli", "CompoundPoisson", "DeterministicRenewal", "MarkovSolar",
-    "Scaled", "Sum", "client_exponential", "client_keys", "client_uniform",
-    "truncated_poisson",
+    "Scaled", "Sum", "TraceHarvest", "client_exponential", "client_keys",
+    "client_randint", "client_uniform", "truncated_poisson",
     "BatteryConfig", "absorb", "drain", "step",
     "AdmissionRule", "BudgetRule", "CadenceRule", "ControlBounds",
     "ControlState", "ServerController", "Telemetry", "run_controlled",
@@ -58,3 +59,13 @@ __all__ = [
     "FLEET_POLICIES", "EnergyLoop", "FleetConfig", "FleetResult",
     "fleet_mask", "simulate_fleet",
 ]
+
+
+def __getattr__(name: str):
+    # `TraceHarvest` lives in `repro.traces.replay`, which itself builds on
+    # `energy.arrivals` — a lazy (PEP 562) re-export registers it here as an
+    # arrivals process without an import cycle, whichever package loads first.
+    if name == "TraceHarvest":
+        from repro.traces.replay import TraceHarvest
+        return TraceHarvest
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -34,6 +34,9 @@ Processes
   window of ``E_i`` rounds: the degenerate case reproducing the repo's
   original static ``E_i`` renewal-cycle semantics (`core.scheduling`).
 * ``Sum`` / ``Scaled`` — composition: multi-source harvesters and gain knobs.
+* ``TraceHarvest`` (`repro.traces.replay`, exported as
+  `repro.energy.TraceHarvest`) — replayed measured NSRDB-style day profiles
+  under the same contract and per-client RNG derivation (DESIGN.md §10).
 """
 from __future__ import annotations
 
@@ -65,6 +68,14 @@ def client_keys(key, n: int) -> jax.Array:
 def client_uniform(key, n: int) -> jax.Array:
     """(n,) uniforms where value ``i`` depends only on ``(key, i)``."""
     return jax.vmap(lambda k: jax.random.uniform(k, ()))(client_keys(key, n))
+
+
+def client_randint(key, n: int, bound: int) -> jax.Array:
+    """(n,) int32 uniform draws over {0..bound-1}, per-client-derived like
+    `client_uniform` (value ``i`` depends only on ``(key, i, bound)``) —
+    the trace-replay layer's profile-row / time-zone assignment draw."""
+    u = client_uniform(key, n)
+    return jnp.minimum((u * bound).astype(jnp.int32), bound - 1)
 
 
 def client_exponential(key, n: int, extra_shape: tuple = ()) -> jax.Array:

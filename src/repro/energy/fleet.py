@@ -41,6 +41,13 @@ elementwise battery/policy math along the client axis and lowers the
 one compiled program sweeps 1e7–1e8 clients across hosts, and the sharded
 path is bit-exact with the host-local one (per-client RNG derivation,
 `energy.arrivals.client_uniform`).
+
+Trace replay (DESIGN.md §10): `repro.traces.replay.TraceHarvest` drops in
+for any arrival process here — the scan hands ``sample`` the *absolute*
+round index (``round_offset + arange``), which replay maps onto its day
+profile as ``(t + phase_i) mod T``, so chunked `energy.control.
+run_controlled` horizons land on the same trace slots as unchunked ones and
+the sharded-parity contract carries over unchanged.
 """
 from __future__ import annotations
 

@@ -20,5 +20,15 @@ __all__ = [
     "ServeConfig", "ServeResult", "TrainLoad",
     "run_serve_controlled", "simulate_serve",
     "DEGRADED", "FULL", "SHED", "QoSSpec",
-    "MMPP", "Constant", "DiurnalPoisson",
+    "MMPP", "Constant", "DiurnalPoisson", "TraceTraffic",
 ]
+
+
+def __getattr__(name: str):
+    # `TraceTraffic` lives in `repro.traces.replay`, which builds on
+    # `energy.arrivals` — a lazy (PEP 562) re-export registers it here as a
+    # traffic process without an import cycle, whichever package loads first.
+    if name == "TraceTraffic":
+        from repro.traces.replay import TraceTraffic
+        return TraceTraffic
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

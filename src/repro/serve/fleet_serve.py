@@ -39,6 +39,13 @@ shards the client axis of every ``(N,)`` tensor over the mesh's data axes
 (`dist.sharding.fleet_spec`), pads N up with edge-replicated phantom clients
 excluded from telemetry by a ``valid`` weight, and is bit-exact with the
 host-local path (per-client RNG, `energy.arrivals.client_uniform`).
+
+Trace replay (DESIGN.md §10): `repro.traces.replay.TraceTraffic` /
+`TraceHarvest` drop in for the traffic/harvest processes — the scan hands
+``sample`` the *absolute* epoch index (``epoch_offset + arange``), which
+replay maps onto its day profile as ``(t + phase_i) mod T``, so chunked
+`run_serve_controlled` horizons land on the same trace slots as unchunked
+ones and the sharded-parity contract carries over unchanged.
 """
 from __future__ import annotations
 

@@ -26,6 +26,9 @@ Processes
   the epoch's Poisson rate.  Models flash crowds / hot sessions.
 * ``Constant`` — exactly ``rate_i`` requests every epoch; the deterministic
   degenerate case (and the exact-arithmetic config of the parity oracle).
+* ``TraceTraffic`` (`repro.traces.replay`, exported as
+  `repro.serve.TraceTraffic`) — replayed measured request-log day profiles
+  under the same contract and per-client RNG derivation (DESIGN.md §10).
 """
 from __future__ import annotations
 

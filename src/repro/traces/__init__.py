@@ -1,0 +1,31 @@
+"""Trace-driven scenarios: bundled day profiles, replay processes, and
+calibration of the synthetic processes against traces.
+
+See DESIGN.md §10.  Three layers:
+
+* `profiles` — deterministic NSRDB-style solar and app-assistant request
+  day-profile generators (no network/file dependency) + `load_trace` for
+  user-supplied ``.npy``/``.csv`` measurements, all in one ``(T, P)`` table
+  format.
+* `replay` — `TraceHarvest` (an `energy.arrivals` process) and
+  `TraceTraffic` (a `serve.traffic` process) replaying a table over the
+  fleet under the per-client-RNG padding/partition-invariance contract, so
+  the mesh-sharded scans stay bit-exact with host-local.
+* `fit` — `fit_markov_solar` / `fit_diurnal_poisson` / `fit_mmpp` estimate
+  ready-to-run synthetic twins from traces or replayed `sample_paths`.
+"""
+from repro.traces.fit import (fit_diurnal_poisson, fit_markov_solar, fit_mmpp,
+                              sample_paths)
+from repro.traces.profiles import (CLOUDS, REQUEST_KINDS, SEASONS, load_trace,
+                                   request_day_profile, request_profile_table,
+                                   rescale, solar_day_profile,
+                                   solar_profile_table)
+from repro.traces.replay import TraceHarvest, TraceTraffic
+
+__all__ = [
+    "fit_diurnal_poisson", "fit_markov_solar", "fit_mmpp", "sample_paths",
+    "CLOUDS", "REQUEST_KINDS", "SEASONS", "load_trace",
+    "request_day_profile", "request_profile_table", "rescale",
+    "solar_day_profile", "solar_profile_table",
+    "TraceHarvest", "TraceTraffic",
+]

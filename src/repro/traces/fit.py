@@ -1,0 +1,251 @@
+"""Calibrate the synthetic processes against traces / replayed sample paths.
+
+Each ``fit_*`` estimator consumes a plain sample array — ``(R,)`` one path
+or ``(R, N)`` per-client paths, e.g. `sample_paths` over a `TraceHarvest` /
+`TraceTraffic` replay or any recorded per-round measurements — and returns a
+**ready-to-run process pytree** (`MarkovSolar`, `DiurnalPoisson`, `MMPP`)
+sized to ``num_clients``, with every fitted parameter broadcast per client.
+Fitted processes have exactly the treedef/shapes of hand-built ones, so they
+reuse the fleet/serve scans' jit cache (tested).
+
+Estimators (DESIGN.md §10 documents the recovery tolerances the round-trip
+property tests lock):
+
+* `fit_markov_solar` — threshold/moment initialization (2-means split,
+  regime means by moment matching, stay probabilities by pooled per-client
+  transition counting on the labels) refined by Baum-Welch EM on the
+  2-state exponential-emission HMM.  Plain thresholding alone mislabels the
+  ~1/5 of day draws whose Exp(1) cloud mark falls below the cut, biasing
+  the chain estimates; forward-backward weighting removes that bias.
+  Identifiable when the regimes separate (``night_mean`` well below
+  ``day_mean`` — the solar case).
+* `fit_diurnal_poisson` — exact least squares on the empirical daily rate:
+  bin counts by time-of-day, project the bin means onto the first Fourier
+  harmonic (the FFT bin at 1/period); base is the mean, swing the relative
+  first-harmonic amplitude, phase its angle.  Unbiased for data generated at
+  a sinusoidal rate observed over whole periods.
+* `fit_mmpp` — 2-means regime labeling initializes calm/burst rates and
+  stay probabilities, refined by the same Baum-Welch machinery with Poisson
+  emissions (the M-step is identical — both families' MLE is the
+  gamma-weighted sample mean).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.energy.arrivals import MarkovSolar
+from repro.serve.traffic import MMPP, DiurnalPoisson
+
+_EPS = 1e-6
+
+
+@partial(jax.jit, static_argnames=("num_rounds",))
+def _scan_paths(process, base_key, *, num_rounds):
+    def body(state, r):
+        h, state = process.sample(jax.random.fold_in(base_key, r), r, state)
+        return state, h
+
+    _, hs = jax.lax.scan(body, process.init(),
+                         jnp.arange(num_rounds, dtype=jnp.int32))
+    return hs
+
+
+def sample_paths(process, num_rounds: int, seed=0) -> np.ndarray:
+    """(R, N) sample paths of any arrivals/traffic process: round ``r`` draws
+    with ``fold_in(key, r)`` — the fleet scan's per-round key derivation
+    (`energy.fleet`), so fitting on these paths is fitting the same law a
+    simulation replays.  (The serve scan additionally folds a per-stream
+    index — ``fold_in(fold_in(key, t), 0|1)`` — so its *realizations* differ
+    even at the same seed; the distribution, which is what the estimators
+    consume, does not.)"""
+    key = seed if hasattr(seed, "dtype") else jax.random.PRNGKey(seed)
+    return np.asarray(_scan_paths(process, key, num_rounds=num_rounds))
+
+
+def _as_paths(x) -> np.ndarray:
+    x = np.asarray(x, np.float64)
+    if x.ndim == 1:
+        x = x[:, None]
+    if x.ndim != 2 or x.shape[0] < 2:
+        raise ValueError(f"need (R,) or (R, N) samples with R >= 2, "
+                         f"got shape {x.shape}")
+    return x
+
+
+def _two_means_threshold(x: np.ndarray, iters: int = 32) -> float:
+    """1-D 2-means cluster boundary (init at the 10th/90th percentiles):
+    the generic low/high regime splitter both CEM fits start from."""
+    lo, hi = np.percentile(x, 10.0), np.percentile(x, 90.0)
+    if hi <= lo:
+        return float(lo)
+    for _ in range(iters):
+        thr = 0.5 * (lo + hi)
+        low, high = x[x <= thr], x[x > thr]
+        if low.size == 0 or high.size == 0:
+            break
+        lo2, hi2 = float(low.mean()), float(high.mean())
+        if lo2 == lo and hi2 == hi:
+            break
+        lo, hi = lo2, hi2
+    return 0.5 * (lo + hi)
+
+
+def _stay_probs(high: np.ndarray) -> tuple[float, float]:
+    """Pooled per-client transition counts on an (R, N) boolean regime
+    labeling -> (p_stay_low, p_stay_high); defaults to 0.5 when a regime was
+    never visited (nothing to count)."""
+    a, b = high[:-1], high[1:]
+
+    def stay(mask_from, mask_stay):
+        total = float(mask_from.sum())
+        return float((mask_from & mask_stay).sum()) / total if total else 0.5
+
+    return stay(~a, ~b), stay(a, b)
+
+
+def _regime_means(x, high) -> tuple[float, float]:
+    lowv, highv = x[~high], x[high]
+    hi = float(highv.mean()) if highv.size else float(x.max())
+    lo = float(lowv.mean()) if lowv.size else 0.0
+    return lo, hi
+
+
+def _moment_init(x: np.ndarray, family: str):
+    """Threshold/moment initialization: 2-means labels -> regime means +
+    pooled stay probabilities.  Exponential mixtures are split in *log*
+    space, where the regimes sit ``log(hi/lo)`` apart with a fixed-shape
+    log-Exp(1) spread — a linear 2-means cut lands in the high regime's
+    tail instead of at the regime boundary.  Biased on overlapping mixtures
+    but always in the EM basin (Baum-Welch removes the residual bias)."""
+    y = np.log(x + 1e-9) if family == "exponential" else x
+    high = y > _two_means_threshold(y.ravel())
+    lo, hi = _regime_means(x.ravel(), high.ravel())
+    p_lo, p_hi = _stay_probs(high)
+    return lo, hi, p_lo, p_hi
+
+
+def _log_emissions(x, mean: float, family: str) -> np.ndarray:
+    m = max(mean, _EPS)
+    if family == "exponential":
+        return -x / m - np.log(m)
+    # poisson (the x! term is state-independent and cancels in the
+    # per-sample normalization, so it is dropped)
+    return x * np.log(m) - m
+
+
+def _baum_welch(x: np.ndarray, lo: float, hi: float, p_lo: float,
+                p_hi: float, family: str, iters: int):
+    """Baum-Welch on a 2-state regime chain observed per client.
+
+    ``x`` is (R, N); every client column is an independent path of the SAME
+    pooled chain (the fleet's clients share parameters), so forward-backward
+    runs vectorized over clients and the M-step pools their sufficient
+    statistics.  Both emission families' M-step is the gamma-weighted sample
+    mean (exponential mean / Poisson rate MLE alike).  Returns
+    ``(lo, hi, p_stay_lo, p_stay_hi)``.
+    """
+    R, N = x.shape
+    pi = np.full(2, 0.5)
+    prev = None
+    for _ in range(iters):
+        A = np.array([[p_lo, 1.0 - p_lo], [1.0 - p_hi, p_hi]])
+        logB = np.stack([_log_emissions(x, lo, family),
+                         _log_emissions(x, hi, family)], axis=-1)
+        B = np.exp(logB - logB.max(axis=-1, keepdims=True))  # (R, N, 2)
+        # scaled forward / backward, vectorized over the N client columns
+        alpha = np.empty((R, N, 2))
+        a = pi[None, :] * B[0]
+        alpha[0] = a / np.maximum(a.sum(-1, keepdims=True), _EPS)
+        for t in range(1, R):
+            a = (alpha[t - 1] @ A) * B[t]
+            alpha[t] = a / np.maximum(a.sum(-1, keepdims=True), _EPS)
+        beta = np.empty((R, N, 2))
+        beta[-1] = 1.0
+        for t in range(R - 2, -1, -1):
+            b = (B[t + 1] * beta[t + 1]) @ A.T
+            beta[t] = b / np.maximum(b.sum(-1, keepdims=True), _EPS)
+        gamma = alpha * beta
+        gamma /= np.maximum(gamma.sum(-1, keepdims=True), _EPS)
+        # xi[t] ~ alpha_t(i) A(i,j) B_{t+1}(j) beta_{t+1}(j), pooled
+        xi = (alpha[:-1, :, :, None] * A[None, None]
+              * (B[1:] * beta[1:])[:, :, None, :])
+        xi /= np.maximum(xi.sum((-2, -1), keepdims=True), _EPS)
+        trans = xi.sum((0, 1))                      # (2, 2) pooled counts
+        occ = gamma[:-1].sum((0, 1))                # (2,) pooled occupancy
+        p_lo = float(trans[0, 0] / max(occ[0], _EPS))
+        p_hi = float(trans[1, 1] / max(occ[1], _EPS))
+        w = gamma.sum((0, 1))
+        lo = float((gamma[..., 0] * x).sum() / max(w[0], _EPS))
+        hi = float((gamma[..., 1] * x).sum() / max(w[1], _EPS))
+        pi = gamma[0].mean(axis=0)
+        if hi < lo:                                 # keep state 1 the high one
+            lo, hi, p_lo, p_hi = hi, lo, p_hi, p_lo
+            pi = pi[::-1]
+        cur = (lo, hi, p_lo, p_hi)
+        if prev is not None and max(abs(a - b)
+                                    for a, b in zip(cur, prev)) < 1e-5:
+            break
+        prev = cur
+    return lo, hi, min(p_lo, 1.0), min(p_hi, 1.0)
+
+
+def fit_markov_solar(paths, num_clients: int | None = None, *,
+                     em_iters: int = 25) -> MarkovSolar:
+    """Fit a `MarkovSolar` to (R,)/(R, N) harvest samples: threshold/moment
+    initialization refined by Baum-Welch EM on the exponential-emission
+    regime chain (module docstring has the estimator details)."""
+    x = _as_paths(paths)
+    n = x.shape[1] if num_clients is None else num_clients
+    night, day, p_night, p_day = _baum_welch(
+        x, *_moment_init(x, "exponential"), "exponential", em_iters)
+    return MarkovSolar.create(n, p_stay_day=p_day, p_stay_night=p_night,
+                              day_mean=day, night_mean=night)
+
+
+def fit_diurnal_poisson(counts, num_clients: int | None = None, *,
+                        period: int = 24, t0: int = 0,
+                        max_requests: int = 16) -> DiurnalPoisson:
+    """Fit a `DiurnalPoisson` to (R,)/(R, N) request counts observed from
+    epoch ``t0``: project the empirical time-of-day rate onto the first
+    Fourier harmonic.
+
+    With ``rbar[tau]`` the mean count in day slot ``tau`` and ``theta =
+    2*pi*tau/period``: ``base = mean(rbar)``, the quadrature components
+    ``a = (2/P) sum rbar sin(theta)``, ``b = (2/P) sum rbar cos(theta)``
+    give ``swing = sqrt(a^2+b^2)/base`` and ``phase = (P/2pi) atan2(b, a)``
+    — exact least squares on the bin means, so the round-trip recovery is
+    unbiased when R spans whole periods.
+    """
+    x = _as_paths(counts)
+    n = x.shape[1] if num_clients is None else num_clients
+    tau = (t0 + np.arange(x.shape[0])) % period
+    rbar = np.zeros(period)
+    for s in range(period):
+        sel = x[tau == s]
+        rbar[s] = sel.mean() if sel.size else 0.0
+    theta = 2.0 * np.pi * np.arange(period) / period
+    base = float(rbar.mean())
+    a = 2.0 / period * float((rbar * np.sin(theta)).sum())
+    b = 2.0 / period * float((rbar * np.cos(theta)).sum())
+    swing = min(1.0, float(np.hypot(a, b)) / max(base, _EPS))
+    phase = float(period / (2.0 * np.pi) * np.arctan2(b, a)) % period
+    return DiurnalPoisson.create(n, base=base, swing=swing, phase=phase,
+                                 period=period, max_requests=max_requests)
+
+
+def fit_mmpp(counts, num_clients: int | None = None, *, em_iters: int = 25,
+             max_requests: int = 16) -> MMPP:
+    """Fit an `MMPP` to (R,)/(R, N) request counts: 2-means regime labeling
+    initializes rates and stay probabilities, refined by Baum-Welch EM with
+    Poisson emissions (module docstring has the estimator details)."""
+    x = _as_paths(counts)
+    n = x.shape[1] if num_clients is None else num_clients
+    calm, hot, p_calm, p_burst = _baum_welch(
+        x, *_moment_init(x, "poisson"), "poisson", em_iters)
+    return MMPP.create(n, p_stay_calm=p_calm, p_stay_burst=p_burst,
+                       calm_rate=calm, burst_rate=hot,
+                       max_requests=max_requests)

@@ -1,0 +1,189 @@
+"""Trace replay as arrival/traffic processes on the (shardable) fleet.
+
+`TraceHarvest` satisfies the `repro.energy.arrivals` contract and
+`TraceTraffic` the `repro.serve.traffic` one, so measured day profiles drop
+into every consumer of those registries unchanged: `simulate_fleet`,
+`simulate_serve`, the chunked `run_controlled` / `run_serve_controlled`
+closed loops, `EnergyLoop`, and `Sum` / `Scaled` composition with the
+synthetic processes.
+
+Replay semantics (DESIGN.md §10):
+
+* **Client -> profile assignment.**  Each client gets a profile *column*
+  ``row_i``, a time-zone *phase* ``phase_i`` and an amplitude *gain*
+  ``gain_i``.  The ``create`` constructors derive all three ONLY through
+  `arrivals.client_uniform` draws (``fold_in(key, i)`` then a scalar), so
+  client i's assignment depends on ``(seed, i)`` alone — never on the fleet
+  width.  That is the same padding/partition-invariance contract the
+  synthetic processes obey: the mesh-sharded path pads N up with phantom
+  clients and still reproduces host-local replay bit-exactly.
+* **Round -> slot mapping.**  Round ``t`` reads table slot
+  ``(t + phase_i) mod T``.  Both fleet scans feed ``sample`` the *absolute*
+  round index (``round_offset + arange`` — `energy.fleet` /
+  `serve.fleet_serve`), so chunked controller runs land on the same slots
+  as an unchunked horizon, bit-exactly.
+* **Determinism.**  ``TraceHarvest`` replays the table value itself
+  (``gain_i * table[slot, row_i]`` — measured joules need no extra noise;
+  compose with `arrivals.Sum`/`Scaled` for stochastic side channels).
+  ``TraceTraffic`` treats the table as a *rate* and draws Poisson counts
+  through `arrivals.truncated_poisson` by default; ``poisson=False`` replays
+  the rates as deterministic request counts (integer tables then keep every
+  downstream quantity on the exact fp32 grid — the parity-oracle config).
+
+Sharding note: the ``(T, P)`` table is a pytree leaf with no client axis, so
+the fleet padding/placement machinery replicates it across the mesh — unless
+``T`` happens to equal the *padded* fleet width, in which case
+`dist.sharding.fleet_specs`'s shape heuristic shards the time axis instead
+(still exact: the per-client gather all-gathers what it needs; just slower).
+Pick ``T != padded N`` for large fleets.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.energy.arrivals import (PyTree, _per_client, _pytree,
+                                   client_randint, client_uniform,
+                                   truncated_poisson)
+
+
+def _assign(table, num_clients: int, seed, row, phase, gain, gain_jitter,
+            scale):
+    """Resolve the per-client (row, phase, gain) assignment: explicit arrays
+    win; defaults are derived per client from ``fold_in(seed-key, i)`` draws
+    (`client_randint`/`client_uniform`), the padding-invariant derivation."""
+    table = jnp.asarray(table, jnp.float32)
+    if table.ndim == 1:
+        table = table[:, None]
+    if table.ndim != 2:
+        raise ValueError(f"profile table must be (T,) or (T, P), "
+                         f"got shape {table.shape}")
+    T, P = table.shape
+    key = seed if hasattr(seed, "dtype") else jax.random.PRNGKey(seed)
+    n = num_clients
+    if row is None:
+        row = client_randint(jax.random.fold_in(key, 0), n, P)
+    else:
+        row = jnp.asarray(row, jnp.int32)
+    if phase is None:
+        phase = client_randint(jax.random.fold_in(key, 1), n, T)
+    else:
+        phase = jnp.asarray(phase, jnp.int32)
+    if gain is None:
+        u = client_uniform(jax.random.fold_in(key, 2), n)
+        gain = scale * (1.0 + gain_jitter * (2.0 * u - 1.0))
+    else:
+        gain = _per_client(gain, n)
+    for name, arr in (("row", row), ("phase", phase), ("gain", gain)):
+        if arr.shape != (n,):
+            raise ValueError(f"{name} must be ({n},), got {arr.shape}")
+    return table, row, phase, gain
+
+
+def _replay_value(table, row, phase, gain, t) -> jax.Array:
+    """(N,) replayed rate at round ``t``: ``gain_i * table[(t + phase_i)
+    mod T, row_i]`` — elementwise in the client index, so it shards and
+    pads like every other per-client op."""
+    T = table.shape[0]
+    slot = (jnp.asarray(t, jnp.int32) + phase) % T
+    return gain * table[slot, row]
+
+
+@_pytree(("table", "row", "phase", "gain"))
+@dataclasses.dataclass(frozen=True)
+class TraceHarvest:
+    """Replayed measured harvest: client i collects ``gain_i *
+    table[(t + phase_i) mod T, row_i]`` joules at round ``t``.
+
+    An `energy.arrivals` process (registered pytree; exported as
+    `repro.energy.TraceHarvest`): drop-in for `MarkovSolar` et al. in the
+    fleet scan, `EnergyLoop`, and `Sum`/`Scaled` composition.  Replay is
+    deterministic given the assignment — the randomness budget lives in the
+    *measured* profile, which is the point of trace-driven evaluation.
+    """
+
+    table: jax.Array  # (T, P) f32 joules per slot per profile
+    row: jax.Array    # (N,) int32 client -> profile column
+    phase: jax.Array  # (N,) int32 time-zone offset, slots
+    gain: jax.Array   # (N,) f32 amplitude scale (panel size / efficiency)
+
+    @classmethod
+    def create(cls, table, num_clients: int, seed=0, *, row=None, phase=None,
+               gain=None, gain_jitter: float = 0.0,
+               scale: float = 1.0) -> "TraceHarvest":
+        """Assign ``num_clients`` clients onto ``table``.
+
+        Defaults draw row/phase uniformly and gain in ``scale * [1 -
+        gain_jitter, 1 + gain_jitter]``, each through the per-client RNG
+        derivation; pass explicit ``row``/``phase``/``gain`` arrays to pin
+        an assignment (golden tests, measured per-device metadata).
+        """
+        return cls(*_assign(table, num_clients, seed, row, phase, gain,
+                            gain_jitter, scale))
+
+    @property
+    def num_clients(self) -> int:
+        return self.row.shape[0]
+
+    def rate_at(self, t) -> jax.Array:
+        """(N,) replayed joules per slot at round ``t`` (== the sample)."""
+        return _replay_value(self.table, self.row, self.phase, self.gain, t)
+
+    def init(self) -> PyTree:
+        return ()
+
+    def sample(self, key, t, state):
+        del key
+        return self.rate_at(t), state
+
+
+@_pytree(("table", "row", "phase", "gain"), ("max_requests", "poisson"))
+@dataclasses.dataclass(frozen=True)
+class TraceTraffic:
+    """Replayed measured request traffic: the table is client i's mean
+    request rate per slot; epoch ``t`` draws ``Poisson(gain_i * table[(t +
+    phase_i) mod T, row_i])`` counts through `arrivals.truncated_poisson`
+    (``poisson=False`` replays the rates as deterministic counts — integer
+    tables stay on the exact fp32 grid, the parity-oracle config).
+
+    A `serve.traffic` process (registered pytree; exported as
+    `repro.serve.TraceTraffic`): drop-in for `DiurnalPoisson`/`MMPP` in the
+    serving scan and the closed-loop admission controller.
+    """
+
+    table: jax.Array  # (T, P) f32 mean requests per slot per profile
+    row: jax.Array    # (N,) int32 client -> profile column
+    phase: jax.Array  # (N,) int32 time-zone offset, slots
+    gain: jax.Array   # (N,) f32 per-client activity scale
+    max_requests: int = 16
+    poisson: bool = True
+
+    @classmethod
+    def create(cls, table, num_clients: int, seed=0, *, row=None, phase=None,
+               gain=None, gain_jitter: float = 0.0, scale: float = 1.0,
+               max_requests: int = 16, poisson: bool = True) -> "TraceTraffic":
+        """Assign ``num_clients`` clients onto ``table`` (same defaults and
+        per-client RNG derivation as `TraceHarvest.create`)."""
+        return cls(*_assign(table, num_clients, seed, row, phase, gain,
+                            gain_jitter, scale), max_requests, poisson)
+
+    @property
+    def num_clients(self) -> int:
+        return self.row.shape[0]
+
+    def rate_at(self, t) -> jax.Array:
+        """(N,) replayed mean requests per slot at epoch ``t``."""
+        return _replay_value(self.table, self.row, self.phase, self.gain, t)
+
+    def init(self) -> PyTree:
+        return ()
+
+    def sample(self, key, t, state):
+        rate = self.rate_at(t)
+        if not self.poisson:
+            return rate, state
+        u = client_uniform(key, self.num_clients)
+        k = truncated_poisson(u, rate, self.max_requests)
+        return k.astype(jnp.float32), state

@@ -14,7 +14,7 @@ import numpy as np
 
 from repro.core import EnergyProfile, Policy
 from repro.energy import (BatteryConfig, Bernoulli, FleetConfig, MarkovSolar,
-                          simulate_fleet)
+                          TraceHarvest, simulate_fleet)
 from repro.energy.fleet import FLEET_POLICIES, _run_fleet_scan
 
 
@@ -59,6 +59,30 @@ def check_stochastic(mesh, n, rounds=40):
         assert np.allclose(host.stats[k], shard.stats[k], rtol=1e-5), k
 
 
+def check_trace_parity(mesh, n, rounds=30):
+    """`TraceHarvest` replay on the sharded client axis: dyadic table values
+    and zero leak keep every quantity on the exact fp32 grid, so masks AND
+    telemetry must be bit-exact with host-local — the trace table (T=12, P=3)
+    carries no client axis and rides along replicated."""
+    E = np.asarray(EnergyProfile(n).cycles())
+    table = np.asarray([[0.25, 2.0, 0.5], [1.5, 0.0, 1.0], [3.0, 0.5, 0.0],
+                        [0.0, 1.25, 2.5]] * 3, np.float32)   # (12, 3) dyadic
+    proc = TraceHarvest.create(table, n, seed=5)
+    bat = BatteryConfig(capacity=2.5, leak=0.0, init_charge=0.5)
+    for pol in FLEET_POLICIES:
+        cfg = FleetConfig(num_clients=n, policy=pol, threshold=1.5, seed=3)
+        kw = dict(E=E, record_masks=True)
+        host = simulate_fleet(proc, bat, 0.75, cfg, rounds, **kw)
+        shard = simulate_fleet(proc, bat, 0.75, cfg, rounds, mesh=mesh, **kw)
+        assert np.array_equal(np.asarray(host.masks),
+                              np.asarray(shard.masks)), (n, pol, "masks")
+        assert np.array_equal(np.asarray(host.final_charge),
+                              np.asarray(shard.final_charge)), (n, pol)
+        for k in host.stats:
+            assert np.array_equal(host.stats[k], shard.stats[k]), \
+                (n, pol, k, host.stats[k] - shard.stats[k])
+
+
 def check_sharded_cache_reuse(mesh, n):
     """Repeat sharded calls with different seeds/thresholds must hit the jit
     cache (same shapes, same shardings)."""
@@ -87,6 +111,8 @@ def main():
     check_parity(mesh, n=21)    # padded 21 -> 24 (phantom-lane path)
     check_stochastic(mesh, n=24)
     check_stochastic(mesh, n=21)
+    check_trace_parity(mesh, n=24)
+    check_trace_parity(mesh, n=21)
     check_sharded_cache_reuse(mesh, n=32)
     # a mesh with a model axis: fleet state shards over data axes only
     mesh2 = jax.make_mesh((4, 2), ("data", "model"))

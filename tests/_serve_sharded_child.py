@@ -10,10 +10,11 @@ import numpy as np
 
 import jax
 
-from repro.energy import BatteryConfig, Bernoulli, DecodeCostModel, MarkovSolar
+from repro.energy import (BatteryConfig, Bernoulli, DecodeCostModel,
+                          MarkovSolar, TraceHarvest)
 from repro.serve import (BatteryGated, ChargeGated, Constant, DiurnalPoisson,
-                         EnergyAgnostic, QoSSpec, ServeConfig, TrainLoad,
-                         simulate_serve)
+                         EnergyAgnostic, QoSSpec, ServeConfig, TraceTraffic,
+                         TrainLoad, simulate_serve)
 from repro.serve.fleet_serve import _run_serve_scan
 
 QOS = QoSSpec(prompt_tokens=64.0, full_decode_tokens=128.0,
@@ -73,6 +74,38 @@ def check_stochastic(mesh, n, epochs=40):
         assert np.allclose(host.stats[k], shard.stats[k], rtol=1e-5), k
 
 
+def check_trace_parity(mesh, n, epochs=30):
+    """`TraceTraffic` (deterministic integer-rate replay) + `TraceHarvest`
+    (dyadic solar table) on the sharded client axis: the exact-arithmetic
+    trace config, so modes AND the full serving ledger must be bit-exact
+    with host-local for every admission policy; the (T, P) tables carry no
+    client axis and ride along replicated."""
+    req_table = np.asarray([[1.0, 3.0], [2.0, 0.0], [0.0, 1.0],
+                            [4.0, 2.0]] * 3, np.float32)     # (12, 2) ints
+    sol_table = np.asarray([[0.25, 2.0, 0.5], [1.5, 0.0, 1.0],
+                            [3.0, 0.5, 0.0], [0.0, 1.25, 2.5]] * 3,
+                           np.float32)                        # (12, 3) dyadic
+    traffic = TraceTraffic.create(req_table, n, seed=7, poisson=False)
+    harvest = TraceHarvest.create(sol_table, n, seed=5)
+    bat = BatteryConfig(capacity=2.5, leak=0.0, init_charge=0.5)
+    cost = DecodeCostModel(2.0 ** -8, 2.0 ** -9, 2.0 ** -6)
+    train = TrainLoad.create(np.full(n, 4), 0.25)
+    for pol in _policies(n):
+        cfg = ServeConfig(num_clients=n, seed=3)
+        kw = dict(record_modes=True, train=train)
+        host = simulate_serve(traffic, harvest, bat, cost, QOS, pol, cfg,
+                              epochs, **kw)
+        shard = simulate_serve(traffic, harvest, bat, cost, QOS, pol, cfg,
+                               epochs, mesh=mesh, **kw)
+        assert np.array_equal(np.asarray(host.modes),
+                              np.asarray(shard.modes)), (n, pol, "modes")
+        assert np.array_equal(np.asarray(host.final_charge),
+                              np.asarray(shard.final_charge)), (n, pol)
+        for k in host.stats:
+            assert np.array_equal(host.stats[k], shard.stats[k]), \
+                (n, pol, k, host.stats[k] - shard.stats[k])
+
+
 def check_sharded_cache_reuse(mesh, n):
     """Repeat sharded calls with different seeds/admission scales must hit
     the jit cache (same shapes, same shardings)."""
@@ -103,6 +136,8 @@ def main():
     check_parity(mesh, n=21)    # padded 21 -> 24 (phantom-lane path)
     check_stochastic(mesh, n=24)
     check_stochastic(mesh, n=21)
+    check_trace_parity(mesh, n=24)
+    check_trace_parity(mesh, n=21)
     check_sharded_cache_reuse(mesh, n=32)
     # a mesh with a model axis: serve state shards over data axes only
     mesh2 = jax.make_mesh((4, 2), ("data", "model"))
