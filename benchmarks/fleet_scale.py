@@ -5,6 +5,11 @@ is visible (CI runs an ``XLA_FLAGS=--xla_force_host_platform_device_count=8``
 job), a ``sharded`` section timing the mesh-sharded client axis at up to 1e7
 clients, and a ``controller`` section sweeping the battery-aware
 `ServerController` against the static schedule under a solar drought.
+A ``round_step`` section benchmarks the step-op layer itself (DESIGN.md
+§11): one fleet round executed unfused (one jit per op, one launch per
+telemetry stat), fused-lax (the simulators' single-jit ``backend="lax"``
+body) and as the Pallas kernel (interpret mode off-TPU), at 1e6 and 1e7
+clients, alongside the modeled HBM bytes-moved that explain the gap.
 Everything lands in ``BENCH_fleet.json`` — the repo's perf-trajectory
 artifact (uploaded per PR by CI's ``--smoke`` runs).
 
@@ -70,6 +75,80 @@ def bench_one(n: int, rounds: int, policy: Policy, process: str,
     if mesh is not None:
         rec["mesh_devices"] = int(np.prod(list(mesh.shape.values())))
     return rec
+
+
+def _time_step(fn, *args, reps: int) -> float:
+    """Steady-state ms per call: one warm-up (compile), then the mean of
+    ``reps`` timed calls, blocking on the whole output pytree."""
+    jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps * 1e3
+
+
+def bench_round_step(n: int, reps: int = 3) -> dict:
+    """The step-op layer head-to-head (DESIGN.md §11): one THRESHOLD-policy
+    fleet round (RNG-free, so only the step physics is timed) executed
+    three ways over the same synthetic n-client inputs —
+
+      * ``unfused``    — `step_ops.UnfusedRunner`: one jit per op, every
+        intermediate through HBM, one reduction launch per stat (the
+        pre-fusion cost model);
+      * ``lax_fused``  — one jit of `step_ops.run_step_lax`, i.e. exactly
+        the simulators' ``backend="lax"`` scan body;
+      * ``pallas``     — `kernels.fleet_step.fused_step` (interpret mode
+        off-TPU, where it measures overhead, not the TPU roofline);
+
+    plus `step_ops.bytes_moved`'s modeled HBM traffic for the unfused chain
+    vs the fused kernel.  The acceptance gate is
+    ``speedup_fused_vs_unfused >= 2`` at n >= 1e7."""
+    from repro.energy import step_ops
+    from repro.kernels import fleet_step
+
+    bat = BatteryConfig(capacity=2.0, leak=0.01)
+    program, env = step_ops.fleet_step_program(bat, Policy.THRESHOLD)
+    kc, kh = jax.random.split(jax.random.PRNGKey(0))
+    env.update(
+        charge=jax.random.uniform(kc, (n,), jax.numpy.float32, 0.0, 2.0),
+        harvest=jax.random.uniform(kh, (n,), jax.numpy.float32, 0.0, 1.5),
+        round_cost=jax.numpy.float32(1.0),
+        threshold=jax.numpy.float32(1.2))
+    valid = jax.numpy.ones((n,), jax.numpy.float32)
+
+    unfused = step_ops.UnfusedRunner(program)
+
+    @jax.jit
+    def lax_fused(e, v):
+        # return only what the simulators carry (state + stats): leaving the
+        # intermediates dead is what lets XLA fuse the whole chain — the
+        # very thing the unfused runner structurally cannot do
+        out, stats = step_ops.run_step_lax(program, e, valid=v)
+        return out["charge_out"], stats
+
+    pallas = jax.jit(
+        lambda e, v: fleet_step.fused_step(program, dict(e, valid=v), n=n))
+
+    unfused_ms = _time_step(lambda e: unfused(e, valid=valid), env,
+                            reps=reps)
+    lax_ms = _time_step(lax_fused, env, valid, reps=reps)
+    pallas_ms = _time_step(pallas, env, valid, reps=reps)
+
+    model = step_ops.bytes_moved(program, env, n)
+    return {
+        "num_clients": n,
+        "reps": reps,
+        "policy": Policy.THRESHOLD.value,
+        "unfused_ms": round(unfused_ms, 3),
+        "lax_fused_ms": round(lax_ms, 3),
+        "pallas_ms": round(pallas_ms, 3),
+        "pallas_interpret": bool(fleet_step.INTERPRET),
+        "speedup_fused_vs_unfused": round(unfused_ms / lax_ms, 3),
+        "modeled_unfused_bytes": int(model["unfused_bytes"]),
+        "modeled_fused_bytes": int(model["fused_bytes"]),
+        "modeled_bytes_ratio": round(model["ratio"], 3),
+    }
 
 
 def bench_controller(n: int, rounds: int, control_every: int = 10) -> dict:
@@ -156,6 +235,20 @@ def main():
         print("single device: skipping sharded section "
               "(set XLA_FLAGS=--xla_force_host_platform_device_count=8)")
 
+    # the round-step fusion section always includes 1e7: the acceptance
+    # gate (>= 2x fused-vs-unfused) is defined at >= 1e7 clients, smoke
+    # runs included
+    round_step = []
+    for n in [1_000_000, 10_000_000]:
+        rec = bench_round_step(n, reps=3 if n <= 1_000_000 else 2)
+        round_step.append(rec)
+        print(f"round_step N={n:>10,}: unfused={rec['unfused_ms']:.2f}ms  "
+              f"lax-fused={rec['lax_fused_ms']:.2f}ms  "
+              f"pallas={rec['pallas_ms']:.2f}ms"
+              f"{' (interpret)' if rec['pallas_interpret'] else ''}  "
+              f"speedup={rec['speedup_fused_vs_unfused']:.2f}x  "
+              f"bytes-model={rec['modeled_bytes_ratio']:.2f}x", flush=True)
+
     ctrl_rec = bench_controller(ctrl_n, args.rounds)
     print(f"controller N={ctrl_n:,}: participation "
           f"{ctrl_rec['static_participation']:.4f} -> "
@@ -166,7 +259,7 @@ def main():
 
     out = {"bench": "fleet_scale", "smoke": args.smoke, "rounds": args.rounds,
            "devices": n_dev, "results": results, "sharded": sharded,
-           "controller": ctrl_rec}
+           "round_step": round_step, "controller": ctrl_rec}
     with open(args.out, "w") as f:
         json.dump(out, f, indent=1)
     print(f"wrote {args.out}")

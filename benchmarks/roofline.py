@@ -6,6 +6,13 @@ Per (arch x shape) on the single-pod mesh:
   t_coll    = collective_bytes / (chips x 50 GB/s/link)
 plus the dominant term, MODEL_FLOPS = 6*N*D (active-N for MoE), and the
 useful-compute ratio MODEL_FLOPS / HLO_FLOPs.
+
+`round_step_records`/`round_step_table` model the fleet/serve round-step
+HBM traffic (DESIGN.md §11): bytes moved per round by the unfused op chain
+vs the fused step kernel, straight from the step-op IR's declared
+reads/writes (`repro.energy.step_ops.bytes_moved`).  Imported lazily —
+`benchmarks.run` loads this module for `csv_rows` without repro on the
+path.
 """
 from __future__ import annotations
 
@@ -66,6 +73,57 @@ def csv_rows(recs: list[dict]) -> list[tuple[str, float, str]]:
     return rows
 
 
+def round_step_records(n: int = 10_000_000) -> list[dict]:
+    """Modeled per-round HBM traffic of the fleet and serve step programs at
+    ``n`` clients: the unfused op chain (every intermediate + per-stat
+    re-reads) vs the fused kernel (one read of each distinct input, one
+    write per carried/emitted buffer).  Lazy repro imports — this is the
+    only function in the module that needs the package."""
+    import numpy as np
+
+    from repro.core import Policy
+    from repro.energy import BatteryConfig, DecodeCostModel, step_ops
+    from repro.serve import BatteryGated, QoSSpec
+
+    client = lambda: np.empty(n, np.float32)   # shape-only: never executed
+    recs = []
+
+    bat = BatteryConfig(capacity=2.0, leak=0.01)
+    program, env = step_ops.fleet_step_program(bat, Policy.THRESHOLD)
+    env.update(charge=client(), harvest=client(),
+               round_cost=np.float32(1.0), threshold=np.float32(1.2))
+    model = step_ops.bytes_moved(program, env, n)
+    recs.append({"program": "fleet_step", "num_clients": n, **model})
+
+    qos = QoSSpec(prompt_tokens=128.0, full_decode_tokens=256.0,
+                  short_decode_tokens=32.0)
+    program, env = step_ops.serve_step_program(
+        bat, DecodeCostModel.from_params(1e8), qos,
+        BatteryGated.create(n, hi=2.0, lo=1.5), train=None)
+    env.update(charge=client(), harvest=client(), requests=client(),
+               admit=np.float32(1.0))
+    model = step_ops.bytes_moved(program, env, n)
+    recs.append({"program": "serve_step", "num_clients": n, **model})
+    return recs
+
+
+def round_step_table(n: int = 10_000_000) -> str:
+    head = (f"{'program':12s} {'clients':>12s} {'unfused GiB':>12s} "
+            f"{'fused GiB':>10s} {'ratio':>7s}")
+    lines = [head, "-" * len(head)]
+    for r in round_step_records(n):
+        lines.append(f"{r['program']:12s} {r['num_clients']:12,d} "
+                     f"{r['unfused_bytes'] / 2 ** 30:12.3f} "
+                     f"{r['fused_bytes'] / 2 ** 30:10.3f} "
+                     f"{r['ratio']:7.2f}")
+    return "\n".join(lines)
+
+
 if __name__ == "__main__":
     recs = load_records()
     print(render_table(recs))
+    try:
+        print()
+        print(round_step_table())
+    except ImportError:
+        print("(repro not on PYTHONPATH: skipping round-step bytes model)")

@@ -7,6 +7,11 @@ an ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` job), a
 x >= 50 epochs, and an ``admission`` section pitting battery-gated admission
 against energy-agnostic serving under a solar day/night + diurnal-traffic
 scenario (the acceptance comparison: shed/unanswered rate and depletion).
+A ``round_step`` section benchmarks the serve step-op layer (DESIGN.md
+§11): one serving epoch executed unfused (one jit per op, one launch per
+ledger stat), fused-lax (the ``backend="lax"`` scan body) and as the
+Pallas kernel (interpret mode off-TPU) at 1e6 and 1e7 clients, with the
+modeled HBM bytes-moved alongside.
 Everything lands in ``BENCH_serve.json`` — uploaded per PR by CI's
 ``serve-scale`` job.
 
@@ -97,6 +102,78 @@ def bench_one(n: int, epochs: int, traffic_name: str, policy_name: str,
     if mesh is not None:
         rec["mesh_devices"] = int(np.prod(list(mesh.shape.values())))
     return rec
+
+
+def _time_step(fn, *args, reps: int) -> float:
+    """Steady-state ms per call: one warm-up (compile), then the mean of
+    ``reps`` timed calls, blocking on the whole output pytree."""
+    jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps * 1e3
+
+
+def bench_round_step(n: int, reps: int = 3) -> dict:
+    """The serve step-op layer head-to-head (the serve twin of
+    `fleet_scale.bench_round_step`): one battery-gated serving epoch —
+    absorb, price, admission decide, serve-drain, ledger, token totals,
+    RNG-free so only the step physics is timed — executed unfused
+    (`step_ops.UnfusedRunner`), as the single-jit lax backend
+    (`step_ops.run_step_lax`) and as the fused Pallas kernel
+    (`kernels.fleet_step.fused_step`, interpret mode off-TPU), plus the
+    `step_ops.bytes_moved` HBM-traffic model for both."""
+    import jax.numpy as jnp
+
+    from repro.energy import step_ops
+    from repro.kernels import fleet_step
+
+    bat = BatteryConfig(capacity=8.0, leak=0.01, init_charge=2.0)
+    pol = BatteryGated.create(n, hi=2.0, lo=1.5)
+    program, env = step_ops.serve_step_program(bat, COST, QOS, pol,
+                                               train=None)
+    kc, kh, kr = jax.random.split(jax.random.PRNGKey(0), 3)
+    env.update(
+        charge=jax.random.uniform(kc, (n,), jnp.float32, 0.0, 8.0),
+        harvest=jax.random.uniform(kh, (n,), jnp.float32, 0.0, 3.0),
+        requests=jnp.floor(jax.random.uniform(kr, (n,), jnp.float32,
+                                              0.0, 4.0)),
+        admit=jnp.float32(1.0))
+    valid = jnp.ones((n,), jnp.float32)
+
+    unfused = step_ops.UnfusedRunner(program)
+
+    @jax.jit
+    def lax_fused(e, v):
+        # return only what the simulators carry (state + stats): leaving the
+        # intermediates dead is what lets XLA fuse the whole chain — the
+        # very thing the unfused runner structurally cannot do
+        out, stats = step_ops.run_step_lax(program, e, valid=v)
+        return out["charge_out"], stats
+
+    pallas = jax.jit(
+        lambda e, v: fleet_step.fused_step(program, dict(e, valid=v), n=n))
+
+    unfused_ms = _time_step(lambda e: unfused(e, valid=valid), env,
+                            reps=reps)
+    lax_ms = _time_step(lax_fused, env, valid, reps=reps)
+    pallas_ms = _time_step(pallas, env, valid, reps=reps)
+
+    model = step_ops.bytes_moved(program, env, n)
+    return {
+        "num_clients": n,
+        "reps": reps,
+        "policy": "gated",
+        "unfused_ms": round(unfused_ms, 3),
+        "lax_fused_ms": round(lax_ms, 3),
+        "pallas_ms": round(pallas_ms, 3),
+        "pallas_interpret": bool(fleet_step.INTERPRET),
+        "speedup_fused_vs_unfused": round(unfused_ms / lax_ms, 3),
+        "modeled_unfused_bytes": int(model["unfused_bytes"]),
+        "modeled_fused_bytes": int(model["fused_bytes"]),
+        "modeled_bytes_ratio": round(model["ratio"], 3),
+    }
 
 
 def bench_admission(n: int, epochs: int, control_every: int = 24) -> dict:
@@ -195,6 +272,19 @@ def main():
         print("single device: skipping sharded section "
               "(set XLA_FLAGS=--xla_force_host_platform_device_count=8)")
 
+    # round-step fusion section: 1e7 included even in --smoke (the serve
+    # twin of fleet_scale's >= 2x fused-vs-unfused acceptance gate)
+    round_step = []
+    for n in [1_000_000, 10_000_000]:
+        rec = bench_round_step(n, reps=3 if n <= 1_000_000 else 2)
+        round_step.append(rec)
+        print(f"round_step N={n:>10,}: unfused={rec['unfused_ms']:.2f}ms  "
+              f"lax-fused={rec['lax_fused_ms']:.2f}ms  "
+              f"pallas={rec['pallas_ms']:.2f}ms"
+              f"{' (interpret)' if rec['pallas_interpret'] else ''}  "
+              f"speedup={rec['speedup_fused_vs_unfused']:.2f}x  "
+              f"bytes-model={rec['modeled_bytes_ratio']:.2f}x", flush=True)
+
     adm = bench_admission(adm_n, args.epochs)
     print(f"admission N={adm_n:,}: unanswered "
           f"{adm['agnostic']['unanswered_rate']:.3f} (agnostic) -> "
@@ -206,7 +296,7 @@ def main():
 
     out = {"bench": "serve_scale", "smoke": args.smoke, "epochs": args.epochs,
            "devices": n_dev, "results": results, "sharded": sharded_results,
-           "admission": adm}
+           "round_step": round_step, "admission": adm}
     with open(args.out, "w") as f:
         json.dump(out, f, indent=1)
     print(f"wrote {args.out}")

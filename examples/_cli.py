@@ -36,6 +36,12 @@ def add_scenario_flags(parser: argparse.ArgumentParser,
     parser.add_argument("--seed", type=int, default=0,
                         help="seed for client assignment AND the simulators")
     parser.add_argument("--clients", type=int, default=clients)
+    parser.add_argument("--backend", choices=("lax", "pallas"), default="lax",
+                        help="round-step executor (energy.step_ops): the lax "
+                             "reference or the fused Pallas kernel "
+                             "(kernels.fleet_step; interpret mode off-TPU) — "
+                             "bit-exact on exact-arithmetic configs, same "
+                             "telemetry either way")
     return parser
 
 

@@ -78,17 +78,18 @@ print(f"fleet: N={N:,}, {EPOCHS} epochs, {scenario_name(args)} scenario, "
 runs = {
     "agnostic": simulate_serve(traffic, harvest, battery, cost, qos,
                                EnergyAgnostic(), cfg, EPOCHS, train=train,
-                               mesh=mesh),
+                               mesh=mesh, backend=args.backend),
     "gated": simulate_serve(traffic, harvest, battery, cost, qos,
                             BatteryGated.create(N, hi=2.0, lo=1.5), cfg,
-                            EPOCHS, train=train, mesh=mesh),
+                            EPOCHS, train=train, mesh=mesh,
+                            backend=args.backend),
 }
 controller = ServerController(T0=5, E0=4, rules=(AdmissionRule(),),
                               bounds=ControlBounds())
 runs["controlled"], controller = run_serve_controlled(
     traffic, harvest, battery, cost, qos, BatteryGated.create(N), cfg,
     EPOCHS, controller, train_cost=0.2, control_every=CONTROL_EVERY,
-    mesh=mesh)
+    mesh=mesh, backend=args.backend)
 
 print(f"{'':>12} {'served%':>8} {'degr%':>6} {'shed%':>6} {'miss%':>6} "
       f"{'depl%':>6} {'train%':>7} {'J/tok':>8}")

@@ -92,7 +92,7 @@ for name, (h, t) in {"trace": (harvest, traffic),
                             bounds=ControlBounds())
     res, ctrl = run_serve_controlled(
         t, h, battery, cost, qos, BatteryGated.create(N), cfg, EPOCHS, ctrl,
-        train_cost=0.2, control_every=24)
+        train_cost=0.2, control_every=24, backend=args.backend)
     results[name] = res
     s = res.stats
     off = max(s["offered"].sum(), 1e-9)

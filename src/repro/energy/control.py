@@ -336,7 +336,7 @@ class ServerController:
 def run_controlled(process, bat, cost, cfg, num_rounds: int,
                    controller: ServerController, *, control_every: int = 10,
                    mesh=None, phase=None,
-                   record_masks: bool = False):
+                   record_masks: bool = False, backend: str = "lax"):
     """Closed-loop fleet horizon: `simulate_fleet` in chunks of
     ``control_every`` rounds, with the controller adapting ``T`` (round
     pricing via ``cfg.local_steps``) and per-group ``E`` between chunks.
@@ -364,7 +364,8 @@ def run_controlled(process, bat, cost, cfg, num_rounds: int,
             process, bat, cost, ccfg, chunk,
             E=controller.client_E(cfg.num_clients),
             phase=phase, record_masks=record_masks, mesh=mesh, state=state,
-            round_offset=offset, groups=groups, num_groups=num_groups)
+            round_offset=offset, groups=groups, num_groups=num_groups,
+            backend=backend)
         state = res.final_state
         chunks.append(res)
         controller.update(res.stats, cfg.num_clients)

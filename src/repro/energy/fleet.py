@@ -61,9 +61,9 @@ import numpy as np
 
 from repro.core import scheduling
 from repro.core.scheduling import Policy
-from repro.dist import collectives
 from repro.dist import sharding as dist_sharding
 from repro.energy import battery as battery_lib
+from repro.energy import step_ops
 from repro.energy.costs import DeviceCostModel
 
 PyTree = Any
@@ -136,18 +136,27 @@ def _round_cost_array(cost, cfg: FleetConfig) -> jax.Array:
 
 
 @partial(jax.jit, static_argnames=("policy", "num_rounds", "record_masks",
-                                   "num_groups"))
+                                   "num_groups", "backend", "mesh"))
 def _run_fleet_scan(process, bat, round_cost, E, phase, valid, base_key,
                     charge0, pstate0, seed, threshold, offset, groups=None, *,
-                    policy, num_rounds, record_masks, num_groups=None):
+                    policy, num_rounds, record_masks, num_groups=None,
+                    backend="lax", mesh=None):
     """The whole-fleet scan, jitted ONCE per (process/battery structure,
-    shapes, policy, horizon): processes and `BatteryConfig` are registered
-    pytrees and seed/threshold/offset are traced scalars, so repeated calls —
-    including seed sweeps and chunked controller runs — hit the jit cache
-    instead of retracing (`jax.jit` on a per-call lambda would recompile
-    every invocation — benchmark-visible)."""
+    shapes, policy, horizon, backend): processes and `BatteryConfig` are
+    registered pytrees and seed/threshold/offset are traced scalars, so
+    repeated calls — including seed sweeps and chunked controller runs — hit
+    the jit cache instead of retracing (`jax.jit` on a per-call lambda would
+    recompile every invocation — benchmark-visible).  ``backend``/``mesh``
+    are static (the mesh only reaches the trace on the pallas path, whose
+    round step is an explicit `shard_map`; the lax path is partitioned by
+    GSPMD from input shardings alone), so switching backends costs exactly
+    one extra cache entry."""
+    # the lax path always needs the mask for its telemetry dataflow; the
+    # fused kernel only writes it back to HBM when it will be recorded
+    emit = record_masks if backend == "pallas" else True
     step = partial(_fleet_round, process, bat, policy, round_cost, E, phase,
-                   valid, base_key, seed, threshold, groups, num_groups)
+                   valid, base_key, seed, threshold, groups, num_groups,
+                   backend, mesh, emit)
 
     def body(carry, r):
         carry, mask, stats = step(carry, r)
@@ -161,44 +170,48 @@ def _run_fleet_scan(process, bat, round_cost, E, phase, valid, base_key,
 
 def _fleet_round(process, bat: battery_lib.BatteryConfig, policy: Policy,
                  round_cost, E, phase, valid, base_key, seed, threshold,
-                 groups, num_groups, carry, r):
+                 groups, num_groups, backend, mesh, emit, carry, r):
     """One round of the fleet scan; shared by the jitted scan body and the
     host-side `EnergyLoop` so the two paths are the same program.  ``seed``
     and ``threshold`` are (traceable) scalars — only ``policy`` (and the
-    presence of ``groups``) changes the program structure.  ``valid`` is the
-    (N,) real-client weight mask (0. on padding lanes of the mesh-sharded
-    path): telemetry reductions are valid-weighted so phantom clients never
-    leak into the stats.  ``groups`` (optional (N,) int32, with static
-    ``num_groups``) additionally reduces participation/depletion per group —
-    the same `masked_total` with a group-indicator weight folded into
-    ``valid``, so the per-group stats inherit the padding/sharding
-    guarantees of the fleet-wide ones."""
+    presence of ``groups`` / the ``backend``) changes the program structure.
+    ``valid`` is the (N,) real-client weight mask (0. on padding lanes of
+    the mesh-sharded path): telemetry reductions are valid-weighted so
+    phantom clients never leak into the stats.  ``groups`` (optional (N,)
+    int32, with static ``num_groups``) additionally reduces participation/
+    depletion per group via group-indicator weights folded into ``valid``.
+
+    The round's physics is one `energy.step_ops` program: RNG-bearing
+    inputs (the harvest draw and SUSTAINABLE's slot draw) are computed here
+    with *global* per-client indices — the fusion boundary — and everything
+    downstream runs either as plain (N,) jnp (`step_ops.run_step_lax`,
+    backend ``"lax"``, the bit-exact reference) or as one fused VMEM tile
+    pass (`kernels.fleet_step`, backend ``"pallas"``)."""
     charge, pstate = carry
     harvest, pstate = process.sample(jax.random.fold_in(base_key, r), r, pstate)
-    available, aux = battery_lib.absorb(bat, charge, harvest)
-    mask = fleet_mask(policy, seed, r, E, available, round_cost,
-                      threshold=threshold, phase=phase)
-    consumed = mask * round_cost
-    charge = battery_lib.drain(available, consumed)
-    depleted = (available < round_cost).astype(jnp.float32)
-    stats = {
-        "participants": collectives.masked_total(mask, valid),
-        "harvested": collectives.masked_total(harvest, valid),
-        "consumed": collectives.masked_total(consumed, valid),
-        "leaked": collectives.masked_total(aux["leaked"], valid),
-        "overflowed": collectives.masked_total(aux["overflow"], valid),
-        "mean_charge": collectives.masked_average(charge, valid),
-        "frac_depleted": collectives.masked_average(depleted, valid),
-    }
+    program, env = step_ops.fleet_step_program(
+        bat, policy, num_groups if groups is not None else None)
+    env.update(charge=charge, harvest=harvest, round_cost=round_cost,
+               threshold=threshold, valid=valid)
+    if Policy(policy) == Policy.SUSTAINABLE:
+        env["want"] = scheduling.sustainable_schedule(
+            jnp.asarray(seed), r, jnp.asarray(E, jnp.int32), phase)
     if groups is not None:
-        gweights = jax.vmap(
-            lambda g: valid * (groups == g).astype(jnp.float32))(
-            jnp.arange(num_groups, dtype=jnp.int32))            # (G, N)
-        stats["group_participants"] = jax.vmap(
-            collectives.masked_total, (None, 0))(mask, gweights)
-        stats["group_frac_depleted"] = jax.vmap(
-            collectives.masked_average, (None, 0))(depleted, gweights)
-    return (charge, pstate), mask, stats
+        env["groups"] = groups
+    if backend == "pallas":
+        from repro.kernels import fleet_step as fleet_step_kernel
+        kwargs = dict(n=charge.shape[0], emit=emit,
+                      num_groups=num_groups if groups is not None else None)
+        if mesh is None:
+            state, emits, stats = fleet_step_kernel.fused_step(
+                program, env, **kwargs)
+        else:
+            state, emits, stats = fleet_step_kernel.fused_step_sharded(
+                program, env, mesh=mesh, **kwargs)
+        return (state["charge_out"], pstate), emits.get("mask"), stats
+    env, stats = step_ops.run_step_lax(program, env, valid=valid,
+                                       groups=groups, num_groups=num_groups)
+    return (env["charge_out"], pstate), env["mask"], stats
 
 
 # ------------------------------------------------------ padding / sharding --
@@ -245,7 +258,8 @@ def simulate_fleet(process, bat: battery_lib.BatteryConfig, cost,
                    E=None, phase=None, record_masks: bool = False,
                    use_jit: bool = True, mesh=None, pad_to: int | None = None,
                    state=None, round_offset: int = 0, groups=None,
-                   num_groups: int | None = None) -> FleetResult:
+                   num_groups: int | None = None,
+                   backend: str = "lax") -> FleetResult:
     """Simulate ``num_rounds`` global rounds of battery-gated scheduling for
     the whole fleet.
 
@@ -284,10 +298,19 @@ def simulate_fleet(process, bat: battery_lib.BatteryConfig, cost,
         `collectives.masked_total` — so `energy.control.BudgetRule` can move
         each group's E_k from its OWN depletion instead of fleet-wide
         signals.
+      backend: ``"lax"`` (default) runs the round step as plain (N,) jnp —
+        the bit-exact reference; ``"pallas"`` runs it as one fused VMEM
+        client-tile kernel (`kernels.fleet_step`) — one HBM read + one
+        write of the fleet per round, bit-exact with lax on
+        exact-arithmetic configs (DESIGN.md §11).  Composes with ``mesh``
+        (per-shard tile grids + psum-ed stat partials).
 
     Returns:
       `FleetResult` with per-round aggregate telemetry (host numpy arrays).
     """
+    if backend not in ("lax", "pallas"):
+        raise ValueError(f"unknown backend {backend!r} "
+                         f"(expected 'lax' or 'pallas')")
     n = cfg.num_clients
     if process.num_clients != n:
         raise ValueError(f"process is sized for {process.num_clients} clients, "
@@ -345,11 +368,12 @@ def simulate_fleet(process, bat: battery_lib.BatteryConfig, cost,
             process, bat, round_cost, E, phase, valid, base_key, charge0,
             pstate0, seed, threshold, offset, groups, policy=cfg.policy,
             num_rounds=num_rounds, record_masks=record_masks,
-            num_groups=num_groups)
+            num_groups=num_groups, backend=backend,
+            mesh=mesh if backend == "pallas" else None)
     else:
         step = partial(_fleet_round, process, bat, cfg.policy, round_cost, E,
                        phase, valid, base_key, seed, threshold, groups,
-                       num_groups)
+                       num_groups, backend, None, True)
         carry, outs = (charge0, pstate0), []
         for r in range(num_rounds):
             carry, mask, s = step(carry, jnp.int32(round_offset + r))
@@ -405,6 +429,7 @@ class EnergyLoop:
                        round_cost, jnp.asarray(E, jnp.int32),
                        None if phase is None else jnp.asarray(phase, jnp.int32),
                        valid, jax.random.PRNGKey(seed), jnp.uint32(seed),
-                       jnp.float32(self.threshold), None, None)
+                       jnp.float32(self.threshold), None, None, "lax", None,
+                       True)
         self._carry, mask, stats = step(self._carry, jnp.int32(rnd))
         return np.asarray(mask), {k: float(v) for k, v in stats.items()}

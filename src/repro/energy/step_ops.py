@@ -1,0 +1,460 @@
+"""The fleet/serve round-step as a small op IR with switchable backends.
+
+`energy.fleet._fleet_round` and `serve.fleet_serve._serve_epoch` are the same
+physics pipeline — leak → absorb/clip → gate (participation or admission) →
+drain → telemetry — duplicated across the training and serving simulators.
+This module expresses that pipeline ONCE as a sequence of composable
+per-client step ops (`StepOp`: reads/writes over a named buffer environment)
+plus a declarative telemetry spec (`StepProgram.totals`/`averages`/group
+stats), and the simulators build their scan bodies from it with a
+``backend=`` switch:
+
+* ``"lax"`` — `run_step_lax` executes the ops as plain jnp on the (N,)
+  fleet arrays and reduces telemetry through `dist.collectives`.  This is
+  op-for-op the pre-refactor scan body (the same jnp expressions in the same
+  dataflow order), kept as the bit-exact reference oracle.
+* ``"pallas"`` — `kernels.fleet_step.fused_step` runs the SAME
+  `apply_ops` over one client tile in VMEM per grid step: one HBM read of
+  the per-client inputs and one write of the carried state per round, with
+  telemetry accumulated as per-tile partial sums.  Bit-exact with the lax
+  backend on exact-arithmetic configs (tile-partial fp32 sums of dyadic
+  values reassociate exactly); elementwise per-client state is bit-exact
+  under ANY config/padding/tiling because both backends run the identical
+  op functions.
+
+The op functions close over pytree *structure* only (treedefs captured by
+`_bind`); every traced value — battery fields, admission thresholds, QoS
+token budgets, the controller's admit scale — enters through the buffer
+environment.  That is what lets one op body serve three executors (lax,
+pallas kernel, per-op-jitted unfused baseline) and keeps the jit caches of
+the scans value-stable: sweeping seeds/thresholds/admit never rebuilds a
+program of different structure.
+
+Fusion boundary: anything needing the per-client RNG contract
+(`process.sample`, `scheduling.sustainable_schedule`'s threefry draw) stays
+OUTSIDE the program, computed under GSPMD jit with *global* client indices
+(`arrivals.client_uniform`), and enters as a per-round input buffer
+(``harvest``/``requests``/``want``/``twant``).  Everything downstream is
+deterministic elementwise math + masked reductions and fuses.
+
+`UnfusedRunner` executes a program one separately-jitted op at a time —
+every intermediate round-trips through HBM, one reduction launch per
+telemetry stat.  It exists purely as the fusion BASELINE for
+`benchmarks/fleet_scale.py`'s round-step section (what the fused backends
+save); the simulators never use it.  `bytes_moved` is the matching roofline
+model: modeled HBM traffic of the unfused chain vs the fused kernel,
+computed from the IR's declared reads/writes (DESIGN.md §11).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.scheduling import Policy
+from repro.dist import collectives
+from repro.energy import battery as battery_lib
+
+PyTree = Any
+
+# admission modes; mirrors `serve.qos` (not imported: energy must not pull in
+# the serve package at module load)
+_SHED, _DEGRADED, _FULL = 0, 1, 2
+
+
+@dataclasses.dataclass(frozen=True)
+class StepOp:
+    """One per-client-tile op: ``fn(env) -> tuple`` of ``writes`` values.
+
+    ``reads`` declares every buffer ``fn`` touches (enforced by the unfused
+    runner, which hands ``fn`` only those keys; and the input of the
+    bytes-moved roofline model).  ``fn`` must be pure elementwise jnp over
+    same-length per-client buffers — it runs unchanged on (N,) fleet arrays
+    (lax backend) and on (tile,) VMEM blocks (pallas backend).
+    """
+
+    name: str
+    reads: tuple[str, ...]
+    writes: tuple[str, ...]
+    fn: Callable[[dict], tuple]
+
+
+@dataclasses.dataclass(frozen=True)
+class StepProgram:
+    """A round step: ops in dataflow order + the telemetry/output spec.
+
+    ``state_out`` are the per-client buffers carried to the next round
+    (charge), ``emit`` the optionally-recorded per-client outputs
+    (mask/mode).  ``totals``/``averages`` are ``(stat_name, buffer)`` pairs
+    reduced with `collectives.masked_total`/`masked_average` over the
+    ``valid`` weight; ``group_totals``/``group_averages`` reduce with
+    group-indicator weights (``valid * (groups == g)``, static G).
+    """
+
+    name: str
+    ops: tuple[StepOp, ...]
+    state_out: tuple[str, ...]
+    emit: tuple[str, ...]
+    totals: tuple[tuple[str, str], ...]
+    averages: tuple[tuple[str, str], ...] = ()
+    group_totals: tuple[tuple[str, str], ...] = ()
+    group_averages: tuple[tuple[str, str], ...] = ()
+
+    def input_names(self) -> tuple[str, ...]:
+        """Buffers the program consumes but never writes (the kernel's HBM
+        reads), in first-use order: op reads first, then stat buffers."""
+        written: set[str] = set()
+        needed: list[str] = []
+        for op in self.ops:
+            for nm in op.reads:
+                if nm not in written and nm not in needed:
+                    needed.append(nm)
+            written.update(op.writes)
+        for _, buf in self.totals + self.averages \
+                + self.group_totals + self.group_averages:
+            if buf not in written and buf not in needed:
+                needed.append(buf)
+        return tuple(needed)
+
+
+def apply_ops(ops: tuple[StepOp, ...], env: dict) -> dict:
+    """Run the ops in order over a copy of ``env``; returns the final env
+    (inputs + every written buffer).  Shared verbatim by all backends — the
+    parity contract is this function, not a pair of hand-kept twins."""
+    env = dict(env)
+    for op in ops:
+        out = op.fn(env)
+        env.update(zip(op.writes, out))
+    return env
+
+
+def _bind(prefix: str, obj: PyTree, env: dict):
+    """Flatten a registered pytree into named env buffers ``{prefix}{i}``
+    and return ``(names, rebuild)`` where ``rebuild(env)`` reassembles the
+    object from the env.  Only the treedef (structure) is closed over — the
+    leaves travel through the buffer environment, so the same op closure
+    works for traced (N,) arrays and for VMEM tile refs alike."""
+    leaves, treedef = jax.tree_util.tree_flatten(obj)
+    names = tuple(f"{prefix}{i}" for i in range(len(leaves)))
+    env.update(zip(names, leaves))
+
+    def rebuild(e: dict) -> PyTree:
+        return jax.tree_util.tree_unflatten(treedef, [e[nm] for nm in names])
+
+    return names, rebuild
+
+
+# ------------------------------------------------------------ fleet program --
+def fleet_step_program(bat: battery_lib.BatteryConfig, policy: Policy | str,
+                       num_groups: int | None = None
+                       ) -> tuple[StepProgram, dict]:
+    """Build the training-fleet round step (`energy.fleet._fleet_round`'s
+    physics) for one policy.
+
+    Returns ``(program, env)`` where ``env`` holds the bound battery leaves;
+    the caller adds the loop-invariant ``round_cost``/``threshold`` buffers
+    and the per-round ``charge``/``harvest`` (+ ``want`` for SUSTAINABLE —
+    the Algorithm-1 slot draw is RNG and stays outside the fusion boundary).
+    """
+    pol = Policy(policy)
+    env: dict = {}
+    bat_names, bat_of = _bind("bat", bat, env)
+    ops = []
+
+    def absorb_fn(e):
+        available, aux = battery_lib.absorb(bat_of(e), e["charge"],
+                                            e["harvest"])
+        return available, aux["leaked"], aux["overflow"]
+
+    ops.append(StepOp("absorb", ("charge", "harvest") + bat_names,
+                      ("available", "leaked", "overflow"), absorb_fn))
+
+    # the battery-gated participation gate (`fleet_mask` semantics): every
+    # policy is AND-ed with physical feasibility available >= round_cost
+    if pol == Policy.SUSTAINABLE:
+        def gate_fn(e):
+            feasible = (e["available"] >= e["round_cost"])
+            return (e["want"] * feasible.astype(jnp.float32),)
+
+        gate_reads = ("want", "available", "round_cost")
+    elif pol == Policy.THRESHOLD:
+        def gate_fn(e):
+            feasible = (e["available"] >= e["round_cost"])
+            want = (e["available"] >= e["threshold"] * e["round_cost"]) \
+                .astype(jnp.float32)
+            return (want * feasible.astype(jnp.float32),)
+
+        gate_reads = ("available", "round_cost", "threshold")
+    elif pol in (Policy.GREEDY, Policy.ALWAYS):
+        def gate_fn(e):
+            feasible = (e["available"] >= e["round_cost"])
+            want = jnp.ones_like(e["available"])
+            return (want * feasible.astype(jnp.float32),)
+
+        gate_reads = ("available", "round_cost")
+    else:
+        raise ValueError(
+            f"policy {pol.value!r} has no battery-gated fleet variant "
+            f"(supported: {['sustainable', 'greedy', 'threshold', 'always']})")
+    ops.append(StepOp("fleet_gate", gate_reads, ("mask",), gate_fn))
+
+    def drain_fn(e):
+        consumed = e["mask"] * e["round_cost"]
+        return battery_lib.drain(e["available"], consumed), consumed
+
+    ops.append(StepOp("train_drain", ("mask", "round_cost", "available"),
+                      ("charge_out", "consumed"), drain_fn))
+
+    def depleted_fn(e):
+        return ((e["available"] < e["round_cost"]).astype(jnp.float32),)
+
+    ops.append(StepOp("depleted", ("available", "round_cost"),
+                      ("depleted",), depleted_fn))
+
+    grouped = num_groups is not None
+    program = StepProgram(
+        name="fleet_step", ops=tuple(ops),
+        state_out=("charge_out",), emit=("mask",),
+        totals=(("participants", "mask"), ("harvested", "harvest"),
+                ("consumed", "consumed"), ("leaked", "leaked"),
+                ("overflowed", "overflow")),
+        averages=(("mean_charge", "charge_out"),
+                  ("frac_depleted", "depleted")),
+        group_totals=(("group_participants", "mask"),) if grouped else (),
+        group_averages=(("group_frac_depleted", "depleted"),) if grouped
+        else ())
+    return program, env
+
+
+# ------------------------------------------------------------ serve program --
+def serve_step_program(bat: battery_lib.BatteryConfig, cost, qos, policy,
+                       train) -> tuple[StepProgram, dict]:
+    """Build the serving-epoch step (`serve.fleet_serve._serve_epoch`'s
+    physics): absorb → price → admission decide → serve-drain → ledger →
+    optional train gate+drain → token/total accounting.
+
+    Returns ``(program, env)`` with the battery/cost/qos/policy (and
+    TrainLoad) leaves bound; the caller adds the traced ``admit`` scale and
+    the per-epoch ``charge``/``harvest``/``requests`` (+ ``twant`` when the
+    training load uses the SUSTAINABLE slot draw).
+    """
+    env: dict = {}
+    bat_names, bat_of = _bind("bat", bat, env)
+    cost_names, cost_of = _bind("cost", cost, env)
+    qos_names, qos_of = _bind("qos", qos, env)
+    pol_names, pol_of = _bind("pol", policy, env)
+    ops = []
+
+    def absorb_fn(e):
+        available, aux = battery_lib.absorb(bat_of(e), e["charge"],
+                                            e["harvest"])
+        return available, aux["leaked"], aux["overflow"]
+
+    ops.append(StepOp("absorb", ("charge", "harvest") + bat_names,
+                      ("available", "leaked", "overflow"), absorb_fn))
+
+    def price_fn(e):
+        q, c = qos_of(e), cost_of(e)
+        shape = jnp.shape(e["requests"])
+        full_req = jnp.broadcast_to(
+            jnp.asarray(q.request_cost(c), jnp.float32), shape)
+        short_req = jnp.broadcast_to(
+            jnp.asarray(q.request_cost(c, degraded=True), jnp.float32), shape)
+        return full_req, short_req
+
+    ops.append(StepOp("price", ("requests",) + qos_names + cost_names,
+                      ("full_req", "short_req"), price_fn))
+
+    def admit_fn(e):
+        mode = pol_of(e).scaled(e["admit"]).decide(
+            e["available"], e["requests"] * e["full_req"],
+            e["requests"] * e["short_req"])
+        return (mode,)
+
+    ops.append(StepOp("admission",
+                      ("available", "requests", "full_req", "short_req",
+                       "admit") + pol_names, ("mode",), admit_fn))
+
+    def serve_drain_fn(e):
+        per_req = jnp.where(e["mode"] == _FULL, e["full_req"], e["short_req"])
+        admitted = jnp.where(e["mode"] > _SHED, e["requests"], 0.0)
+        affordable = jnp.floor(e["available"]
+                               / jnp.maximum(per_req, 1e-20))
+        served = jnp.minimum(admitted, affordable)
+        consumed_serve = served * per_req
+        charge_serve = battery_lib.drain(e["available"], consumed_serve)
+        return per_req, admitted, served, consumed_serve, charge_serve
+
+    ops.append(StepOp("serve_drain",
+                      ("mode", "requests", "available", "full_req",
+                       "short_req"),
+                      ("per_req", "admitted", "served", "consumed_serve",
+                       "charge_serve"), serve_drain_fn))
+
+    def ledger_fn(e):
+        served_full = jnp.where(e["mode"] == _FULL, e["served"], 0.0)
+        served_short = jnp.where(e["mode"] == _DEGRADED, e["served"], 0.0)
+        shed = jnp.where(e["mode"] == _SHED, e["requests"], 0.0)
+        missed = e["admitted"] - e["served"]
+        depleted = (e["available"] < e["short_req"]).astype(jnp.float32)
+        return served_full, served_short, shed, missed, depleted
+
+    ops.append(StepOp("ledger",
+                      ("mode", "requests", "admitted", "served", "available",
+                       "short_req"),
+                      ("served_full", "served_short", "shed", "missed",
+                       "depleted"), ledger_fn))
+
+    if train is not None:
+        train_names, train_of = _bind("train", train, env)
+        tpol = Policy(train.policy)
+        twant_reads = ("twant",) if tpol == Policy.SUSTAINABLE else ()
+
+        def train_fn(e):
+            t = train_of(e)
+            feasible = (e["charge_serve"] >= t.round_cost)
+            if tpol == Policy.SUSTAINABLE:
+                want = e["twant"]
+            elif tpol == Policy.THRESHOLD:
+                want = (e["charge_serve"] >= t.threshold * t.round_cost) \
+                    .astype(jnp.float32)
+            else:  # GREEDY / ALWAYS
+                want = jnp.ones_like(e["charge_serve"])
+            tmask = want * feasible.astype(jnp.float32)
+            consumed_train = tmask * t.round_cost
+            charge_out = battery_lib.drain(e["charge_serve"], consumed_train)
+            return tmask, consumed_train, charge_out
+
+        ops.append(StepOp("train_gate",
+                          ("charge_serve",) + twant_reads + train_names,
+                          ("tmask", "consumed_train", "charge_out"),
+                          train_fn))
+    else:
+        def train_fn(e):
+            zero = jnp.zeros_like(e["charge_serve"])
+            return zero, zero, e["charge_serve"]
+
+        ops.append(StepOp("train_gate", ("charge_serve",),
+                          ("tmask", "consumed_train", "charge_out"),
+                          train_fn))
+
+    def tokens_fn(e):
+        q = qos_of(e)
+        return (q.decoded_tokens(e["served_full"], e["served_short"]),)
+
+    ops.append(StepOp("tokens", ("served_full", "served_short") + qos_names,
+                      ("tokens",), tokens_fn))
+
+    def total_fn(e):
+        return (e["consumed_serve"] + e["consumed_train"],)
+
+    ops.append(StepOp("consumed_total", ("consumed_serve", "consumed_train"),
+                      ("consumed_total",), total_fn))
+
+    program = StepProgram(
+        name="serve_step", ops=tuple(ops),
+        state_out=("charge_out",), emit=("mode",),
+        totals=(("participants", "tmask"), ("harvested", "harvest"),
+                ("consumed", "consumed_total"), ("leaked", "leaked"),
+                ("overflowed", "overflow"), ("offered", "requests"),
+                ("served_full", "served_full"),
+                ("served_short", "served_short"), ("shed", "shed"),
+                ("deadline_missed", "missed"), ("tokens_decoded", "tokens"),
+                ("consumed_serve", "consumed_serve"),
+                ("consumed_train", "consumed_train")),
+        averages=(("mean_charge", "charge_out"),
+                  ("frac_depleted", "depleted")))
+    return program, env
+
+
+# ------------------------------------------------------------- lax backend --
+def run_step_lax(program: StepProgram, env: dict, *, valid, groups=None,
+                 num_groups: int | None = None,
+                 axis_name=None) -> tuple[dict, dict]:
+    """Reference backend: the ops as plain (N,) jnp + `dist.collectives`
+    reductions — op-for-op the pre-refactor scan body.  Returns
+    ``(final env, stats dict)``."""
+    env = apply_ops(program.ops, env)
+    stats = {}
+    for stat, buf in program.totals:
+        stats[stat] = collectives.masked_total(env[buf], valid, axis_name)
+    for stat, buf in program.averages:
+        stats[stat] = collectives.masked_average(env[buf], valid, axis_name)
+    if groups is not None:
+        gweights = jax.vmap(
+            lambda g: valid * (groups == g).astype(jnp.float32))(
+            jnp.arange(num_groups, dtype=jnp.int32))            # (G, N)
+        for stat, buf in program.group_totals:
+            stats[stat] = jax.vmap(
+                collectives.masked_total, (None, 0))(env[buf], gweights)
+        for stat, buf in program.group_averages:
+            stats[stat] = jax.vmap(
+                collectives.masked_average, (None, 0))(env[buf], gweights)
+    return env, stats
+
+
+# -------------------------------------------------------- unfused baseline --
+class UnfusedRunner:
+    """Executes a program one separately-jitted op at a time: every
+    intermediate buffer materializes in HBM between ops and every telemetry
+    stat is its own reduction launch.  The fusion BASELINE for the
+    round-step benchmarks — measures the per-op HBM round-trips the fused
+    backends eliminate.  Not used by the simulators."""
+
+    def __init__(self, program: StepProgram):
+        self.program = program
+        self._ops = [(op, jax.jit(op.fn)) for op in program.ops]
+        self._total = jax.jit(collectives.masked_total)
+        self._average = jax.jit(collectives.masked_average)
+
+    def __call__(self, env: dict, *, valid) -> tuple[dict, dict]:
+        env = dict(env)
+        for op, fn in self._ops:
+            out = fn({k: env[k] for k in op.reads})
+            env.update(zip(op.writes, out))
+        stats = {s: self._total(env[b], valid)
+                 for s, b in self.program.totals}
+        stats.update({s: self._average(env[b], valid)
+                      for s, b in self.program.averages})
+        return env, stats
+
+
+# -------------------------------------------------------- bytes-moved model --
+def bytes_moved(program: StepProgram, env: dict, n: int, *,
+                emit: bool = False, itemsize: int = 4) -> dict:
+    """Roofline model of per-round HBM traffic (DESIGN.md §11).
+
+    Unfused: each op reads its per-client operands from HBM and writes its
+    per-client outputs back; each masked total re-reads (value, valid) and
+    each masked average additionally re-reads the value for its ones-mask
+    denominator.  Fused: one read of every distinct per-client input, one
+    write per carried state (plus the recorded mask/mode when ``emit``) and
+    the per-tile partial sums (negligible).  Broadcast scalars are not
+    counted — they are O(1) against O(N).
+    """
+    def tiled(name: str) -> bool:
+        v = env.get(name)
+        if v is None:          # produced by an earlier op: always per-client
+            return True
+        shape = tuple(getattr(v, "shape", ()))
+        return len(shape) >= 1 and shape[0] == n
+
+    per = n * itemsize
+    unfused = 0
+    for op in program.ops:
+        unfused += sum(per for r in op.reads if tiled(r))
+        unfused += per * len(op.writes)
+    unfused += per * 2 * len(program.totals)       # value + valid re-read
+    unfused += per * 4 * len(program.averages)     # two masked totals each
+
+    inputs = [nm for nm in program.input_names() if tiled(nm)] + ["valid"]
+    fused = per * len(set(inputs))
+    fused += per * len(program.state_out)
+    if emit:
+        fused += per * len(program.emit)
+    n_stats = len(program.totals) + len(program.averages) + 1
+    fused += n_stats * itemsize                    # partial-sum tile rows
+    return {"unfused_bytes": unfused, "fused_bytes": fused,
+            "ratio": unfused / max(fused, 1)}

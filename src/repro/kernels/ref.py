@@ -49,3 +49,116 @@ def agg_reference(w, w_stack, s):
     """out = w + sum_c s_c (w_c - w);  w (M,), w_stack (C,M), s (C,)."""
     d = w_stack.astype(jnp.float32) - w.astype(jnp.float32)[None]
     return (w.astype(jnp.float32) + jnp.einsum("c,cm->m", s, d)).astype(w.dtype)
+
+
+def _masked_total(value, weight):
+    return jnp.sum(jnp.asarray(weight, jnp.float32)
+                   * jnp.asarray(value, jnp.float32))
+
+
+def _masked_average(value, weight):
+    den = _masked_total(jnp.ones_like(jnp.asarray(value, jnp.float32)), weight)
+    return _masked_total(value, weight) / jnp.maximum(den, 1.0)
+
+
+def fleet_step_reference(charge, harvest, round_cost, valid, *, capacity,
+                         leak=0.0, want=None, threshold=None):
+    """One battery-gated fleet round, written out longhand (independent of
+    `energy.step_ops` — the oracle the fused round-step kernel is tested
+    against).  ``want`` is the policy's pre-gate desire mask (the SUSTAINABLE
+    slot draw; ``None`` = greedy/always 1s); ``threshold`` switches to the
+    THRESHOLD gate ``available >= threshold * round_cost``.  Returns
+    ``(charge_out, mask, stats)``.
+    """
+    charge = jnp.asarray(charge, jnp.float32)
+    leaked = charge * leak
+    pre = charge - leaked + jnp.asarray(harvest, jnp.float32)
+    overflow = jnp.maximum(pre - capacity, 0.0)
+    available = jnp.minimum(pre, capacity)
+    feasible = (available >= round_cost).astype(jnp.float32)
+    if threshold is not None:
+        want = (available >= threshold * round_cost).astype(jnp.float32)
+    elif want is None:
+        want = jnp.ones_like(available)
+    mask = want * feasible
+    consumed = mask * round_cost
+    charge_out = available - consumed
+    depleted = (available < round_cost).astype(jnp.float32)
+    stats = {
+        "participants": _masked_total(mask, valid),
+        "harvested": _masked_total(harvest, valid),
+        "consumed": _masked_total(consumed, valid),
+        "leaked": _masked_total(leaked, valid),
+        "overflowed": _masked_total(overflow, valid),
+        "mean_charge": _masked_average(charge_out, valid),
+        "frac_depleted": _masked_average(depleted, valid),
+    }
+    return charge_out, mask, stats
+
+
+def serve_step_reference(charge, harvest, requests, valid, *, capacity,
+                         leak=0.0, full_req, short_req,
+                         full_tokens, short_tokens, hi=None, lo=None,
+                         charge_gated=False, train_cost=None,
+                         train_want=None):
+    """One battery-gated serving epoch, longhand (the serve-side oracle).
+
+    ``hi``/``lo`` are the admission thresholds — ``None`` means
+    energy-agnostic (everything FULL); ``charge_gated`` compares them to raw
+    charge instead of offered epoch cost.  ``train_cost`` adds the competing
+    training drain on the post-serving charge with desire mask
+    ``train_want`` (``None`` = 1s).  Returns ``(charge_out, mode, stats)``.
+    """
+    charge = jnp.asarray(charge, jnp.float32)
+    requests = jnp.asarray(requests, jnp.float32)
+    leaked = charge * leak
+    pre = charge - leaked + jnp.asarray(harvest, jnp.float32)
+    overflow = jnp.maximum(pre - capacity, 0.0)
+    available = jnp.minimum(pre, capacity)
+    if hi is None:
+        mode = jnp.full(jnp.shape(available), 2, jnp.int32)
+    elif charge_gated:
+        mode = jnp.where(available >= hi, 2,
+                         jnp.where(available >= lo, 1, 0)).astype(jnp.int32)
+    else:
+        mode = jnp.where(available >= hi * requests * full_req, 2,
+                         jnp.where(available >= lo * requests * short_req,
+                                   1, 0)).astype(jnp.int32)
+    per_req = jnp.where(mode == 2, full_req, short_req)
+    admitted = jnp.where(mode > 0, requests, 0.0)
+    served = jnp.minimum(admitted,
+                         jnp.floor(available / jnp.maximum(per_req, 1e-20)))
+    consumed_serve = served * per_req
+    charge_out = available - consumed_serve
+    served_full = jnp.where(mode == 2, served, 0.0)
+    served_short = jnp.where(mode == 1, served, 0.0)
+    shed = jnp.where(mode == 0, requests, 0.0)
+    missed = admitted - served
+    depleted = (available < short_req).astype(jnp.float32)
+    if train_cost is not None:
+        want = jnp.ones_like(charge_out) if train_want is None else train_want
+        tmask = want * (charge_out >= train_cost).astype(jnp.float32)
+        consumed_train = tmask * train_cost
+        charge_out = charge_out - consumed_train
+    else:
+        tmask = jnp.zeros_like(charge_out)
+        consumed_train = jnp.zeros_like(charge_out)
+    tokens = served_full * full_tokens + served_short * short_tokens
+    stats = {
+        "participants": _masked_total(tmask, valid),
+        "harvested": _masked_total(harvest, valid),
+        "consumed": _masked_total(consumed_serve + consumed_train, valid),
+        "leaked": _masked_total(leaked, valid),
+        "overflowed": _masked_total(overflow, valid),
+        "mean_charge": _masked_average(charge_out, valid),
+        "frac_depleted": _masked_average(depleted, valid),
+        "offered": _masked_total(requests, valid),
+        "served_full": _masked_total(served_full, valid),
+        "served_short": _masked_total(served_short, valid),
+        "shed": _masked_total(shed, valid),
+        "deadline_missed": _masked_total(missed, valid),
+        "tokens_decoded": _masked_total(tokens, valid),
+        "consumed_serve": _masked_total(consumed_serve, valid),
+        "consumed_train": _masked_total(consumed_train, valid),
+    }
+    return charge_out, mode, stats

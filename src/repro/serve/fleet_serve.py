@@ -57,14 +57,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import scheduling
 from repro.core.scheduling import Policy
-from repro.dist import collectives
 from repro.dist import sharding as dist_sharding
 from repro.energy import battery as battery_lib
+from repro.energy import step_ops
 from repro.energy.costs import DecodeCostModel, DeviceCostModel
-from repro.energy.fleet import (_pad_clients, _place_fleet, _slice_clients,
-                                fleet_mask)
-from repro.serve.qos import DEGRADED, FULL, QoSSpec, SHED
+from repro.energy.fleet import _pad_clients, _place_fleet, _slice_clients
+from repro.serve.qos import QoSSpec
 
 PyTree = Any
 
@@ -154,83 +154,62 @@ class ServeResult:
 
 def _serve_epoch(traffic, harvest, bat: battery_lib.BatteryConfig,
                  cost: DecodeCostModel, qos: QoSSpec, policy, train,
-                 valid, base_key, seed, admit, carry, t):
+                 valid, base_key, seed, admit, backend, mesh, emit, carry, t):
     """One serving epoch; shared by the jitted scan body and the eager
     (``use_jit=False``) parity path.  ``seed`` and ``admit`` (the
     controller's admission-threshold scale) are traced scalars; only the
-    policy/process/train *structure* changes the program."""
+    policy/process/train *structure* (and the ``backend``) changes the
+    program.
+
+    The epoch's physics is one `energy.step_ops` program
+    (`serve_step_program`: absorb → price → admission decide → serve-drain →
+    ledger → train gate → accounting).  RNG-bearing inputs — the harvest and
+    traffic draws, and the SUSTAINABLE training load's slot draw — are
+    computed here with *global* per-client indices (the fusion boundary) and
+    enter the program as buffers; downstream runs either as plain (N,) jnp
+    (`step_ops.run_step_lax`, backend ``"lax"``, the bit-exact reference) or
+    as one fused VMEM tile pass (`kernels.fleet_step`, ``"pallas"``)."""
     charge, tstate, hstate = carry
     ekey = jax.random.fold_in(base_key, t)
     harvest_j, hstate = harvest.sample(jax.random.fold_in(ekey, 0), t, hstate)
     requests, tstate = traffic.sample(jax.random.fold_in(ekey, 1), t, tstate)
     requests = jnp.asarray(requests, jnp.float32)
-    available, aux = battery_lib.absorb(bat, charge, harvest_j)
-
-    full_req = jnp.broadcast_to(
-        jnp.asarray(qos.request_cost(cost), jnp.float32), requests.shape)
-    short_req = jnp.broadcast_to(
-        jnp.asarray(qos.request_cost(cost, degraded=True), jnp.float32),
-        requests.shape)
-    mode = policy.scaled(admit).decide(available, requests * full_req,
-                                       requests * short_req)
-    per_req = jnp.where(mode == FULL, full_req, short_req)
-    admitted = jnp.where(mode > SHED, requests, 0.0)
-    affordable = jnp.floor(available / jnp.maximum(per_req, 1e-20))
-    served = jnp.minimum(admitted, affordable)
-    consumed_serve = served * per_req
-    charge = battery_lib.drain(available, consumed_serve)
-
-    served_full = jnp.where(mode == FULL, served, 0.0)
-    served_short = jnp.where(mode == DEGRADED, served, 0.0)
-    shed = jnp.where(mode == SHED, requests, 0.0)
-    missed = admitted - served
-    depleted = (available < short_req).astype(jnp.float32)
-
-    if train is not None:
-        tmask = fleet_mask(train.policy, seed, t, train.E, charge,
-                           train.round_cost, threshold=train.threshold)
-        consumed_train = tmask * train.round_cost
-        charge = battery_lib.drain(charge, consumed_train)
-    else:
-        tmask = jnp.zeros_like(charge)
-        consumed_train = jnp.zeros_like(charge)
-
-    stats = {
-        # the fleet simulator's energy seven (Telemetry.from_stats reads both)
-        "participants": collectives.masked_total(tmask, valid),
-        "harvested": collectives.masked_total(harvest_j, valid),
-        "consumed": collectives.masked_total(consumed_serve + consumed_train,
-                                             valid),
-        "leaked": collectives.masked_total(aux["leaked"], valid),
-        "overflowed": collectives.masked_total(aux["overflow"], valid),
-        "mean_charge": collectives.masked_average(charge, valid),
-        "frac_depleted": collectives.masked_average(depleted, valid),
-        # the serving ledger
-        "offered": collectives.masked_total(requests, valid),
-        "served_full": collectives.masked_total(served_full, valid),
-        "served_short": collectives.masked_total(served_short, valid),
-        "shed": collectives.masked_total(shed, valid),
-        "deadline_missed": collectives.masked_total(missed, valid),
-        "tokens_decoded": collectives.masked_total(
-            qos.decoded_tokens(served_full, served_short), valid),
-        "consumed_serve": collectives.masked_total(consumed_serve, valid),
-        "consumed_train": collectives.masked_total(consumed_train, valid),
-    }
-    return (charge, tstate, hstate), mode, stats
+    program, env = step_ops.serve_step_program(bat, cost, qos, policy, train)
+    env.update(charge=charge, harvest=harvest_j, requests=requests,
+               admit=admit, valid=valid)
+    if train is not None and Policy(train.policy) == Policy.SUSTAINABLE:
+        env["twant"] = scheduling.sustainable_schedule(
+            jnp.asarray(seed), t, jnp.asarray(train.E, jnp.int32), None)
+    if backend == "pallas":
+        from repro.kernels import fleet_step as fleet_step_kernel
+        kwargs = dict(n=charge.shape[0], emit=emit)
+        if mesh is None:
+            state, emits, stats = fleet_step_kernel.fused_step(
+                program, env, **kwargs)
+        else:
+            state, emits, stats = fleet_step_kernel.fused_step_sharded(
+                program, env, mesh=mesh, **kwargs)
+        return (state["charge_out"], tstate, hstate), emits.get("mode"), stats
+    env, stats = step_ops.run_step_lax(program, env, valid=valid)
+    return (env["charge_out"], tstate, hstate), env["mode"], stats
 
 
-@partial(jax.jit, static_argnames=("num_epochs", "record_modes"))
+@partial(jax.jit, static_argnames=("num_epochs", "record_modes", "backend",
+                                   "mesh"))
 def _run_serve_scan(traffic, harvest, bat, cost, qos, policy, train, valid,
                     base_key, charge0, tstate0, hstate0, seed, admit, offset,
-                    *, num_epochs, record_modes):
+                    *, num_epochs, record_modes, backend="lax", mesh=None):
     """The whole-fleet serving scan, jitted ONCE per (process/policy/train
-    structure, shapes, horizon): every process, the `QoSSpec`, the
+    structure, shapes, horizon, backend): every process, the `QoSSpec`, the
     `DecodeCostModel` and the admission policy are registered pytrees, and
     seed/admit/offset are traced scalars — so repeat calls (seed sweeps,
     admission-threshold sweeps, chunked controller runs) hit the jit cache
-    instead of retracing."""
+    instead of retracing.  ``backend``/``mesh`` are static (the mesh only
+    reaches the trace on the pallas path's explicit `shard_map`), so
+    switching backends costs exactly one extra cache entry."""
+    emit = record_modes if backend == "pallas" else True
     step = partial(_serve_epoch, traffic, harvest, bat, cost, qos, policy,
-                   train, valid, base_key, seed, admit)
+                   train, valid, base_key, seed, admit, backend, mesh, emit)
 
     def body(carry, t):
         carry, mode, stats = step(carry, t)
@@ -248,7 +227,7 @@ def simulate_serve(traffic, harvest, bat: battery_lib.BatteryConfig,
                    train: TrainLoad | None = None, admit: float = 1.0,
                    record_modes: bool = False, use_jit: bool = True,
                    mesh=None, pad_to: int | None = None, state=None,
-                   epoch_offset: int = 0) -> ServeResult:
+                   epoch_offset: int = 0, backend: str = "lax") -> ServeResult:
     """Simulate ``num_epochs`` serving epochs of battery-gated admission for
     the whole fleet.
 
@@ -278,10 +257,16 @@ def simulate_serve(traffic, harvest, bat: battery_lib.BatteryConfig,
         from (``ServeResult.final_state`` of a previous chunk).
       epoch_offset: global index of the first simulated epoch — keeps the
         per-epoch RNG stream and diurnal phase aligned across chunked runs.
+      backend: ``"lax"`` (default, the bit-exact reference) or ``"pallas"``
+        — run the epoch step as one fused VMEM client-tile kernel
+        (`kernels.fleet_step`), exactly as in `energy.fleet.simulate_fleet`.
 
     Returns:
       `ServeResult` with per-epoch aggregate telemetry (host numpy arrays).
     """
+    if backend not in ("lax", "pallas"):
+        raise ValueError(f"unknown backend {backend!r} "
+                         f"(expected 'lax' or 'pallas')")
     n = cfg.num_clients
     for name, proc in (("traffic", traffic), ("harvest", harvest)):
         if proc.num_clients != n:
@@ -333,10 +318,12 @@ def simulate_serve(traffic, harvest, bat: battery_lib.BatteryConfig,
         (charge, tstate, hstate), stats = _run_serve_scan(
             traffic, harvest, bat, cost, qos, policy, train, valid, base_key,
             charge0, tstate0, hstate0, seed, admit_t, offset,
-            num_epochs=num_epochs, record_modes=record_modes)
+            num_epochs=num_epochs, record_modes=record_modes,
+            backend=backend, mesh=mesh if backend == "pallas" else None)
     else:
         step = partial(_serve_epoch, traffic, harvest, bat, cost, qos,
-                       policy, train, valid, base_key, seed, admit_t)
+                       policy, train, valid, base_key, seed, admit_t,
+                       backend, None, True)
         carry, outs = (charge0, tstate0, hstate0), []
         for t in range(num_epochs):
             carry, mode, s = step(carry, jnp.int32(epoch_offset + t))
@@ -356,7 +343,8 @@ def run_serve_controlled(traffic, harvest, bat, cost: DecodeCostModel,
                          qos: QoSSpec, policy, cfg: ServeConfig,
                          num_epochs: int, controller, *,
                          train_cost=None, control_every: int = 24,
-                         mesh=None, record_modes: bool = False):
+                         mesh=None, record_modes: bool = False,
+                         backend: str = "lax"):
     """Closed-loop serving horizon: `simulate_serve` in chunks of
     ``control_every`` epochs, with an `energy.control.ServerController`
     adapting its knobs between chunks — the admission-threshold scale
@@ -383,7 +371,8 @@ def run_serve_controlled(traffic, harvest, bat, cost: DecodeCostModel,
         res = simulate_serve(
             traffic, harvest, bat, cost, qos, policy, cfg, chunk,
             train=train, admit=controller.state.admit, mesh=mesh,
-            record_modes=record_modes, state=state, epoch_offset=offset)
+            record_modes=record_modes, state=state, epoch_offset=offset,
+            backend=backend)
         state = res.final_state
         chunks.append(res)
         controller.update(res.stats, n)

@@ -83,17 +83,44 @@ def check_trace_parity(mesh, n, rounds=30):
                 (n, pol, k, host.stats[k] - shard.stats[k])
 
 
+def check_kernel_parity(mesh, n, rounds=20):
+    """The fused-kernel sharded parity oracle: ``backend="pallas"`` on the
+    8-device mesh (per-shard Pallas tile grids + psum-ed stat partials,
+    interpret mode) must be bit-exact with the host-local lax reference on
+    the exact-arithmetic config, masks, charge, fleet-wide AND per-group
+    telemetry, for every fleet policy."""
+    E = np.asarray(EnergyProfile(n).cycles())
+    proc = Bernoulli.create(n, prob=0.375, amount=1.25)
+    bat = BatteryConfig(capacity=2.5, leak=0.0, init_charge=0.5)
+    groups = np.arange(n) % 3
+    for pol in FLEET_POLICIES:
+        cfg = FleetConfig(num_clients=n, policy=pol, threshold=1.5, seed=3)
+        kw = dict(E=E, record_masks=True, groups=groups, num_groups=3)
+        host = simulate_fleet(proc, bat, 0.75, cfg, rounds, **kw)
+        fused = simulate_fleet(proc, bat, 0.75, cfg, rounds, mesh=mesh,
+                               backend="pallas", **kw)
+        assert np.array_equal(np.asarray(host.masks),
+                              np.asarray(fused.masks)), (n, pol, "masks")
+        assert np.array_equal(np.asarray(host.final_charge),
+                              np.asarray(fused.final_charge)), (n, pol)
+        for k in host.stats:
+            assert np.array_equal(host.stats[k], fused.stats[k]), \
+                (n, pol, k, host.stats[k] - fused.stats[k])
+
+
 def check_sharded_cache_reuse(mesh, n):
     """Repeat sharded calls with different seeds/thresholds must hit the jit
-    cache (same shapes, same shardings)."""
+    cache (same shapes, same shardings), and flipping ``backend`` costs
+    exactly one extra entry."""
     E = np.asarray(EnergyProfile(n).cycles())
     proc = Bernoulli.create(n, prob=0.4)
     bat = BatteryConfig(capacity=2.0, leak=0.01)
 
-    def run(seed, threshold):
+    def run(seed, threshold, backend="lax"):
         cfg = FleetConfig(num_clients=n, policy=Policy.THRESHOLD, seed=seed,
                           threshold=threshold)
-        return simulate_fleet(proc, bat, 1.0, cfg, 10, E=E, mesh=mesh)
+        return simulate_fleet(proc, bat, 1.0, cfg, 10, E=E, mesh=mesh,
+                              backend=backend)
 
     run(0, 1.0)
     size = _run_fleet_scan._cache_size()
@@ -101,6 +128,13 @@ def check_sharded_cache_reuse(mesh, n):
     run(11, 0.8)
     assert _run_fleet_scan._cache_size() == size, \
         "sharded simulate_fleet retraced on a seed/threshold sweep"
+    run(0, 1.0, backend="pallas")
+    assert _run_fleet_scan._cache_size() == size + 1, \
+        "sharded backend='pallas' cost more than one extra cache entry"
+    run(7, 1.3, backend="pallas")
+    run(11, 0.8, backend="pallas")
+    assert _run_fleet_scan._cache_size() == size + 1, \
+        "sharded simulate_fleet retraced on a backend/seed sweep"
 
 
 def main():
@@ -113,10 +147,13 @@ def main():
     check_stochastic(mesh, n=21)
     check_trace_parity(mesh, n=24)
     check_trace_parity(mesh, n=21)
+    check_kernel_parity(mesh, n=24)
+    check_kernel_parity(mesh, n=21)
     check_sharded_cache_reuse(mesh, n=32)
     # a mesh with a model axis: fleet state shards over data axes only
     mesh2 = jax.make_mesh((4, 2), ("data", "model"))
     check_parity(mesh2, n=21)   # padded 21 -> 24 (4-way data axis)
+    check_kernel_parity(mesh2, n=21)
     print("sharded parity OK")
 
 

@@ -106,6 +106,33 @@ def check_trace_parity(mesh, n, epochs=30):
                 (n, pol, k, host.stats[k] - shard.stats[k])
 
 
+def check_kernel_parity(mesh, n, epochs=20):
+    """The fused-kernel sharded parity oracle, serve side: ``backend=
+    "pallas"`` on the 8-device mesh (per-shard Pallas tile grids + psum-ed
+    stat partials, interpret mode) must be bit-exact with the host-local lax
+    reference on the exact-arithmetic config — modes, charge and the full
+    serving ledger, for every admission policy, training load included."""
+    traffic = Constant.create(n, rate=2.0)
+    harvest = Bernoulli.create(n, prob=0.375, amount=1.25)
+    bat = BatteryConfig(capacity=2.5, leak=0.0, init_charge=0.5)
+    cost = DecodeCostModel(2.0 ** -8, 2.0 ** -9, 2.0 ** -6)
+    train = TrainLoad.create(np.full(n, 4), 0.25)
+    for pol in _policies(n):
+        cfg = ServeConfig(num_clients=n, seed=3)
+        kw = dict(record_modes=True, train=train)
+        host = simulate_serve(traffic, harvest, bat, cost, QOS, pol, cfg,
+                              epochs, **kw)
+        fused = simulate_serve(traffic, harvest, bat, cost, QOS, pol, cfg,
+                               epochs, mesh=mesh, backend="pallas", **kw)
+        assert np.array_equal(np.asarray(host.modes),
+                              np.asarray(fused.modes)), (n, pol, "modes")
+        assert np.array_equal(np.asarray(host.final_charge),
+                              np.asarray(fused.final_charge)), (n, pol)
+        for k in host.stats:
+            assert np.array_equal(host.stats[k], fused.stats[k]), \
+                (n, pol, k, host.stats[k] - fused.stats[k])
+
+
 def check_sharded_cache_reuse(mesh, n):
     """Repeat sharded calls with different seeds/admission scales must hit
     the jit cache (same shapes, same shardings)."""
@@ -115,10 +142,10 @@ def check_sharded_cache_reuse(mesh, n):
     cost = DecodeCostModel(1e-3, 2e-3, 5e-2)
     pol = BatteryGated.create(n)
 
-    def run(seed, admit):
+    def run(seed, admit, backend="lax"):
         cfg = ServeConfig(num_clients=n, seed=seed)
         return simulate_serve(traffic, harvest, bat, cost, QOS, pol, cfg, 10,
-                              admit=admit, mesh=mesh)
+                              admit=admit, mesh=mesh, backend=backend)
 
     run(0, 1.0)
     size = _run_serve_scan._cache_size()
@@ -126,6 +153,13 @@ def check_sharded_cache_reuse(mesh, n):
     run(11, 0.5)
     assert _run_serve_scan._cache_size() == size, \
         "sharded simulate_serve retraced on a seed/admit sweep"
+    run(0, 1.0, backend="pallas")
+    assert _run_serve_scan._cache_size() == size + 1, \
+        "sharded backend='pallas' cost more than one extra cache entry"
+    run(7, 1.5, backend="pallas")
+    run(11, 0.5, backend="pallas")
+    assert _run_serve_scan._cache_size() == size + 1, \
+        "sharded simulate_serve retraced on a backend/seed sweep"
 
 
 def main():
@@ -138,6 +172,8 @@ def main():
     check_stochastic(mesh, n=21)
     check_trace_parity(mesh, n=24)
     check_trace_parity(mesh, n=21)
+    check_kernel_parity(mesh, n=24)
+    check_kernel_parity(mesh, n=21)
     check_sharded_cache_reuse(mesh, n=32)
     # a mesh with a model axis: serve state shards over data axes only
     mesh2 = jax.make_mesh((4, 2), ("data", "model"))

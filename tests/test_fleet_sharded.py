@@ -175,11 +175,11 @@ def test_fleet_scan_cache_reuse_host_local():
     bat = BatteryConfig(capacity=2.0, leak=0.01)
     E = _profile_E(n)
 
-    def run(seed, threshold, offset=0):
+    def run(seed, threshold, offset=0, backend="lax"):
         cfg = FleetConfig(num_clients=n, policy=Policy.THRESHOLD, seed=seed,
                           threshold=threshold)
         return simulate_fleet(proc, bat, 1.0, cfg, 12, E=E,
-                              round_offset=offset)
+                              round_offset=offset, backend=backend)
 
     run(0, 1.0)                       # may trace (cold cache for this shape)
     size = _run_fleet_scan._cache_size()
@@ -188,22 +188,39 @@ def test_fleet_scan_cache_reuse_host_local():
     run(5, 1.25, offset=12)           # chunked-continuation path
     assert _run_fleet_scan._cache_size() == size, \
         "simulate_fleet retraced on a seed/threshold/offset sweep"
+    # switching backends is one static flip: exactly one extra trace, and
+    # value sweeps at the new backend reuse it
+    run(0, 1.0, backend="pallas")
+    assert _run_fleet_scan._cache_size() == size + 1, \
+        "backend='pallas' cost more than one extra cache entry"
+    run(5, 1.25, backend="pallas")
+    run(9, 0.75, offset=12, backend="pallas")
+    run(5, 1.25)                      # and the lax entry is still warm
+    assert _run_fleet_scan._cache_size() == size + 1, \
+        "simulate_fleet retraced on a backend/seed/threshold sweep"
 
 
 def test_fleet_scan_cache_reuse_padded():
     """The padded shape is a distinct (one-time) trace; sweeps at that shape
-    then hit the cache too."""
+    then hit the cache too — on both backends (the pallas tile grid pads
+    again internally without fragmenting the cache)."""
     n = 13
     proc = Bernoulli.create(n, prob=0.4)
     bat = BatteryConfig(capacity=2.0, leak=0.01)
     E = _profile_E(n)
 
-    def run(seed):
+    def run(seed, backend="lax"):
         cfg = FleetConfig(num_clients=n, policy=Policy.GREEDY, seed=seed)
-        return simulate_fleet(proc, bat, 1.0, cfg, 12, E=E, pad_to=16)
+        return simulate_fleet(proc, bat, 1.0, cfg, 12, E=E, pad_to=16,
+                              backend=backend)
 
     run(0)
     size = _run_fleet_scan._cache_size()
     run(3)
     run(4)
     assert _run_fleet_scan._cache_size() == size
+    run(0, backend="pallas")
+    assert _run_fleet_scan._cache_size() == size + 1
+    run(3, backend="pallas")
+    run(4, backend="pallas")
+    assert _run_fleet_scan._cache_size() == size + 1

@@ -120,3 +120,183 @@ def test_fused_agg_matches_paper_aggregation():
                         interpret=True)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                                rtol=1e-5, atol=1e-5)
+
+
+# --------------------------------------------------- fused round-step kernel
+from repro.core.scheduling import Policy
+from repro.energy import arrivals, battery as battery_lib, step_ops
+from repro.energy.costs import DecodeCostModel
+from repro.energy.fleet import FLEET_POLICIES, FleetConfig, simulate_fleet
+from repro.kernels import fleet_step
+from repro.serve import admission, traffic as traffic_lib
+from repro.serve.fleet_serve import ServeConfig, TrainLoad, simulate_serve
+from repro.serve.qos import QoSSpec
+
+# exact-arithmetic (dyadic) fleet configuration: every product/sum below is
+# exactly representable in fp32, so tile-partial sums reassociate exactly
+# and kernel-vs-lax parity is BIT-exact, not approximate
+BAT = battery_lib.BatteryConfig(capacity=2.5, leak=0.25, init_charge=0.5)
+COST = 0.75
+QOS = QoSSpec(prompt_tokens=64.0, full_decode_tokens=128.0,
+              short_decode_tokens=32.0)
+DECODE = DecodeCostModel(2.0 ** -8, 2.0 ** -9, 2.0 ** -6)
+
+
+def _dyadic_fleet(n, seed=5):
+    key = jax.random.PRNGKey(seed)
+    charge = jax.random.randint(key, (n,), 0, 9).astype(jnp.float32) * 0.25
+    harvest = jax.random.randint(jax.random.fold_in(key, 1), (n,), 0, 5
+                                 ).astype(jnp.float32) * 0.25
+    want = (jax.random.uniform(jax.random.fold_in(key, 2), (n,)) > 0.5
+            ).astype(jnp.float32)
+    return charge, harvest, want
+
+
+def _assert_bitwise(got, want, label):
+    assert np.array_equal(np.asarray(got), np.asarray(want)), label
+
+
+@pytest.mark.parametrize("n,tile", [(24, 8), (21, 8), (13, 16)])
+@pytest.mark.parametrize("flavor", ["sustainable", "greedy", "threshold"])
+def test_fleet_step_kernel_vs_reference(n, tile, flavor):
+    """The fused kernel vs the longhand `ref.fleet_step_reference` oracle:
+    bit-exact per-client state, mask, and telemetry, on divisible and
+    padded (masked tail tile) client counts."""
+    charge, harvest, want = _dyadic_fleet(n)
+    valid = jnp.ones((n,), jnp.float32)
+    policy = {"sustainable": Policy.SUSTAINABLE, "greedy": Policy.GREEDY,
+              "threshold": Policy.THRESHOLD}[flavor]
+    program, env = step_ops.fleet_step_program(BAT, policy)
+    env.update(charge=charge, harvest=harvest, round_cost=jnp.float32(COST),
+               threshold=jnp.float32(1.5), valid=valid)
+    if flavor == "sustainable":
+        env["want"] = want
+    state, emits, stats = fleet_step.fused_step(
+        program, env, n=n, emit=True, tile=tile, interpret=True)
+    ref_charge, ref_mask, ref_stats = ref.fleet_step_reference(
+        charge, harvest, COST, valid, capacity=BAT.capacity, leak=BAT.leak,
+        want=want if flavor == "sustainable" else None,
+        threshold=1.5 if flavor == "threshold" else None)
+    _assert_bitwise(state["charge_out"], ref_charge, "charge")
+    _assert_bitwise(emits["mask"], ref_mask, "mask")
+    assert set(stats) == set(ref_stats)
+    for k in ref_stats:
+        _assert_bitwise(stats[k], ref_stats[k], k)
+
+
+@pytest.mark.parametrize("n", [24, 21])
+@pytest.mark.parametrize("pol_kind", ["agnostic", "battery", "charge"])
+@pytest.mark.parametrize("with_train", [False, True])
+def test_serve_step_kernel_vs_reference(n, pol_kind, with_train):
+    """Serve-side: fused kernel vs `ref.serve_step_reference`, all three
+    admission policies, with and without the competing training drain."""
+    charge, harvest, _ = _dyadic_fleet(n, seed=9)
+    requests = jax.random.randint(jax.random.fold_in(jax.random.PRNGKey(9), 3),
+                                  (n,), 0, 5).astype(jnp.float32)
+    valid = jnp.ones((n,), jnp.float32)
+    policy = {"agnostic": admission.EnergyAgnostic(),
+              "battery": admission.BatteryGated(hi=1.0, lo=1.0),
+              "charge": admission.ChargeGated(hi=1.0, lo=0.25)}[pol_kind]
+    train = (TrainLoad.create(np.full(n, 4), 0.25, policy=Policy.GREEDY)
+             if with_train else None)
+    program, env = step_ops.serve_step_program(BAT, DECODE, QOS, policy,
+                                               train)
+    env.update(charge=charge, harvest=harvest, requests=requests,
+               admit=jnp.float32(1.0), valid=valid)
+    state, emits, stats = fleet_step.fused_step(
+        program, env, n=n, emit=True, tile=8, interpret=True)
+    ref_charge, ref_mode, ref_stats = ref.serve_step_reference(
+        charge, harvest, requests, valid, capacity=BAT.capacity,
+        leak=BAT.leak,
+        full_req=float(QOS.request_cost(DECODE)),
+        short_req=float(QOS.request_cost(DECODE, degraded=True)),
+        full_tokens=QOS.full_decode_tokens, short_tokens=QOS.short_decode_tokens,
+        hi=None if pol_kind == "agnostic" else 1.0,
+        lo={"agnostic": None, "battery": 1.0, "charge": 0.25}[pol_kind],
+        charge_gated=pol_kind == "charge",
+        train_cost=0.25 if with_train else None)
+    _assert_bitwise(state["charge_out"], ref_charge, "charge")
+    _assert_bitwise(emits["mode"], ref_mode, "mode")
+    assert set(stats) == set(ref_stats)
+    for k in ref_stats:
+        _assert_bitwise(stats[k], ref_stats[k], k)
+
+
+def test_unfused_runner_matches_lax_executor():
+    """The benchmark baseline (per-op jit, HBM round-trips) computes the
+    same numbers as the fused executors."""
+    n = 24
+    charge, harvest, want = _dyadic_fleet(n)
+    valid = jnp.ones((n,), jnp.float32)
+    program, env = step_ops.fleet_step_program(BAT, Policy.SUSTAINABLE)
+    env.update(charge=charge, harvest=harvest, round_cost=jnp.float32(COST),
+               threshold=jnp.float32(1.5), valid=valid, want=want)
+    env_lax, stats_lax = step_ops.run_step_lax(program, dict(env),
+                                               valid=valid)
+    env_unf, stats_unf = step_ops.UnfusedRunner(program)(env, valid=valid)
+    _assert_bitwise(env_unf["charge_out"], env_lax["charge_out"], "charge")
+    for k in stats_lax:
+        _assert_bitwise(stats_unf[k], stats_lax[k], k)
+
+
+def test_bytes_moved_model_favors_fusion():
+    """The roofline model: the unfused chain moves several times the fused
+    kernel's one-read-one-write traffic, for both step programs."""
+    n = 1024
+    arr = jnp.ones((n,), jnp.float32)
+    program, env = step_ops.fleet_step_program(BAT, Policy.THRESHOLD)
+    env.update(charge=arr, harvest=arr, round_cost=jnp.float32(COST),
+               threshold=jnp.float32(1.5), valid=arr)
+    model = step_ops.bytes_moved(program, env, n)
+    assert model["fused_bytes"] < model["unfused_bytes"]
+    assert model["ratio"] > 2.0
+    sprog, senv = step_ops.serve_step_program(
+        BAT, DECODE, QOS, admission.BatteryGated(hi=1.0, lo=1.0),
+        TrainLoad.create(np.full(n, 4), 0.25, policy=Policy.GREEDY))
+    senv.update(charge=arr, harvest=arr, requests=arr,
+                admit=jnp.float32(1.0), valid=arr)
+    smodel = step_ops.bytes_moved(sprog, senv, n)
+    assert smodel["ratio"] > 2.0
+
+
+@pytest.mark.parametrize("n", [24, 21])
+@pytest.mark.parametrize("policy", FLEET_POLICIES)
+def test_fleet_backend_parity_end_to_end(n, policy):
+    """simulate_fleet(backend="pallas") is bit-exact with the lax reference
+    over a whole scan horizon (exact-arithmetic config; interpret mode)."""
+    proc = arrivals.Bernoulli.create(n, prob=0.375, amount=1.25)
+    bat = battery_lib.BatteryConfig(capacity=2.5, leak=0.0, init_charge=0.5)
+    cfg = FleetConfig(num_clients=n, policy=policy, seed=3, threshold=1.5)
+    kw = dict(record_masks=True, groups=np.arange(n) % 3, num_groups=3)
+    a = simulate_fleet(proc, bat, COST, cfg, 12, **kw)
+    b = simulate_fleet(proc, bat, COST, cfg, 12, backend="pallas", **kw)
+    _assert_bitwise(b.final_charge, a.final_charge, "charge")
+    _assert_bitwise(b.masks, a.masks, "masks")
+    assert set(a.stats) == set(b.stats)
+    for k in a.stats:
+        _assert_bitwise(b.stats[k], a.stats[k], k)
+
+
+@pytest.mark.parametrize("n", [24, 21])
+@pytest.mark.parametrize("pol_kind", ["agnostic", "battery", "charge"])
+def test_serve_backend_parity_end_to_end(n, pol_kind):
+    """simulate_serve(backend="pallas") is bit-exact with the lax reference
+    over a whole scan horizon, training load and admission scale included."""
+    tr = traffic_lib.Constant.create(n, rate=2.0)
+    hv = arrivals.Bernoulli.create(n, prob=0.375, amount=1.25)
+    bat = battery_lib.BatteryConfig(capacity=2.5, leak=0.0, init_charge=0.5)
+    policy = {"agnostic": admission.EnergyAgnostic(),
+              "battery": admission.BatteryGated.create(n, hi=1.0, lo=1.0),
+              "charge": admission.ChargeGated.create(n, hi=1.0, lo=0.25)
+              }[pol_kind]
+    train = TrainLoad.create(np.full(n, 4), 0.25)
+    cfg = ServeConfig(num_clients=n, seed=3)
+    kw = dict(train=train, admit=0.5, record_modes=True)
+    a = simulate_serve(tr, hv, bat, DECODE, QOS, policy, cfg, 12, **kw)
+    b = simulate_serve(tr, hv, bat, DECODE, QOS, policy, cfg, 12,
+                       backend="pallas", **kw)
+    _assert_bitwise(b.final_charge, a.final_charge, "charge")
+    _assert_bitwise(b.modes, a.modes, "modes")
+    assert set(a.stats) == set(b.stats)
+    for k in a.stats:
+        _assert_bitwise(b.stats[k], a.stats[k], k)

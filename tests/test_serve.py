@@ -300,10 +300,11 @@ def test_serve_scan_cache_reuse_host_local():
     traffic, harvest, bat, cost = _exact_setup(n)
     pol = BatteryGated.create(n)
 
-    def run(seed, admit, offset=0):
+    def run(seed, admit, offset=0, backend="lax"):
         cfg = ServeConfig(num_clients=n, seed=seed)
         return simulate_serve(traffic, harvest, bat, cost, QOS, pol, cfg, 12,
-                              admit=admit, epoch_offset=offset)
+                              admit=admit, epoch_offset=offset,
+                              backend=backend)
 
     run(0, 1.0)                       # may trace (cold cache for this shape)
     size = _run_serve_scan._cache_size()
@@ -312,25 +313,41 @@ def test_serve_scan_cache_reuse_host_local():
     run(5, 1.25, offset=12)           # chunked-continuation path
     assert _run_serve_scan._cache_size() == size, \
         "simulate_serve retraced on a seed/admit/offset sweep"
+    # switching backends is one static flip: exactly one extra trace, and
+    # value sweeps at the new backend reuse it
+    run(0, 1.0, backend="pallas")
+    assert _run_serve_scan._cache_size() == size + 1, \
+        "backend='pallas' cost more than one extra cache entry"
+    run(5, 1.25, backend="pallas")
+    run(9, 0.75, offset=12, backend="pallas")
+    run(5, 1.25)                      # and the lax entry is still warm
+    assert _run_serve_scan._cache_size() == size + 1, \
+        "simulate_serve retraced on a backend/seed/admit sweep"
 
 
 def test_serve_scan_cache_reuse_padded():
     """The padded shape is a distinct (one-time) trace; sweeps at that shape
-    then hit the cache too."""
+    then hit the cache too — on both backends (the pallas tile grid pads
+    again internally without fragmenting the cache)."""
     n = 13
     traffic, harvest, bat, cost = _exact_setup(n)
     pol = BatteryGated.create(n)
 
-    def run(seed):
+    def run(seed, backend="lax"):
         cfg = ServeConfig(num_clients=n, seed=seed)
         return simulate_serve(traffic, harvest, bat, cost, QOS, pol, cfg, 12,
-                              pad_to=16)
+                              pad_to=16, backend=backend)
 
     run(0)
     size = _run_serve_scan._cache_size()
     run(3)
     run(4)
     assert _run_serve_scan._cache_size() == size
+    run(0, backend="pallas")
+    assert _run_serve_scan._cache_size() == size + 1
+    run(3, backend="pallas")
+    run(4, backend="pallas")
+    assert _run_serve_scan._cache_size() == size + 1
 
 
 # ------------------------------------------------- train/serve competition --
