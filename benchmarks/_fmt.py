@@ -1,0 +1,55 @@
+"""Shared table/manifest formatting for the benchmark suite.
+
+One source of truth for the fixed-width text tables (`benchmarks.roofline`)
+and the markdown tables (`benchmarks.report`) that used to be hand-rolled
+in each module, plus `manifest_line` — the renderer for the provenance
+manifest block PR 7 embeds in every ``BENCH_*.json`` (`repro.obs.events
+.RunManifest`).  All of it is stdlib-only: `benchmarks.run` imports the
+roofline module without repro on the path.
+"""
+from __future__ import annotations
+
+
+def text_table(headers: list[str], rows: list[list], align: str | None = None
+               ) -> str:
+    """Fixed-width text table over pre-formatted cells.
+
+    ``align`` is one '<'/'>' per column (default: first column left, the
+    rest right — the numeric-table convention of the roofline output).
+    """
+    cells = [[str(h) for h in headers]] + [[str(c) for c in r] for r in rows]
+    ncol = len(headers)
+    if align is None:
+        align = "<" + ">" * (ncol - 1)
+    widths = [max(len(r[i]) for r in cells) for i in range(ncol)]
+    lines = ["  ".join(format(c, f"{a}{w}")
+                       for c, a, w in zip(row, align, widths)).rstrip()
+             for row in cells]
+    lines.insert(1, "-" * len(lines[0]))
+    return "\n".join(lines)
+
+
+def md_table(headers: list[str], rows: list[list]) -> str:
+    """GitHub-markdown table over pre-formatted cells."""
+    out = ["| " + " | ".join(str(h) for h in headers) + " |",
+           "|" + "---|" * len(headers)]
+    out += ["| " + " | ".join(str(c) for c in row) + " |" for row in rows]
+    return "\n".join(out)
+
+
+def manifest_line(bench: dict) -> str:
+    """One provenance line from a BENCH dict's embedded ``manifest`` block.
+
+    Pre-PR-7 BENCH files have no manifest — those (and any malformed block)
+    render as an explicit placeholder instead of crashing the report.
+    """
+    man = bench.get("manifest") if isinstance(bench, dict) else None
+    if not isinstance(man, dict):
+        return "(no manifest — pre-PR-7 BENCH file)"
+    pkgs = man.get("packages") or {}
+    mesh = man.get("mesh_shape")
+    return (f"run {man.get('run_id', '?')}: git={man.get('git_rev', '?')} "
+            f"jax={pkgs.get('jax', '?')} backend={man.get('jax_backend', '?')} "
+            f"devices={man.get('device_count', '?')} "
+            f"mesh={mesh if mesh else 'host-local'} "
+            f"config_hash={man.get('config_hash', '?')}")

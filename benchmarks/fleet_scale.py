@@ -24,6 +24,7 @@ Usage:
 from __future__ import annotations
 
 import argparse
+import contextlib
 import json
 import time
 
@@ -192,7 +193,29 @@ def main():
                     help="CI-sized sweep (seconds, not minutes)")
     ap.add_argument("--out", default="BENCH_fleet.json")
     ap.add_argument("--rounds", type=int, default=100)
+    ap.add_argument("--obs-dir", default=None,
+                    help="also stream bench progress as a repro.obs JSONL "
+                         "event log (manifest + per-section spans + "
+                         "per-record events)")
     args = ap.parse_args()
+
+    from repro.obs import Obs, RunManifest
+    obs = Obs(args.obs_dir) if args.obs_dir else None
+    if obs is not None:
+        manifest = obs.write_manifest("fleet_scale", horizon=args.rounds,
+                                      smoke=args.smoke)
+    else:
+        manifest = RunManifest.create("fleet_scale", horizon=args.rounds,
+                                      smoke=args.smoke)
+
+    def _span(name):
+        return obs.span(name) if obs is not None else contextlib.nullcontext()
+
+    def _note(section, rec):
+        if obs is not None:
+            obs.event("bench_record", section=section,
+                      **{k: v for k, v in rec.items()
+                         if isinstance(v, (int, float, str, bool))})
 
     if args.smoke:
         sizes = [1_000, 100_000]
@@ -210,8 +233,10 @@ def main():
     results = []
     for n in sizes:
         for policy, process in combos:
-            rec = bench_one(n, args.rounds, policy, process)
+            with _span("results"):
+                rec = bench_one(n, args.rounds, policy, process)
             results.append(rec)
+            _note("results", rec)
             print(f"N={n:>9,} {policy.value:>11}/{process:<9} "
                   f"run={rec['run_s']:.3f}s  rounds/s={rec['rounds_per_s']:.1f}  "
                   f"client-rounds/s={rec['client_rounds_per_s']:.2e}  "
@@ -225,8 +250,11 @@ def main():
         mesh = jax.make_mesh((n_dev,), ("data",))
         for n in sharded_sizes:
             for policy, process in combos[:2]:
-                rec = bench_one(n, args.rounds, policy, process, mesh=mesh)
+                with _span("sharded"):
+                    rec = bench_one(n, args.rounds, policy, process,
+                                    mesh=mesh)
                 sharded.append(rec)
+                _note("sharded", rec)
                 print(f"N={n:>9,} {policy.value:>11}/{process:<9} sharded/"
                       f"{n_dev}dev run={rec['run_s']:.3f}s  "
                       f"client-rounds/s={rec['client_rounds_per_s']:.2e}  "
@@ -240,8 +268,10 @@ def main():
     # runs included
     round_step = []
     for n in [1_000_000, 10_000_000]:
-        rec = bench_round_step(n, reps=3 if n <= 1_000_000 else 2)
+        with _span("round_step"):
+            rec = bench_round_step(n, reps=3 if n <= 1_000_000 else 2)
         round_step.append(rec)
+        _note("round_step", rec)
         print(f"round_step N={n:>10,}: unfused={rec['unfused_ms']:.2f}ms  "
               f"lax-fused={rec['lax_fused_ms']:.2f}ms  "
               f"pallas={rec['pallas_ms']:.2f}ms"
@@ -249,7 +279,8 @@ def main():
               f"speedup={rec['speedup_fused_vs_unfused']:.2f}x  "
               f"bytes-model={rec['modeled_bytes_ratio']:.2f}x", flush=True)
 
-    ctrl_rec = bench_controller(ctrl_n, args.rounds)
+    with _span("controller"):
+        ctrl_rec = bench_controller(ctrl_n, args.rounds)
     print(f"controller N={ctrl_n:,}: participation "
           f"{ctrl_rec['static_participation']:.4f} -> "
           f"{ctrl_rec['controlled_participation']:.4f}, depleted "
@@ -258,10 +289,13 @@ def main():
           f"T {ctrl_rec['T_trace'][:4]}...", flush=True)
 
     out = {"bench": "fleet_scale", "smoke": args.smoke, "rounds": args.rounds,
-           "devices": n_dev, "results": results, "sharded": sharded,
+           "devices": n_dev, "manifest": manifest.to_dict(),
+           "results": results, "sharded": sharded,
            "round_step": round_step, "controller": ctrl_rec}
     with open(args.out, "w") as f:
         json.dump(out, f, indent=1)
+    if obs is not None:
+        obs.close()
     print(f"wrote {args.out}")
 
 

@@ -9,6 +9,7 @@ import glob
 import json
 import os
 
+from benchmarks._fmt import manifest_line, md_table
 from benchmarks.roofline import load_records
 
 SHAPE_ORDER = {"train_4k": 0, "prefill_32k": 1, "decode_32k": 2,
@@ -18,18 +19,17 @@ SHAPE_ORDER = {"train_4k": 0, "prefill_32k": 1, "decode_32k": 2,
 def dryrun_section(result_dir="benchmarks/dryrun_results") -> str:
     out = ["### Single-pod (16x16, 256 chips) baselines", ""]
     recs = load_records(result_dir, "single")
-    out.append("| arch | shape | mode | compile(s) | GiB/dev | coll GB/dev | "
-               "flops/dev |")
-    out.append("|---|---|---|---|---|---|---|")
+    rows = []
     for r in sorted(recs, key=lambda x: (x["arch"],
                                          SHAPE_ORDER.get(x["shape"], 9))):
         mode = r["step_meta"].get("mode", r["kind"])
-        out.append(
-            f"| {r['arch']} | {r['shape']} | {mode} "
-            f"| {r['compile_s']} "
-            f"| {r['memory']['total_bytes_per_device']/2**30:.2f} "
-            f"| {r.get('collective_bytes_per_device', 0)/1e9:.2f} "
-            f"| {r['cost']['flops_per_device']:.3e} |")
+        rows.append([
+            r["arch"], r["shape"], mode, r["compile_s"],
+            f"{r['memory']['total_bytes_per_device']/2**30:.2f}",
+            f"{r.get('collective_bytes_per_device', 0)/1e9:.2f}",
+            f"{r['cost']['flops_per_device']:.3e}"])
+    out.append(md_table(["arch", "shape", "mode", "compile(s)", "GiB/dev",
+                         "coll GB/dev", "flops/dev"], rows))
     mrecs = load_records(result_dir, "multi")
     out += ["", "### Multi-pod (2x16x16, 512 chips) compile proof", ""]
     if mrecs:
@@ -37,29 +37,30 @@ def dryrun_section(result_dir="benchmarks/dryrun_results") -> str:
         out.append(f"{ok} combos lowered+compiled on the multi-pod mesh "
                    f"(pod axis shards the client/batch dimension).")
         out.append("")
-        out.append("| arch | shape | compile(s) | GiB/dev |")
-        out.append("|---|---|---|---|")
-        for r in sorted(mrecs, key=lambda x: (x["arch"],
-                                              SHAPE_ORDER.get(x["shape"], 9))):
-            out.append(f"| {r['arch']} | {r['shape']} | {r['compile_s']} "
-                       f"| {r['memory']['total_bytes_per_device']/2**30:.2f} |")
+        rows = [[r["arch"], r["shape"], r["compile_s"],
+                 f"{r['memory']['total_bytes_per_device']/2**30:.2f}"]
+                for r in sorted(mrecs,
+                                key=lambda x: (x["arch"],
+                                               SHAPE_ORDER.get(x["shape"], 9)))]
+        out.append(md_table(["arch", "shape", "compile(s)", "GiB/dev"], rows))
     return "\n".join(out)
 
 
 def roofline_section(result_dir="benchmarks/dryrun_results") -> str:
     recs = load_records(result_dir, "single")
-    out = ["| arch | shape | t_comp(s) | t_mem(s) | t_coll(s) | dominant | "
-           "MODEL_FLOPS | useful | one-line diagnosis |",
-           "|---|---|---|---|---|---|---|---|---|"]
+    rows = []
     for r in sorted(recs, key=lambda x: (x["arch"],
                                          SHAPE_ORDER.get(x["shape"], 9))):
         rf = r["roofline"]
-        out.append(
-            f"| {r['arch']} | {r['shape']} "
-            f"| {rf['t_compute_s']:.3e} | {rf['t_memory_s']:.3e} "
-            f"| {rf['t_collective_s']:.3e} | **{rf['dominant']}** "
-            f"| {rf['model_flops']:.2e} | {rf['useful_compute_ratio']:.2f} | |")
-    return "\n".join(out)
+        rows.append([
+            r["arch"], r["shape"],
+            f"{rf['t_compute_s']:.3e}", f"{rf['t_memory_s']:.3e}",
+            f"{rf['t_collective_s']:.3e}", f"**{rf['dominant']}**",
+            f"{rf['model_flops']:.2e}", f"{rf['useful_compute_ratio']:.2f}",
+            ""])
+    return md_table(["arch", "shape", "t_comp(s)", "t_mem(s)", "t_coll(s)",
+                     "dominant", "MODEL_FLOPS", "useful",
+                     "one-line diagnosis"], rows)
 
 
 def fig1_section(path="benchmarks/results/fig1.json") -> str:
@@ -67,10 +68,35 @@ def fig1_section(path="benchmarks/results/fig1.json") -> str:
         return "(fig1.json not yet generated)"
     with open(path) as f:
         data = json.load(f)
-    out = [f"Config: {json.dumps(data['config'])}", "",
-           "| policy | final test acc | wall(s) |", "|---|---|---|"]
-    for k, r in data["results"].items():
-        out.append(f"| {r['label']} | {r['final_acc']:.3f} | {r['wall_s']} |")
+    rows = [[r["label"], f"{r['final_acc']:.3f}", r["wall_s"]]
+            for r in data["results"].values()]
+    return f"Config: {json.dumps(data['config'])}\n\n" \
+        + md_table(["policy", "final test acc", "wall(s)"], rows)
+
+
+def bench_section(path="BENCH_fleet.json") -> str:
+    """Provenance + round-step timings of a committed ``BENCH_*.json``.
+
+    Renders the embedded manifest block via `manifest_line` (pre-PR-7 files
+    without one get an explicit placeholder, never a crash) and the
+    ``round_step`` timing rows the CI bench-diff tripwire guards.
+    """
+    if not os.path.exists(path):
+        return f"({path} not yet generated)"
+    with open(path) as f:
+        bench = json.load(f)
+    out = [f"`{path}` — {manifest_line(bench)}", ""]
+    steps = bench.get("round_step") or []
+    if steps:
+        rows = [[f"{r.get('num_clients', 0):,}", r.get("policy", "-"),
+                 r.get("unfused_ms", "-"), r.get("lax_fused_ms", "-"),
+                 r.get("pallas_ms", "-"),
+                 r.get("speedup_fused_vs_unfused", "-")]
+                for r in steps]
+        out.append(md_table(["clients", "policy", "unfused ms",
+                             "lax fused ms", "pallas ms", "speedup"], rows))
+    else:
+        out.append("(no round_step section)")
     return "\n".join(out)
 
 
@@ -81,3 +107,7 @@ if __name__ == "__main__":
     print(roofline_section())
     print("\n## §Fig1\n")
     print(fig1_section())
+    print("\n## §Bench provenance\n")
+    for p in ("BENCH_fleet.json", "BENCH_serve.json", "BENCH_traces.json"):
+        print(bench_section(p))
+        print()

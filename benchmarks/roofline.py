@@ -20,6 +20,8 @@ import glob
 import json
 import os
 
+from benchmarks._fmt import text_table
+
 
 def load_records(result_dir: str = "benchmarks/dryrun_results",
                  mesh: str = "single", tag: str = "") -> list[dict]:
@@ -37,24 +39,22 @@ def load_records(result_dir: str = "benchmarks/dryrun_results",
     return recs
 
 
-def fmt_row(r: dict) -> str:
+def fmt_row(r: dict) -> list[str]:
     rf = r["roofline"]
     mem = r["memory"]["total_bytes_per_device"] / 2 ** 30
-    return (f"{r['arch']:18s} {r['shape']:12s} "
-            f"{rf['t_compute_s']:10.3e} {rf['t_memory_s']:10.3e} "
-            f"{rf['t_collective_s']:10.3e}  {rf['dominant']:10s} "
-            f"{rf['useful_compute_ratio']:7.3f} {mem:8.2f}")
+    return [r["arch"], r["shape"],
+            f"{rf['t_compute_s']:.3e}", f"{rf['t_memory_s']:.3e}",
+            f"{rf['t_collective_s']:.3e}", rf["dominant"],
+            f"{rf['useful_compute_ratio']:.3f}", f"{mem:.2f}"]
 
 
 def render_table(recs: list[dict]) -> str:
-    head = (f"{'arch':18s} {'shape':12s} {'t_comp(s)':>10s} {'t_mem(s)':>10s} "
-            f"{'t_coll(s)':>10s}  {'dominant':10s} {'useful':>7s} "
-            f"{'GiB/dev':>8s}")
-    lines = [head, "-" * len(head)]
     order = {"train_4k": 0, "prefill_32k": 1, "decode_32k": 2, "long_500k": 3}
-    for r in sorted(recs, key=lambda x: (x["arch"], order.get(x["shape"], 9))):
-        lines.append(fmt_row(r))
-    return "\n".join(lines)
+    rows = [fmt_row(r) for r in
+            sorted(recs, key=lambda x: (x["arch"], order.get(x["shape"], 9)))]
+    return text_table(["arch", "shape", "t_comp(s)", "t_mem(s)", "t_coll(s)",
+                       "dominant", "useful", "GiB/dev"], rows,
+                      align="<<>>><>>")
 
 
 def csv_rows(recs: list[dict]) -> list[tuple[str, float, str]]:
@@ -108,15 +108,12 @@ def round_step_records(n: int = 10_000_000) -> list[dict]:
 
 
 def round_step_table(n: int = 10_000_000) -> str:
-    head = (f"{'program':12s} {'clients':>12s} {'unfused GiB':>12s} "
-            f"{'fused GiB':>10s} {'ratio':>7s}")
-    lines = [head, "-" * len(head)]
-    for r in round_step_records(n):
-        lines.append(f"{r['program']:12s} {r['num_clients']:12,d} "
-                     f"{r['unfused_bytes'] / 2 ** 30:12.3f} "
-                     f"{r['fused_bytes'] / 2 ** 30:10.3f} "
-                     f"{r['ratio']:7.2f}")
-    return "\n".join(lines)
+    rows = [[r["program"], f"{r['num_clients']:,d}",
+             f"{r['unfused_bytes'] / 2 ** 30:.3f}",
+             f"{r['fused_bytes'] / 2 ** 30:.3f}", f"{r['ratio']:.2f}"]
+            for r in round_step_records(n)]
+    return text_table(["program", "clients", "unfused GiB", "fused GiB",
+                       "ratio"], rows)
 
 
 if __name__ == "__main__":

@@ -27,6 +27,7 @@ Usage:
 from __future__ import annotations
 
 import argparse
+import contextlib
 import json
 import time
 
@@ -229,7 +230,29 @@ def main():
                     help="CI-sized sweep (seconds, not minutes)")
     ap.add_argument("--out", default="BENCH_serve.json")
     ap.add_argument("--epochs", type=int, default=96)
+    ap.add_argument("--obs-dir", default=None,
+                    help="also stream bench progress as a repro.obs JSONL "
+                         "event log (manifest + per-section spans + "
+                         "per-record events)")
     args = ap.parse_args()
+
+    from repro.obs import Obs, RunManifest
+    obs = Obs(args.obs_dir) if args.obs_dir else None
+    if obs is not None:
+        manifest = obs.write_manifest("serve_scale", horizon=args.epochs,
+                                      smoke=args.smoke)
+    else:
+        manifest = RunManifest.create("serve_scale", horizon=args.epochs,
+                                      smoke=args.smoke)
+
+    def _span(name):
+        return obs.span(name) if obs is not None else contextlib.nullcontext()
+
+    def _note(section, rec):
+        if obs is not None:
+            obs.event("bench_record", section=section,
+                      **{k: v for k, v in rec.items()
+                         if isinstance(v, (int, float, str, bool))})
 
     if args.smoke:
         sizes = [1_000, 100_000]
@@ -248,8 +271,10 @@ def main():
     results = []
     for n in sizes:
         for traffic_name, policy_name in combos:
-            rec = bench_one(n, args.epochs, traffic_name, policy_name)
+            with _span("results"):
+                rec = bench_one(n, args.epochs, traffic_name, policy_name)
             results.append(rec)
+            _note("results", rec)
             print(f"N={n:>9,} {traffic_name:>8}/{policy_name:<9} "
                   f"run={rec['run_s']:.3f}s  epochs/s={rec['epochs_per_s']:.1f}  "
                   f"client-epochs/s={rec['client_epochs_per_s']:.2e}  "
@@ -261,9 +286,11 @@ def main():
         mesh = jax.make_mesh((n_dev,), ("data",))
         for n, epochs in sharded:
             for traffic_name, policy_name in combos[:1]:
-                rec = bench_one(n, epochs, traffic_name, policy_name,
-                                mesh=mesh)
+                with _span("sharded"):
+                    rec = bench_one(n, epochs, traffic_name, policy_name,
+                                    mesh=mesh)
                 sharded_results.append(rec)
+                _note("sharded", rec)
                 print(f"N={n:>9,} {traffic_name:>8}/{policy_name:<9} sharded/"
                       f"{n_dev}dev epochs={epochs} run={rec['run_s']:.3f}s  "
                       f"client-epochs/s={rec['client_epochs_per_s']:.2e}",
@@ -276,8 +303,10 @@ def main():
     # twin of fleet_scale's >= 2x fused-vs-unfused acceptance gate)
     round_step = []
     for n in [1_000_000, 10_000_000]:
-        rec = bench_round_step(n, reps=3 if n <= 1_000_000 else 2)
+        with _span("round_step"):
+            rec = bench_round_step(n, reps=3 if n <= 1_000_000 else 2)
         round_step.append(rec)
+        _note("round_step", rec)
         print(f"round_step N={n:>10,}: unfused={rec['unfused_ms']:.2f}ms  "
               f"lax-fused={rec['lax_fused_ms']:.2f}ms  "
               f"pallas={rec['pallas_ms']:.2f}ms"
@@ -285,7 +314,8 @@ def main():
               f"speedup={rec['speedup_fused_vs_unfused']:.2f}x  "
               f"bytes-model={rec['modeled_bytes_ratio']:.2f}x", flush=True)
 
-    adm = bench_admission(adm_n, args.epochs)
+    with _span("admission"):
+        adm = bench_admission(adm_n, args.epochs)
     print(f"admission N={adm_n:,}: unanswered "
           f"{adm['agnostic']['unanswered_rate']:.3f} (agnostic) -> "
           f"{adm['gated']['unanswered_rate']:.3f} (gated) / "
@@ -295,10 +325,13 @@ def main():
           f"{adm['controlled']['frac_depleted']:.3f}", flush=True)
 
     out = {"bench": "serve_scale", "smoke": args.smoke, "epochs": args.epochs,
-           "devices": n_dev, "results": results, "sharded": sharded_results,
+           "devices": n_dev, "manifest": manifest.to_dict(),
+           "results": results, "sharded": sharded_results,
            "round_step": round_step, "admission": adm}
     with open(args.out, "w") as f:
         json.dump(out, f, indent=1)
+    if obs is not None:
+        obs.close()
     print(f"wrote {args.out}")
 
 

@@ -20,6 +20,7 @@ Usage:
 from __future__ import annotations
 
 import argparse
+import contextlib
 import json
 import time
 
@@ -152,7 +153,29 @@ def main():
                     help="CI-sized sweep (seconds, not minutes)")
     ap.add_argument("--out", default="BENCH_traces.json")
     ap.add_argument("--epochs", type=int, default=96)
+    ap.add_argument("--obs-dir", default=None,
+                    help="also stream bench progress as a repro.obs JSONL "
+                         "event log (manifest + per-section spans + "
+                         "per-record events)")
     args = ap.parse_args()
+
+    from repro.obs import Obs, RunManifest
+    obs = Obs(args.obs_dir) if args.obs_dir else None
+    if obs is not None:
+        manifest = obs.write_manifest("trace_scale", horizon=args.epochs,
+                                      smoke=args.smoke)
+    else:
+        manifest = RunManifest.create("trace_scale", horizon=args.epochs,
+                                      smoke=args.smoke)
+
+    def _span(name):
+        return obs.span(name) if obs is not None else contextlib.nullcontext()
+
+    def _note(section, rec):
+        if obs is not None:
+            obs.event("bench_record", section=section,
+                      **{k: v for k, v in rec.items()
+                         if isinstance(v, (int, float, str, bool))})
 
     if args.smoke:
         sizes = [1_000, 100_000]
@@ -168,8 +191,10 @@ def main():
     results = []
     for n in sizes:
         for bench in (bench_fleet, bench_serve):
-            rec = bench(n, args.epochs)
+            with _span("results"):
+                rec = bench(n, args.epochs)
             results.append(rec)
+            _note("results", rec)
             per_s = rec.get("client_rounds_per_s",
                             rec.get("client_epochs_per_s"))
             print(f"N={n:>9,} {rec['scan']:>6} run={rec['run_s']:.3f}s  "
@@ -180,8 +205,10 @@ def main():
     if n_dev > 1:
         mesh = jax.make_mesh((n_dev,), ("data",))
         for n, epochs in sharded:
-            rec = bench_serve(n, epochs, mesh=mesh)
+            with _span("sharded"):
+                rec = bench_serve(n, epochs, mesh=mesh)
             sharded_results.append(rec)
+            _note("sharded", rec)
             print(f"N={n:>9,}  serve sharded/{n_dev}dev epochs={epochs} "
                   f"run={rec['run_s']:.3f}s  "
                   f"client-epochs/s={rec['client_epochs_per_s']:.2e}",
@@ -190,17 +217,21 @@ def main():
         print("single device: skipping sharded section "
               "(set XLA_FLAGS=--xla_force_host_platform_device_count=8)")
 
-    cal = bench_calibration(fit_n, fit_r)
+    with _span("calibration"):
+        cal = bench_calibration(fit_n, fit_r)
     for name in ("markov_solar", "diurnal_poisson", "mmpp"):
         print(f"calibration {name}: true={cal[name]['true']} "
               f"fitted={cal[name]['fitted']} ({cal[name]['fit_s']}s)",
               flush=True)
 
     out = {"bench": "trace_scale", "smoke": args.smoke, "epochs": args.epochs,
-           "devices": n_dev, "results": results, "sharded": sharded_results,
+           "devices": n_dev, "manifest": manifest.to_dict(),
+           "results": results, "sharded": sharded_results,
            "calibration": cal}
     with open(args.out, "w") as f:
         json.dump(out, f, indent=1)
+    if obs is not None:
+        obs.close()
     print(f"wrote {args.out}")
 
 

@@ -42,7 +42,22 @@ def add_scenario_flags(parser: argparse.ArgumentParser,
                              "(kernels.fleet_step; interpret mode off-TPU) — "
                              "bit-exact on exact-arithmetic configs, same "
                              "telemetry either way")
+    parser.add_argument("--obs-dir", default=None,
+                        help="stream the run as a repro.obs JSONL event log "
+                             "(manifest + per-round energy seven / serve "
+                             "ledger + spans) into this directory; inspect "
+                             "with `python -m repro.obs.report summary DIR`")
     return parser
+
+
+def make_obs(args):
+    """An `repro.obs.Obs` for ``--obs-dir`` runs, else None (the bit-exact
+    uninstrumented default).  Imported lazily so the examples stay runnable
+    even if the obs package is stripped."""
+    if not getattr(args, "obs_dir", None):
+        return None
+    from repro.obs import Obs
+    return Obs(args.obs_dir)
 
 
 def solar_harvest(args, n: int, *, day_mean: float = 1.0,

@@ -32,7 +32,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from _cli import add_scenario_flags, scenario_name, solar_harvest
+from _cli import add_scenario_flags, make_obs, scenario_name, solar_harvest
 from repro.core import EnergyProfile, FedConfig, Policy, simulate
 from repro.energy import (BatteryConfig, CompoundPoisson, EnergyLoop,
                           FleetConfig, MarkovSolar, Scaled, Sum,
@@ -54,6 +54,7 @@ process = Sum((
 ))
 battery = BatteryConfig(capacity=2.5, leak=0.02, init_charge=0.5)
 E = np.asarray(EnergyProfile(N).cycles())  # the paper's §V profile
+obs = make_obs(args)
 
 print(f"fleet: N={N:,} clients, {ROUNDS} rounds, "
       f"{scenario_name(args)} solar + RF harvest, seed={args.seed}\n")
@@ -64,7 +65,7 @@ for policy, thr in [(Policy.SUSTAINABLE, 1.0), (Policy.GREEDY, 1.0),
     cfg = FleetConfig(num_clients=N, policy=policy, threshold=thr,
                       seed=args.seed)
     res = simulate_fleet(process, battery, 1.0, cfg, ROUNDS, E=E,
-                         backend=args.backend)
+                         backend=args.backend, obs=obs)
     s = res.stats
     print(f"{policy.value:>12} {100*res.participation_rate.mean():7.2f} "
           f"{s['consumed'].sum():10.0f} {s['overflowed'].sum():10.0f} "
@@ -95,3 +96,6 @@ for h in res.history[::5]:
     print(f"  round {h['round']:2d}: participants={h['participants']} "
           f"mean_charge={h['energy_mean_charge']:.2f} "
           f"loss={h.get('loss', float('nan')):.4f}")
+if obs is not None:
+    obs.close()
+    print(f"\nobs events -> {obs.log.path}")

@@ -27,7 +27,7 @@ import argparse
 
 import numpy as np
 
-from _cli import add_scenario_flags
+from _cli import add_scenario_flags, make_obs
 from repro.energy import (AdmissionRule, BatteryConfig, ControlBounds,
                           DecodeCostModel, ServerController, TraceHarvest)
 from repro.serve import (BatteryGated, DiurnalPoisson, QoSSpec, ServeConfig,
@@ -86,13 +86,16 @@ print(f"controlled serving, N={N:,}, {EPOCHS} epochs "
 print(f"{'':>10} {'served%':>8} {'shed%':>6} {'miss%':>6} {'depl%':>6} "
       f"{'J/tok':>8} {'admit(end)':>10}")
 results = {}
+# one Obs spans both controlled runs: the first writes the manifest, the
+# second is delimited by a ``phase`` event in the same stream
+obs = make_obs(args)
 for name, (h, t) in {"trace": (harvest, traffic),
                      "twin": (twin_solar, twin_diurnal)}.items():
     ctrl = ServerController(T0=5, E0=4, rules=(AdmissionRule(),),
                             bounds=ControlBounds())
     res, ctrl = run_serve_controlled(
         t, h, battery, cost, qos, BatteryGated.create(N), cfg, EPOCHS, ctrl,
-        train_cost=0.2, control_every=24, backend=args.backend)
+        train_cost=0.2, control_every=24, backend=args.backend, obs=obs)
     results[name] = res
     s = res.stats
     off = max(s["offered"].sum(), 1e-9)
@@ -110,3 +113,7 @@ print(f"  depletion p95: {np.percentile(tr['frac_depleted'], 95):.3f} trace "
       f"(consecutive-overcast droughts)")
 print(f"  offered  p99: {np.percentile(tr['offered'], 99):.0f} trace vs "
       f"{np.percentile(tw['offered'], 99):.0f} twin (launch-day spike)")
+if obs is not None:
+    obs.close()
+    print(f"\nobs events -> {obs.log.path}  "
+          f"(python -m repro.obs.report summary {args.obs_dir})")

@@ -37,6 +37,7 @@ Two consumers:
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 from typing import Any, Callable, Sequence
 
@@ -70,12 +71,30 @@ class ControlState:
     #                       policies apply it via ``scaled()``)
 
 
+def _mean(x) -> float:
+    """Mean that defines the empty-period 0/0 as 0.0 (a control period with
+    zero recorded rounds must not poison the rules with NaN)."""
+    x = np.asarray(x, np.float64)
+    return float(x.mean()) if x.size else 0.0
+
+
+def _div(num: float, den: float) -> float:
+    """Ratio that defines x/0 as 0.0 — zero offered requests, zero harvest
+    or zero scheduled slots mean "no signal", not a NaN/inf excursion."""
+    return num / den if den > 0 else 0.0
+
+
 @dataclasses.dataclass(frozen=True)
 class Telemetry:
     """One control period's fleet signals, reduced from `FleetResult.stats`
     / `ServeResult.stats` (or an `EnergyLoop.step` scalar dict) to what the
     rules read.  The serving-ledger and per-group fields are populated only
-    when the producing simulator emitted them."""
+    when the producing simulator emitted them.
+
+    Degenerate periods are *defined*, not NaN: a period with zero rounds,
+    zero offered requests, zero harvest, or zero-size groups reduces every
+    affected average/ratio to 0.0 (hysteresis dead-bands then hold the
+    knobs), so a quiet window can never destabilise the controller."""
 
     participation_rate: float   # mean participants / N
     frac_depleted: float        # mean fraction unable to afford a round
@@ -98,25 +117,29 @@ class Telemetry:
         overflowed = float(arr("overflowed").sum())
         extra: dict = {}
         if "offered" in stats:
-            offered = max(float(arr("offered").sum()), 1e-12)
-            extra["shed_rate"] = float(arr("shed").sum()) / offered
-            extra["deadline_miss_rate"] = \
-                float(arr("deadline_missed").sum()) / offered
+            offered = float(arr("offered").sum())
+            extra["shed_rate"] = _div(float(arr("shed").sum()), offered)
+            extra["deadline_miss_rate"] = _div(
+                float(arr("deadline_missed").sum()), offered)
         if "group_frac_depleted" in stats:
             # (R, G) per-round group signals -> (G,) period means
             gd = arr("group_frac_depleted")
-            gp = arr("group_participants")
-            extra["group_frac_depleted"] = gd.reshape(-1, gd.shape[-1]).mean(0)
-            gp = gp.reshape(-1, gp.shape[-1]).mean(0)
+            gd = gd.reshape(-1, gd.shape[-1])
+            gp = arr("group_participants").reshape(-1, gd.shape[-1])
+            zero = np.zeros(gd.shape[-1], np.float64)
+            extra["group_frac_depleted"] = gd.mean(0) if gd.size else zero
+            gp = gp.mean(0) if gp.size else zero
             sizes = (np.asarray(group_sizes, np.float64)
                      if group_sizes is not None
-                     else np.full(gp.shape, num_clients / gp.shape[0]))
-            extra["group_participation_rate"] = gp / np.maximum(sizes, 1.0)
+                     else np.full(gp.shape,
+                                  num_clients / max(gp.shape[0], 1)))
+            extra["group_participation_rate"] = np.divide(
+                gp, sizes, out=np.zeros_like(gp), where=sizes > 0)
         return cls(
-            participation_rate=float(arr("participants").mean()) / num_clients,
-            frac_depleted=float(arr("frac_depleted").mean()),
-            overflow_frac=overflowed / max(harvested, 1e-12),
-            mean_charge=float(arr("mean_charge").mean()),
+            participation_rate=_div(_mean(arr("participants")), num_clients),
+            frac_depleted=_mean(arr("frac_depleted")),
+            overflow_frac=_div(overflowed, harvested),
+            mean_charge=_mean(arr("mean_charge")),
             **extra,
         )
 
@@ -336,7 +359,8 @@ class ServerController:
 def run_controlled(process, bat, cost, cfg, num_rounds: int,
                    controller: ServerController, *, control_every: int = 10,
                    mesh=None, phase=None,
-                   record_masks: bool = False, backend: str = "lax"):
+                   record_masks: bool = False, backend: str = "lax",
+                   obs=None):
     """Closed-loop fleet horizon: `simulate_fleet` in chunks of
     ``control_every`` rounds, with the controller adapting ``T`` (round
     pricing via ``cfg.local_steps``) and per-group ``E`` between chunks.
@@ -348,8 +372,23 @@ def run_controlled(process, bat, cost, cfg, num_rounds: int,
     are traced scan inputs — the chunk program compiles once and every
     subsequent chunk (sharded or host-local) hits the jit cache.
 
+    ``obs=`` (a `repro.obs.Obs`) streams the run as JSONL DURING execution
+    — chunk stats surface host-side between jitted scans anyway, so the
+    manifest, per-round ``round`` events, per-chunk ``span`` timings and
+    post-update ``control`` events cost zero program changes, and a
+    `RetraceSentinel` warns if any chunk after the first retraces the scan.
+
     Returns ``(FleetResult over the full horizon, controller)``.
     """
+    sentinel = None
+    if obs is not None:
+        from repro.obs.profile import RetraceSentinel
+        obs.write_manifest(
+            "fleet_controlled", config=(process, bat, cost), seed=cfg.seed,
+            backend=backend, mesh=mesh, num_clients=cfg.num_clients,
+            horizon=num_rounds, control_every=control_every,
+            policy=cfg.policy)
+        sentinel = RetraceSentinel(obs)
     state = None
     chunks: list[fleet_lib.FleetResult] = []
     offset = 0
@@ -360,15 +399,27 @@ def run_controlled(process, bat, cost, cfg, num_rounds: int,
     while offset < num_rounds:
         chunk = min(control_every, num_rounds - offset)
         ccfg = dataclasses.replace(cfg, local_steps=controller.T)
-        res = fleet_lib.simulate_fleet(
-            process, bat, cost, ccfg, chunk,
-            E=controller.client_E(cfg.num_clients),
-            phase=phase, record_masks=record_masks, mesh=mesh, state=state,
-            round_offset=offset, groups=groups, num_groups=num_groups,
-            backend=backend)
+        with contextlib.ExitStack() as stack:
+            if obs is not None:
+                stack.enter_context(obs.span("fleet_chunk"))
+            res = fleet_lib.simulate_fleet(
+                process, bat, cost, ccfg, chunk,
+                E=controller.client_E(cfg.num_clients),
+                phase=phase, record_masks=record_masks, mesh=mesh,
+                state=state, round_offset=offset, groups=groups,
+                num_groups=num_groups, backend=backend)
         state = res.final_state
         chunks.append(res)
         controller.update(res.stats, cfg.num_clients)
+        if obs is not None:
+            obs.rounds("fleet", offset, res.stats)
+            obs.event("control", round=offset + chunk, T=controller.state.T,
+                      E_mean=float(np.mean(controller.state.E)),
+                      admit=controller.state.admit)
+            if offset == 0:
+                sentinel.snapshot()
+            else:
+                sentinel.check(context=f"fleet chunk at round {offset}")
         offset += chunk
     stats = {k: np.concatenate([c.stats[k] for c in chunks])
              for k in chunks[0].stats}

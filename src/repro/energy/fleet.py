@@ -58,6 +58,7 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.experimental import io_callback as _io_callback
 
 from repro.core import scheduling
 from repro.core.scheduling import Policy
@@ -135,6 +136,38 @@ def _round_cost_array(cost, cfg: FleetConfig) -> jax.Array:
                             (cfg.num_clients,))
 
 
+def _fleet_scan_impl(process, bat, round_cost, E, phase, valid, base_key,
+                     charge0, pstate0, seed, threshold, offset, groups,
+                     policy, num_rounds, record_masks, num_groups,
+                     backend, mesh, tap=None):
+    """Shared scan body of `_run_fleet_scan` and its tapped twin.  ``tap``
+    (a host callback, jit-static by identity) is the opt-in `repro.obs`
+    round tap: an `io_callback` that only *reads* each round's
+    stats dict, so the tapped program computes bit-identical results."""
+    # the lax path always needs the mask for its telemetry dataflow; the
+    # fused kernel only writes it back to HBM when it will be recorded
+    emit = record_masks if backend == "pallas" else True
+    step = partial(_fleet_round, process, bat, policy, round_cost, E, phase,
+                   valid, base_key, seed, threshold, groups, num_groups,
+                   backend, mesh, emit)
+
+    def body(carry, r):
+        carry, mask, stats = step(carry, r)
+        if tap is not None:
+            # unordered on purpose: the ordered variant's token threading
+            # trips XLA's sharding-propagation parameter-count check on
+            # mesh-sharded inputs (hard abort).  The scan's carry dependence
+            # still sequences the calls, and every event carries its round
+            # index, so consumers never rely on stream order.
+            _io_callback(tap, None, r, stats, ordered=False)
+        if record_masks:
+            stats = dict(stats, mask=mask)
+        return carry, stats
+
+    return jax.lax.scan(body, (charge0, pstate0),
+                        offset + jnp.arange(num_rounds, dtype=jnp.int32))
+
+
 @partial(jax.jit, static_argnames=("policy", "num_rounds", "record_masks",
                                    "num_groups", "backend", "mesh"))
 def _run_fleet_scan(process, bat, round_cost, E, phase, valid, base_key,
@@ -151,21 +184,29 @@ def _run_fleet_scan(process, bat, round_cost, E, phase, valid, base_key,
     round step is an explicit `shard_map`; the lax path is partitioned by
     GSPMD from input shardings alone), so switching backends costs exactly
     one extra cache entry."""
-    # the lax path always needs the mask for its telemetry dataflow; the
-    # fused kernel only writes it back to HBM when it will be recorded
-    emit = record_masks if backend == "pallas" else True
-    step = partial(_fleet_round, process, bat, policy, round_cost, E, phase,
-                   valid, base_key, seed, threshold, groups, num_groups,
-                   backend, mesh, emit)
+    return _fleet_scan_impl(process, bat, round_cost, E, phase, valid,
+                            base_key, charge0, pstate0, seed, threshold,
+                            offset, groups, policy, num_rounds, record_masks,
+                            num_groups, backend, mesh)
 
-    def body(carry, r):
-        carry, mask, stats = step(carry, r)
-        if record_masks:
-            stats = dict(stats, mask=mask)
-        return carry, stats
 
-    return jax.lax.scan(body, (charge0, pstate0),
-                        offset + jnp.arange(num_rounds, dtype=jnp.int32))
+@partial(jax.jit, static_argnames=("policy", "num_rounds", "record_masks",
+                                   "num_groups", "backend", "mesh", "tap"))
+def _run_fleet_scan_tapped(process, bat, round_cost, E, phase, valid,
+                           base_key, charge0, pstate0, seed, threshold,
+                           offset, groups=None, *, policy, num_rounds,
+                           record_masks, num_groups=None, backend="lax",
+                           mesh=None, tap=None):
+    """`_run_fleet_scan` with the `repro.obs` in-scan round tap compiled in
+    (an `io_callback` per round streaming the energy seven to the
+    host DURING the scan).  A separate jitted function on purpose: the
+    un-tapped scan's program and ``_cache_size()`` stay untouched by
+    instrumentation (tested), and `Obs.round_tap` memoizes the callback so
+    re-runs under the same Obs hit this cache too."""
+    return _fleet_scan_impl(process, bat, round_cost, E, phase, valid,
+                            base_key, charge0, pstate0, seed, threshold,
+                            offset, groups, policy, num_rounds, record_masks,
+                            num_groups, backend, mesh, tap)
 
 
 def _fleet_round(process, bat: battery_lib.BatteryConfig, policy: Policy,
@@ -259,7 +300,7 @@ def simulate_fleet(process, bat: battery_lib.BatteryConfig, cost,
                    use_jit: bool = True, mesh=None, pad_to: int | None = None,
                    state=None, round_offset: int = 0, groups=None,
                    num_groups: int | None = None,
-                   backend: str = "lax") -> FleetResult:
+                   backend: str = "lax", obs=None) -> FleetResult:
     """Simulate ``num_rounds`` global rounds of battery-gated scheduling for
     the whole fleet.
 
@@ -304,6 +345,13 @@ def simulate_fleet(process, bat: battery_lib.BatteryConfig, cost,
         write of the fleet per round, bit-exact with lax on
         exact-arithmetic configs (DESIGN.md §11).  Composes with ``mesh``
         (per-shard tile grids + psum-ed stat partials).
+      obs: optional `repro.obs.Obs` — writes the run manifest at start and
+        streams the per-round energy seven to its JSONL log: after the scan
+        by default (one scan == one result), or live from inside it via an
+        `io_callback` when the Obs was built with ``tap=True`` (a
+        separate jitted twin of the scan — results stay bit-exact and the
+        un-tapped scan's jit cache is untouched; DESIGN.md §12).  ``None``
+        (default) is a strict no-op.
 
     Returns:
       `FleetResult` with per-round aggregate telemetry (host numpy arrays).
@@ -359,11 +407,26 @@ def simulate_fleet(process, bat: battery_lib.BatteryConfig, cost,
             base_key, dist_sharding.shardings_of(
                 jax.sharding.PartitionSpec(), mesh))
 
+    if obs is not None:
+        obs.write_manifest("fleet", config=(process, bat, round_cost),
+                           seed=cfg.seed, backend=backend, mesh=mesh,
+                           num_clients=n, horizon=num_rounds,
+                           policy=Policy(cfg.policy).value,
+                           round_offset=round_offset)
+
     # uint32: the traced seed is folded into PRNG key data downstream
     seed = jnp.uint32(cfg.seed)
     threshold = jnp.float32(cfg.threshold)
     offset = jnp.int32(round_offset)
-    if use_jit:
+    if use_jit and obs is not None and obs.tap:
+        (charge, pstate), stats = _run_fleet_scan_tapped(
+            process, bat, round_cost, E, phase, valid, base_key, charge0,
+            pstate0, seed, threshold, offset, groups, policy=cfg.policy,
+            num_rounds=num_rounds, record_masks=record_masks,
+            num_groups=num_groups, backend=backend,
+            mesh=mesh if backend == "pallas" else None,
+            tap=obs.round_tap("fleet"))
+    elif use_jit:
         (charge, pstate), stats = _run_fleet_scan(
             process, bat, round_cost, E, phase, valid, base_key, charge0,
             pstate0, seed, threshold, offset, groups, policy=cfg.policy,
@@ -384,6 +447,10 @@ def simulate_fleet(process, bat: battery_lib.BatteryConfig, cost,
     if masks is not None:
         masks = masks[:, :n]
     stats = {k: np.asarray(v) for k, v in stats.items()}
+    if obs is not None and not (obs.tap and use_jit):
+        # tap-less runs stream after the (single) scan; tapped jitted runs
+        # already emitted each round live from inside it
+        obs.rounds("fleet", round_offset, stats)
     return FleetResult(stats=stats, final_charge=charge[:n], masks=masks,
                        final_pstate=_slice_clients(pstate, n, n_pad))
 

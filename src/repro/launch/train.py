@@ -67,6 +67,9 @@ def main():
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--ckpt", default="")
     ap.add_argument("--log", default="")
+    ap.add_argument("--obs-dir", default="",
+                    help="stream a repro.obs run (manifest + per-round "
+                         "events + span timings) to this directory")
     args = ap.parse_args()
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
@@ -99,15 +102,34 @@ def main():
         source = SyntheticTokens(cfg.vocab_size, args.seq, C, seed=args.seed)
         batch_fn = token_batch_fn(cfg, source, C, T, args.batch)
 
+    obs = None
+    if args.obs_dir:
+        from repro.obs import Obs
+        obs = Obs(args.obs_dir)
+        obs.write_manifest("train", config=fed, seed=args.seed,
+                           num_clients=C, horizon=args.rounds,
+                           arch=cfg.name, family=cfg.family,
+                           params=int(n_params), policy=args.policy,
+                           local_steps=T, optimizer=args.optimizer,
+                           lr=args.lr)
+
     round_fn = jax.jit(partial(parallel_round, loss_fn, opt, fed))
     history = []
     t0 = time.time()
     for r in range(args.rounds):
-        w, m = round_fn(w, batch_fn(r), p, E, jnp.int32(r),
-                        jax.random.fold_in(rng, r))
+        if obs is not None:
+            with obs.span("train_round"):
+                w, m = round_fn(w, batch_fn(r), p, E, jnp.int32(r),
+                                jax.random.fold_in(rng, r))
+                m = jax.tree.map(np.asarray, m)
+        else:
+            w, m = round_fn(w, batch_fn(r), p, E, jnp.int32(r),
+                            jax.random.fold_in(rng, r))
         rec = {"round": r, "loss": float(m["loss"]),
                "participants": float(m["participants"])}
         history.append(rec)
+        if obs is not None:
+            obs.event("round", scan="train", **rec)
         if r % max(1, args.rounds // 10) == 0 or r == args.rounds - 1:
             print(f"round {r:4d} loss={rec['loss']:.4f} "
                   f"participants={rec['participants']:.0f} "
@@ -119,6 +141,9 @@ def main():
     if args.log:
         with open(args.log, "w") as f:
             json.dump(history, f, indent=1)
+    if obs is not None:
+        obs.close()
+        print("obs events ->", obs.log.path)
     print(f"final loss {history[-1]['loss']:.4f}")
 
 

@@ -1,0 +1,48 @@
+"""Run observability: streaming JSONL telemetry, run manifests, profiler
+spans, the retrace sentinel, and the bench-regression tripwire.
+
+See DESIGN.md §12.  The ``obs=`` hook accepted by `simulate_fleet` /
+`simulate_serve` / `run_controlled` / `run_serve_controlled` (and the
+``--obs-dir`` flag on the examples, `repro.launch.train` and the
+benchmarks) is an `Obs`: one run directory, one ``events.jsonl``, one
+`RunManifest`.  ``obs=None`` — the default everywhere — is bit-exact with
+the un-instrumented code path and adds zero jit-cache entries (tested).
+
+    from repro.obs import Obs
+    obs = Obs("runs/exp1")
+    res, ctrl = run_controlled(..., obs=obs)     # streams per-chunk JSONL
+    # python -m repro.obs.report summary runs/exp1
+    # python -m repro.obs.report bench-diff BENCH_fleet.json fresh.json
+"""
+from repro.obs.events import (
+    EventLog,
+    RunManifest,
+    git_revision,
+    load_events,
+    pytree_hash,
+)
+from repro.obs.metrics import (
+    ENERGY_SEVEN,
+    SERVE_LEDGER,
+    Counter,
+    Gauge,
+    MetricStream,
+    Obs,
+)
+from repro.obs.profile import (
+    RetraceSentinel,
+    annotate,
+    profiler_trace,
+    reset_spans,
+    span,
+    span_totals,
+)
+from repro.obs.report import bench_diff, render_summary, summarize
+
+__all__ = [
+    "EventLog", "RunManifest", "git_revision", "load_events", "pytree_hash",
+    "ENERGY_SEVEN", "SERVE_LEDGER", "Counter", "Gauge", "MetricStream", "Obs",
+    "RetraceSentinel", "annotate", "profiler_trace", "reset_spans", "span",
+    "span_totals",
+    "bench_diff", "render_summary", "summarize",
+]

@@ -1,0 +1,204 @@
+"""Streaming run-event log and run manifests (DESIGN.md §12).
+
+Every observable run appends newline-delimited JSON events to
+``<out_dir>/events.jsonl`` through an `EventLog`.  The FIRST event of any
+run is its `RunManifest` — config/pytree hash, seed, mesh shape, backend,
+package versions, git revision — so every downstream artifact (a
+``BENCH_*.json`` section, a summary table, a tripwire verdict) is
+attributable to the exact program that produced it.  Events are flushed
+line-by-line: a killed 2-minute 1e7-client sweep still leaves every round
+it completed on disk.
+
+Event schema (one JSON object per line; field table in DESIGN.md §12):
+
+    {"seq": 0, "ts": <unix s>, "kind": "manifest", ...manifest fields}
+    {"seq": 1, "ts": ..., "kind": "round", "scan": "fleet", "round": 17,
+     "participants": ..., ...energy seven / serve ledger...}
+    {"seq": 2, "ts": ..., "kind": "span", "name": "round_step", "ms": ...}
+    {"seq": 3, "ts": ..., "kind": "control", "round": 20, "T": 5, ...}
+    {"seq": 4, "ts": ..., "kind": "retrace_warning", "fn": ..., "delta": 1}
+
+The log is a *tap*, never a dependency: producers only ever read simulator
+outputs that already exist on the host, so the ``obs=None`` path of every
+simulator is bit-exact with today's (tested, `tests/test_obs.py`).
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import os
+import platform as platform_lib
+import subprocess
+import sys
+import time
+from typing import Any, IO
+
+import numpy as np
+
+PyTree = Any
+
+
+def _json_default(x):
+    """Serialize the numpy/jax scalars and small arrays riding in telemetry
+    dicts; anything exotic degrades to ``repr`` rather than failing a run."""
+    if isinstance(x, (np.integer,)):
+        return int(x)
+    if isinstance(x, (np.floating,)):
+        return float(x)
+    if isinstance(x, np.ndarray):
+        return x.tolist()
+    if hasattr(x, "tolist"):          # jax.Array and friends
+        return x.tolist()
+    if dataclasses.is_dataclass(x) and not isinstance(x, type):
+        return dataclasses.asdict(x)
+    return repr(x)
+
+
+class EventLog:
+    """Append-only JSONL event stream.
+
+    One line per event, flushed immediately (the whole point is seeing a
+    long run *while* it executes — ``tail -f events.jsonl``).  ``seq`` is a
+    per-log monotone counter so interleaved readers can re-order without
+    trusting wall-clock resolution.
+    """
+
+    def __init__(self, path: str | os.PathLike):
+        self.path = os.fspath(path)
+        parent = os.path.dirname(self.path)
+        if parent:
+            os.makedirs(parent, exist_ok=True)
+        self._f: IO[str] | None = open(self.path, "a")
+        self._seq = 0
+
+    def emit(self, kind: str, **fields) -> dict:
+        """Append one event; returns the record as written."""
+        if self._f is None:
+            raise ValueError(f"EventLog {self.path} is closed")
+        rec = {"seq": self._seq, "ts": round(time.time(), 6), "kind": kind}
+        rec.update(fields)
+        self._f.write(json.dumps(rec, default=_json_default) + "\n")
+        self._f.flush()
+        self._seq += 1
+        return rec
+
+    def close(self) -> None:
+        if self._f is not None:
+            self._f.close()
+            self._f = None
+
+    def __enter__(self) -> "EventLog":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+
+def load_events(path: str | os.PathLike) -> list[dict]:
+    """Read a JSONL event log back into a list of dicts (skipping any
+    truncated final line a killed writer may have left)."""
+    out = []
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if not line:
+                continue
+            try:
+                out.append(json.loads(line))
+            except json.JSONDecodeError:
+                continue   # torn tail write of an interrupted run
+    return out
+
+
+def pytree_hash(tree: PyTree) -> str:
+    """Stable content hash of a config pytree: treedef structure + every
+    leaf's dtype/shape/bytes (non-array leaves hash their ``repr``).  Two
+    runs share a hash iff they ran the same config values — the manifest
+    field that makes BENCH artifacts comparable across PRs."""
+    import jax
+
+    h = hashlib.sha256()
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    h.update(repr(treedef).encode())
+    for leaf in leaves:
+        try:
+            a = np.asarray(leaf)
+            h.update(str(a.dtype).encode())
+            h.update(str(a.shape).encode())
+            h.update(np.ascontiguousarray(a).tobytes())
+        except (TypeError, ValueError):
+            h.update(repr(leaf).encode())
+    return h.hexdigest()[:16]
+
+
+def git_revision(cwd: str | None = None) -> str | None:
+    """Current git revision, or None outside a repo / without git."""
+    try:
+        out = subprocess.run(["git", "rev-parse", "--short", "HEAD"],
+                             capture_output=True, text=True, timeout=5,
+                             cwd=cwd)
+        rev = out.stdout.strip()
+        return rev if out.returncode == 0 and rev else None
+    except (OSError, subprocess.SubprocessError):
+        return None
+
+
+@dataclasses.dataclass(frozen=True)
+class RunManifest:
+    """Provenance record written at run start (DESIGN.md §12 field table).
+
+    ``config_hash`` is `pytree_hash` over whatever config pytree the
+    producer passes (process + battery + cost for the simulators); two
+    artifacts with equal hashes ran the same physics.
+    """
+
+    kind: str                       # "fleet" / "serve" / "fleet_scale" / ...
+    run_id: str
+    created: float                  # unix seconds
+    seed: int | None = None
+    backend: str | None = None      # "lax" / "pallas" (step-op executor)
+    mesh_shape: dict | None = None  # {"data": 8} etc., None host-local
+    num_clients: int | None = None
+    horizon: int | None = None      # rounds / epochs
+    config_hash: str | None = None
+    packages: dict = dataclasses.field(default_factory=dict)
+    git_rev: str | None = None
+    platform: str | None = None
+    jax_backend: str | None = None
+    device_count: int | None = None
+    argv: list = dataclasses.field(default_factory=list)
+    extra: dict = dataclasses.field(default_factory=dict)
+
+    @classmethod
+    def create(cls, kind: str, *, config: PyTree = None, seed=None,
+               backend=None, mesh=None, num_clients=None, horizon=None,
+               run_id: str | None = None, **extra) -> "RunManifest":
+        import jax
+
+        created = time.time()
+        if run_id is None:
+            run_id = f"{kind}-{int(created)}-{os.getpid()}"
+        mesh_shape = None
+        if mesh is not None:
+            mesh_shape = {str(k): int(v) for k, v in
+                          dict(getattr(mesh, "shape", {})).items()}
+        return cls(
+            kind=kind, run_id=run_id, created=round(created, 3),
+            seed=None if seed is None else int(seed),
+            backend=backend, mesh_shape=mesh_shape,
+            num_clients=None if num_clients is None else int(num_clients),
+            horizon=None if horizon is None else int(horizon),
+            config_hash=None if config is None else pytree_hash(config),
+            packages={"python": platform_lib.python_version(),
+                      "jax": jax.__version__, "numpy": np.__version__},
+            git_rev=git_revision(),
+            platform=platform_lib.platform(),
+            jax_backend=jax.default_backend(),
+            device_count=jax.device_count(),
+            argv=list(sys.argv),
+            extra=extra,
+        )
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)

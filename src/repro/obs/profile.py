@@ -1,0 +1,150 @@
+"""Span timers, `jax.profiler` wiring, and the retrace sentinel
+(DESIGN.md §12).
+
+`span` is the workhorse: a context manager timing a named region on the
+host clock, mirrored into `jax.profiler.TraceAnnotation` so the same names
+line up in a TensorBoard/XPlane trace when one is being captured, and
+emitted as a ``span`` event when an `Obs` log is attached.  Module-level
+totals (`span_totals`) survive without any log so ad-hoc scripts can print
+a breakdown.
+
+`annotate` wraps `jax.profiler.annotate_function` for the jitted round-step
+paths (the Pallas-vs-lax comparison shows up as named regions in a device
+trace); `profiler_trace` scopes a full `jax.profiler.trace` capture.
+
+`RetraceSentinel` watches the fleet/serve scans' ``_cache_size()`` deltas
+at runtime: chunked controller sweeps are DESIGNED to hit the jit cache
+after their first chunk (T/E/admit/offset are traced scalars), so any
+mid-run growth is a perf bug — the sentinel logs a ``retrace_warning``
+event and a Python warning naming the grown function instead of letting a
+silent 100x slowdown ride to the end of the run.
+"""
+from __future__ import annotations
+
+import contextlib
+import logging
+import time
+from typing import Callable
+
+logger = logging.getLogger("repro.obs")
+
+# name -> [count, total_ms]; the no-log fallback store
+_SPAN_TOTALS: dict[str, list] = {}
+
+
+def span_totals() -> dict[str, dict]:
+    """Accumulated span timings since the last `reset_spans`."""
+    return {k: {"count": v[0], "total_ms": round(v[1], 3)}
+            for k, v in _SPAN_TOTALS.items()}
+
+
+def reset_spans() -> None:
+    _SPAN_TOTALS.clear()
+
+
+@contextlib.contextmanager
+def span(name: str, obs=None):
+    """``with span("round_step"):`` — host wall time + profiler annotation.
+
+    Emits ``{"kind": "span", "name": ..., "ms": ...}`` to ``obs`` (when
+    given) on exit and always folds into `span_totals`.  Never raises from
+    instrumentation: a missing profiler backend degrades to timing only.
+    """
+    try:
+        import jax.profiler
+        annotation = jax.profiler.TraceAnnotation(name)
+    except Exception:                                    # pragma: no cover
+        annotation = contextlib.nullcontext()
+    t0 = time.perf_counter()
+    with annotation:
+        yield
+    ms = (time.perf_counter() - t0) * 1e3
+    agg = _SPAN_TOTALS.setdefault(name, [0, 0.0])
+    agg[0] += 1
+    agg[1] += ms
+    if obs is not None:
+        obs.event("span", name=name, ms=round(ms, 3))
+
+
+def annotate(name: str) -> Callable:
+    """Decorator: name a traced function in device profiles
+    (`jax.profiler.annotate_function`); identity when unavailable."""
+    try:
+        import jax.profiler
+        return jax.profiler.annotate_function(name=name)
+    except Exception:                                    # pragma: no cover
+        return lambda fn: fn
+
+
+@contextlib.contextmanager
+def profiler_trace(log_dir: str | None):
+    """Scope a `jax.profiler.trace` capture over a region; ``None`` is a
+    no-op so callers can thread an optional ``--profile-dir`` straight in."""
+    if not log_dir:
+        yield
+        return
+    import jax.profiler
+    with jax.profiler.trace(log_dir):
+        yield
+
+
+def _default_watch() -> dict[str, Callable[[], int]]:
+    """The two scan caches every production run flows through.  Imported
+    lazily: `repro.obs` must stay importable without dragging the simulator
+    stack in (and vice versa — the simulators never import obs)."""
+    from repro.energy.fleet import _run_fleet_scan
+    from repro.serve.fleet_serve import _run_serve_scan
+    return {"_run_fleet_scan": _run_fleet_scan._cache_size,
+            "_run_serve_scan": _run_serve_scan._cache_size}
+
+
+class RetraceSentinel:
+    """Watches jit-cache sizes between `snapshot` and `check` calls.
+
+    >>> sentinel = RetraceSentinel(obs)
+    >>> sentinel.snapshot()          # after the warm-up chunk
+    >>> ...                          # more chunks
+    >>> sentinel.check()             # [] if cache-stable, else warns
+
+    ``check(expect=k)`` tolerates exactly ``k`` new entries (e.g. +1 for a
+    deliberate backend flip); anything beyond logs a ``retrace_warning``
+    event and `logging` warning per grown function and re-snapshots so one
+    regression is reported once, not once per subsequent chunk.
+    """
+
+    def __init__(self, obs=None,
+                 watch: dict[str, Callable[[], int]] | None = None):
+        self.obs = obs
+        self.watch = _default_watch() if watch is None else dict(watch)
+        self._base: dict[str, int] | None = None
+
+    def sizes(self) -> dict[str, int]:
+        return {name: int(size()) for name, size in self.watch.items()}
+
+    def snapshot(self) -> dict[str, int]:
+        self._base = self.sizes()
+        return dict(self._base)
+
+    def check(self, expect: int = 0, context: str = "") -> list[dict]:
+        """Compare against the last snapshot; returns the offending deltas
+        (empty list == cache-stable)."""
+        if self._base is None:
+            self.snapshot()
+            return []
+        grown = []
+        now = self.sizes()
+        for name, size in now.items():
+            delta = size - self._base.get(name, size)
+            if delta > expect:
+                grown.append({"fn": name, "delta": delta, "size": size,
+                              "context": context})
+                logger.warning(
+                    "unexpected retrace: %s grew by %d jit-cache entries%s "
+                    "(traced-scalar sweeps should hit the cache — a config "
+                    "pytree's structure, a shape, or a static arg changed "
+                    "mid-run)", name, delta,
+                    f" during {context}" if context else "")
+                if self.obs is not None:
+                    self.obs.event("retrace_warning", **grown[-1])
+        self._base = now
+        return grown

@@ -1,0 +1,273 @@
+"""Run-report aggregation and the bench-regression tripwire.
+
+    python -m repro.obs.report summary <run_dir | events.jsonl>
+    python -m repro.obs.report bench-diff BASELINE.json FRESH.json \\
+        [--sections round_step] [--rel 0.3]
+
+``summary`` folds a run's JSONL event stream into one table: the manifest
+header, per-scan round counts and means of the energy seven / serve ledger,
+span totals, control-knob trajectory, and any retrace warnings.
+
+``bench-diff`` is the perf tripwire: it compares a fresh ``BENCH_*.json``
+against a committed baseline section-by-section with per-section relative
+tolerances (`SECTION_SPECS`) — timings may only regress (grow) by ``rel``,
+ratio metrics like the fused-vs-unfused speedup may only *shrink* by
+``rel`` — and exits non-zero on any violation, so CI fails the job instead
+of silently accumulating a slower artifact.  Records are matched by their
+identity keys (num_clients/policy/...), so a smoke baseline diffs cleanly
+against a full sweep on the overlapping rows; sections or rows absent from
+the baseline are skipped (pre-PR-7 BENCH files stay diffable), while a
+section present in the baseline but MISSING from the fresh run is itself a
+violation (a deleted benchmark must be deliberate).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+import numpy as np
+
+from repro.obs.events import load_events
+from repro.obs.metrics import ENERGY_SEVEN, SERVE_LEDGER
+
+# ------------------------------------------------------------- summary -----
+
+
+def _fmt_table(headers: list[str], rows: list[list]) -> str:
+    cells = [[str(h) for h in headers]] + \
+        [[str(c) for c in row] for row in rows]
+    widths = [max(len(r[i]) for r in cells) for i in range(len(headers))]
+    lines = ["  ".join(c.ljust(w) for c, w in zip(row, widths)).rstrip()
+             for row in cells]
+    lines.insert(1, "-" * len(lines[0]))
+    return "\n".join(lines)
+
+
+def summarize(events: list[dict]) -> dict:
+    """Reduce an event stream to its report dict (also the programmatic
+    API — tests and notebooks read this instead of parsing the table)."""
+    manifest = next((e for e in events if e["kind"] == "manifest"), None)
+    rounds: dict[str, list[dict]] = {}
+    spans: dict[str, list[float]] = {}
+    controls: list[dict] = []
+    retraces: list[dict] = []
+    for e in events:
+        if e["kind"] == "round":
+            rounds.setdefault(e.get("scan", "?"), []).append(e)
+        elif e["kind"] == "span":
+            spans.setdefault(e["name"], []).append(float(e["ms"]))
+        elif e["kind"] == "control":
+            controls.append(e)
+        elif e["kind"] == "retrace_warning":
+            retraces.append(e)
+
+    scan_stats = {}
+    for scan, evs in rounds.items():
+        keys = [k for k in ENERGY_SEVEN + SERVE_LEDGER if k in evs[0]]
+        # min/max, not stream position: the unordered in-scan tap may land
+        # events slightly out of order
+        idx = [e["round"] for e in evs if "round" in e]
+        scan_stats[scan] = {
+            "rounds": len(evs),
+            "first_round": min(idx) if idx else None,
+            "last_round": max(idx) if idx else None,
+            "means": {k: float(np.mean([float(e[k]) for e in evs]))
+                      for k in keys},
+        }
+    return {
+        "manifest": manifest,
+        "scans": scan_stats,
+        "spans": {k: {"count": len(v), "total_ms": round(sum(v), 3),
+                      "mean_ms": round(sum(v) / len(v), 3)}
+                  for k, v in spans.items()},
+        "controls": controls,
+        "retrace_warnings": retraces,
+        "events": len(events),
+    }
+
+
+def render_summary(summary: dict) -> str:
+    out = []
+    man = summary["manifest"]
+    if man:
+        out.append(f"run {man.get('run_id')}  [{man.get('run_kind')}]")
+        out.append(f"  git={man.get('git_rev')}  "
+                   f"jax={man.get('packages', {}).get('jax')}  "
+                   f"backend={man.get('backend')}  "
+                   f"devices={man.get('device_count')}  "
+                   f"mesh={man.get('mesh_shape')}  "
+                   f"config_hash={man.get('config_hash')}")
+    else:
+        out.append("(no manifest event — pre-PR-7 or truncated log)")
+    out.append(f"  events={summary['events']}")
+    for scan, s in summary["scans"].items():
+        out.append(f"\n{scan}: rounds {s['first_round']}..{s['last_round']} "
+                   f"({s['rounds']} emitted)")
+        rows = [[k, f"{v:.6g}"] for k, v in s["means"].items()]
+        out.append(_fmt_table(["stat (mean/round)", "value"], rows))
+    if summary["spans"]:
+        out.append("\nspans:")
+        rows = [[name, s["count"], f"{s['total_ms']:.3f}",
+                 f"{s['mean_ms']:.3f}"]
+                for name, s in sorted(summary["spans"].items())]
+        out.append(_fmt_table(["span", "count", "total ms", "mean ms"], rows))
+    if summary["controls"]:
+        out.append("\ncontrol trajectory:")
+        rows = [[c.get("round"), c.get("T"), c.get("E_mean"),
+                 c.get("admit")] for c in summary["controls"]]
+        out.append(_fmt_table(["round", "T", "E_mean", "admit"], rows))
+    for w in summary["retrace_warnings"]:
+        out.append(f"\nWARNING retrace: {w.get('fn')} grew by "
+                   f"{w.get('delta')} entries ({w.get('context', '')})")
+    return "\n".join(out)
+
+
+# ----------------------------------------------------------- bench-diff ----
+
+# Per-section tripwire spec: records are matched on whichever of ``match``
+# keys both sides carry; ``slower`` keys fail when fresh > baseline*(1+rel)
+# (timings), ``smaller`` keys fail when fresh < baseline*(1-rel) (ratios /
+# quality metrics where shrinking is the regression).
+SECTION_SPECS: dict[str, dict] = {
+    "round_step": {
+        "match": ("num_clients", "policy"),
+        "slower": ("unfused_ms", "lax_fused_ms", "pallas_ms"),
+        "smaller": ("speedup_fused_vs_unfused",),
+        "rel": 0.30,
+    },
+    "results": {
+        "match": ("num_clients", "policy", "process", "traffic", "scan"),
+        "slower": ("run_s",),
+        "smaller": (),
+        "rel": 0.50,
+    },
+    "sharded": {
+        "match": ("num_clients", "policy", "process", "traffic", "scan"),
+        "slower": ("run_s",),
+        "smaller": (),
+        "rel": 0.50,
+    },
+}
+
+
+def _match_key(rec: dict, keys: tuple) -> tuple:
+    return tuple((k, rec[k]) for k in keys if k in rec)
+
+
+def bench_diff(baseline: dict, fresh: dict, *, sections=None,
+               rel: float | None = None) -> list[dict]:
+    """Compare two BENCH dicts; returns the violation list (empty == pass).
+
+    Only sections named in `SECTION_SPECS` (optionally narrowed by
+    ``sections``) are compared; ``rel`` overrides every section's tolerance
+    when given.  A section/row missing from the *baseline* is skipped (new
+    benchmarks, pre-PR-7 baselines); missing from the *fresh* side is a
+    violation.
+    """
+    violations = []
+    names = sections if sections else list(SECTION_SPECS)
+    for name in names:
+        spec = SECTION_SPECS.get(name)
+        if spec is None:
+            raise ValueError(f"no tripwire spec for section {name!r} "
+                             f"(known: {sorted(SECTION_SPECS)})")
+        base_rows = baseline.get(name)
+        if not base_rows:
+            continue                      # nothing committed to regress from
+        tol = spec["rel"] if rel is None else rel
+        fresh_rows = fresh.get(name)
+        if not fresh_rows:
+            violations.append({"section": name, "key": None, "metric": None,
+                               "reason": "section missing from fresh run"})
+            continue
+        fresh_by_key = {_match_key(r, spec["match"]): r for r in fresh_rows}
+        for brow in base_rows:
+            key = _match_key(brow, spec["match"])
+            frow = fresh_by_key.get(key)
+            if frow is None:
+                continue                  # row not in this (e.g. smoke) sweep
+            for metric in spec["slower"]:
+                if metric in brow and metric in frow \
+                        and frow[metric] > brow[metric] * (1.0 + tol):
+                    violations.append({
+                        "section": name, "key": dict(key), "metric": metric,
+                        "baseline": brow[metric], "fresh": frow[metric],
+                        "rel": round(frow[metric] / max(brow[metric], 1e-12)
+                                     - 1.0, 3),
+                        "reason": f"regressed beyond +{tol:.0%}"})
+            for metric in spec["smaller"]:
+                if metric in brow and metric in frow \
+                        and frow[metric] < brow[metric] * (1.0 - tol):
+                    violations.append({
+                        "section": name, "key": dict(key), "metric": metric,
+                        "baseline": brow[metric], "fresh": frow[metric],
+                        "rel": round(frow[metric] / max(brow[metric], 1e-12)
+                                     - 1.0, 3),
+                        "reason": f"shrank beyond -{tol:.0%}"})
+    return violations
+
+
+def render_diff(violations: list[dict], baseline_path: str,
+                fresh_path: str) -> str:
+    if not violations:
+        return f"bench-diff OK: {fresh_path} within tolerance of " \
+               f"{baseline_path}"
+    rows = [[v["section"],
+             " ".join(f"{k}={val}" for k, val in (v["key"] or {}).items()),
+             v["metric"] or "-",
+             v.get("baseline", "-"), v.get("fresh", "-"),
+             (f"{v['rel']:+.1%}" if "rel" in v else "-"), v["reason"]]
+            for v in violations]
+    return (f"bench-diff FAILED: {len(violations)} regression(s) in "
+            f"{fresh_path} vs {baseline_path}\n"
+            + _fmt_table(["section", "record", "metric", "baseline", "fresh",
+                          "delta", "reason"], rows))
+
+
+# ----------------------------------------------------------------- CLI -----
+def _events_path(arg: str) -> str:
+    if os.path.isdir(arg):
+        return os.path.join(arg, "events.jsonl")
+    return arg
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="python -m repro.obs.report",
+                                 description=__doc__)
+    sub = ap.add_subparsers(dest="cmd", required=True)
+    s = sub.add_parser("summary", help="aggregate a run's events.jsonl")
+    s.add_argument("run", help="run directory or events.jsonl path")
+    s.add_argument("--json", action="store_true",
+                   help="emit the summary dict as JSON instead of a table")
+    d = sub.add_parser("bench-diff",
+                       help="tripwire a fresh BENCH_*.json against a "
+                            "committed baseline")
+    d.add_argument("baseline")
+    d.add_argument("fresh")
+    d.add_argument("--sections", default=None,
+                   help="comma-separated subset of sections to compare "
+                        f"(default: all of {sorted(SECTION_SPECS)})")
+    d.add_argument("--rel", type=float, default=None,
+                   help="override every section's relative tolerance")
+    args = ap.parse_args(argv)
+
+    if args.cmd == "summary":
+        summary = summarize(load_events(_events_path(args.run)))
+        print(json.dumps(summary, indent=1) if args.json
+              else render_summary(summary))
+        return 0
+
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    with open(args.fresh) as f:
+        fresh = json.load(f)
+    sections = args.sections.split(",") if args.sections else None
+    violations = bench_diff(baseline, fresh, sections=sections, rel=args.rel)
+    print(render_diff(violations, args.baseline, args.fresh))
+    return 1 if violations else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

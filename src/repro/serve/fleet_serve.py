@@ -49,6 +49,7 @@ ones and the sharded-parity contract carries over unchanged.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 from functools import partial
 from typing import Any
@@ -56,6 +57,7 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.experimental import io_callback as _io_callback
 
 from repro.core import scheduling
 from repro.core.scheduling import Policy
@@ -194,6 +196,33 @@ def _serve_epoch(traffic, harvest, bat: battery_lib.BatteryConfig,
     return (env["charge_out"], tstate, hstate), env["mode"], stats
 
 
+def _serve_scan_impl(traffic, harvest, bat, cost, qos, policy, train, valid,
+                     base_key, charge0, tstate0, hstate0, seed, admit, offset,
+                     num_epochs, record_modes, backend, mesh, tap=None):
+    """Shared scan body of `_run_serve_scan` and its tapped twin.  ``tap``
+    (a host callback, jit-static by identity) is the opt-in `repro.obs`
+    epoch tap: an `io_callback` that only *reads* each epoch's
+    stats dict, so the tapped program computes bit-identical results."""
+    emit = record_modes if backend == "pallas" else True
+    step = partial(_serve_epoch, traffic, harvest, bat, cost, qos, policy,
+                   train, valid, base_key, seed, admit, backend, mesh, emit)
+
+    def body(carry, t):
+        carry, mode, stats = step(carry, t)
+        if tap is not None:
+            # unordered on purpose: the ordered variant's token threading
+            # trips XLA's sharding-propagation parameter-count check on
+            # mesh-sharded inputs (hard abort); events carry their epoch
+            # index, so consumers never rely on stream order.
+            _io_callback(tap, None, t, stats, ordered=False)
+        if record_modes:
+            stats = dict(stats, mode=mode)
+        return carry, stats
+
+    return jax.lax.scan(body, (charge0, tstate0, hstate0),
+                        offset + jnp.arange(num_epochs, dtype=jnp.int32))
+
+
 @partial(jax.jit, static_argnames=("num_epochs", "record_modes", "backend",
                                    "mesh"))
 def _run_serve_scan(traffic, harvest, bat, cost, qos, policy, train, valid,
@@ -207,18 +236,28 @@ def _run_serve_scan(traffic, harvest, bat, cost, qos, policy, train, valid,
     instead of retracing.  ``backend``/``mesh`` are static (the mesh only
     reaches the trace on the pallas path's explicit `shard_map`), so
     switching backends costs exactly one extra cache entry."""
-    emit = record_modes if backend == "pallas" else True
-    step = partial(_serve_epoch, traffic, harvest, bat, cost, qos, policy,
-                   train, valid, base_key, seed, admit, backend, mesh, emit)
+    return _serve_scan_impl(traffic, harvest, bat, cost, qos, policy, train,
+                            valid, base_key, charge0, tstate0, hstate0, seed,
+                            admit, offset, num_epochs, record_modes, backend,
+                            mesh)
 
-    def body(carry, t):
-        carry, mode, stats = step(carry, t)
-        if record_modes:
-            stats = dict(stats, mode=mode)
-        return carry, stats
 
-    return jax.lax.scan(body, (charge0, tstate0, hstate0),
-                        offset + jnp.arange(num_epochs, dtype=jnp.int32))
+@partial(jax.jit, static_argnames=("num_epochs", "record_modes", "backend",
+                                   "mesh", "tap"))
+def _run_serve_scan_tapped(traffic, harvest, bat, cost, qos, policy, train,
+                           valid, base_key, charge0, tstate0, hstate0, seed,
+                           admit, offset, *, num_epochs, record_modes,
+                           backend="lax", mesh=None, tap=None):
+    """`_run_serve_scan` with the `repro.obs` in-scan epoch tap compiled in
+    (an `io_callback` per epoch streaming the energy seven + serve
+    ledger to the host DURING the scan).  A separate jitted function on
+    purpose: the un-tapped scan's program and ``_cache_size()`` stay
+    untouched by instrumentation (tested), and `Obs.round_tap` memoizes the
+    callback so re-runs under the same Obs hit this cache too."""
+    return _serve_scan_impl(traffic, harvest, bat, cost, qos, policy, train,
+                            valid, base_key, charge0, tstate0, hstate0, seed,
+                            admit, offset, num_epochs, record_modes, backend,
+                            mesh, tap)
 
 
 def simulate_serve(traffic, harvest, bat: battery_lib.BatteryConfig,
@@ -227,7 +266,8 @@ def simulate_serve(traffic, harvest, bat: battery_lib.BatteryConfig,
                    train: TrainLoad | None = None, admit: float = 1.0,
                    record_modes: bool = False, use_jit: bool = True,
                    mesh=None, pad_to: int | None = None, state=None,
-                   epoch_offset: int = 0, backend: str = "lax") -> ServeResult:
+                   epoch_offset: int = 0, backend: str = "lax",
+                   obs=None) -> ServeResult:
     """Simulate ``num_epochs`` serving epochs of battery-gated admission for
     the whole fleet.
 
@@ -260,6 +300,13 @@ def simulate_serve(traffic, harvest, bat: battery_lib.BatteryConfig,
       backend: ``"lax"`` (default, the bit-exact reference) or ``"pallas"``
         — run the epoch step as one fused VMEM client-tile kernel
         (`kernels.fleet_step`), exactly as in `energy.fleet.simulate_fleet`.
+      obs: optional `repro.obs.Obs` — writes the run manifest and emits one
+        ``round`` event per epoch (energy seven + serve ledger).  By default
+        the epochs are emitted host-side after the scan returns; with
+        ``obs.tap`` set the jitted scan streams them DURING execution via an
+        `io_callback` compiled into a *separate* jitted scan, so
+        ``obs=None`` (and the un-tapped scan's jit cache) stays bit-exact
+        and untouched.
 
     Returns:
       `ServeResult` with per-epoch aggregate telemetry (host numpy arrays).
@@ -311,10 +358,23 @@ def simulate_serve(traffic, harvest, bat: battery_lib.BatteryConfig,
             base_key, dist_sharding.shardings_of(
                 jax.sharding.PartitionSpec(), mesh))
 
+    if obs is not None:
+        obs.write_manifest(
+            "serve", config=(traffic, harvest, bat, cost, qos, policy, train),
+            seed=cfg.seed, backend=backend, mesh=mesh, num_clients=n,
+            horizon=num_epochs, epoch_offset=epoch_offset, admit=float(admit))
+
     seed = jnp.uint32(cfg.seed)
     admit_t = jnp.float32(admit)
     offset = jnp.int32(epoch_offset)
-    if use_jit:
+    if use_jit and obs is not None and obs.tap:
+        (charge, tstate, hstate), stats = _run_serve_scan_tapped(
+            traffic, harvest, bat, cost, qos, policy, train, valid, base_key,
+            charge0, tstate0, hstate0, seed, admit_t, offset,
+            num_epochs=num_epochs, record_modes=record_modes,
+            backend=backend, mesh=mesh if backend == "pallas" else None,
+            tap=obs.round_tap("serve"))
+    elif use_jit:
         (charge, tstate, hstate), stats = _run_serve_scan(
             traffic, harvest, bat, cost, qos, policy, train, valid, base_key,
             charge0, tstate0, hstate0, seed, admit_t, offset,
@@ -334,6 +394,8 @@ def simulate_serve(traffic, harvest, bat: battery_lib.BatteryConfig,
     if modes is not None:
         modes = modes[:, :n]
     stats = {k: np.asarray(v) for k, v in stats.items()}
+    if obs is not None and not (obs.tap and use_jit):
+        obs.rounds("serve", epoch_offset, stats)
     return ServeResult(stats=stats, final_charge=charge[:n], modes=modes,
                        final_tstate=_slice_clients(tstate, n, n_pad),
                        final_hstate=_slice_clients(hstate, n, n_pad))
@@ -344,7 +406,7 @@ def run_serve_controlled(traffic, harvest, bat, cost: DecodeCostModel,
                          num_epochs: int, controller, *,
                          train_cost=None, control_every: int = 24,
                          mesh=None, record_modes: bool = False,
-                         backend: str = "lax"):
+                         backend: str = "lax", obs=None):
     """Closed-loop serving horizon: `simulate_serve` in chunks of
     ``control_every`` epochs, with an `energy.control.ServerController`
     adapting its knobs between chunks — the admission-threshold scale
@@ -358,9 +420,24 @@ def run_serve_controlled(traffic, harvest, bat, cost: DecodeCostModel,
     ``epoch_offset``; ``admit``/``E``/``round_cost`` are traced, so every
     chunk after the first hits the jit cache.
 
+    ``obs=`` (a `repro.obs.Obs`) streams the run as JSONL DURING execution
+    — chunks surface their stats host-side between jitted scans anyway, so
+    the manifest, per-epoch ``round`` events, per-chunk ``span`` timings and
+    post-update ``control`` events cost zero program changes, and a
+    `RetraceSentinel` warns if any chunk after the first retraces the scan.
+
     Returns ``(ServeResult over the full horizon, controller)``.
     """
     n = cfg.num_clients
+    sentinel = None
+    if obs is not None:
+        from repro.obs.profile import RetraceSentinel
+        obs.write_manifest(
+            "serve_controlled",
+            config=(traffic, harvest, bat, cost, qos, policy),
+            seed=cfg.seed, backend=backend, mesh=mesh, num_clients=n,
+            horizon=num_epochs, control_every=control_every)
+        sentinel = RetraceSentinel(obs)
     state = None
     chunks: list[ServeResult] = []
     offset = 0
@@ -368,14 +445,26 @@ def run_serve_controlled(traffic, harvest, bat, cost: DecodeCostModel,
         chunk = min(control_every, num_epochs - offset)
         train = None if train_cost is None else TrainLoad.create(
             controller.client_E(n), train_cost, local_steps=controller.T)
-        res = simulate_serve(
-            traffic, harvest, bat, cost, qos, policy, cfg, chunk,
-            train=train, admit=controller.state.admit, mesh=mesh,
-            record_modes=record_modes, state=state, epoch_offset=offset,
-            backend=backend)
+        with contextlib.ExitStack() as stack:
+            if obs is not None:
+                stack.enter_context(obs.span("serve_chunk"))
+            res = simulate_serve(
+                traffic, harvest, bat, cost, qos, policy, cfg, chunk,
+                train=train, admit=controller.state.admit, mesh=mesh,
+                record_modes=record_modes, state=state, epoch_offset=offset,
+                backend=backend)
         state = res.final_state
         chunks.append(res)
         controller.update(res.stats, n)
+        if obs is not None:
+            obs.rounds("serve", offset, res.stats)
+            obs.event("control", round=offset + chunk, T=controller.state.T,
+                      E_mean=float(np.mean(controller.state.E)),
+                      admit=controller.state.admit)
+            if offset == 0:
+                sentinel.snapshot()
+            else:
+                sentinel.check(context=f"serve chunk at epoch {offset}")
         offset += chunk
     stats = {k: np.concatenate([c.stats[k] for c in chunks])
              for k in chunks[0].stats}

@@ -137,6 +137,72 @@ def check_sharded_cache_reuse(mesh, n):
         "sharded simulate_fleet retraced on a backend/seed sweep"
 
 
+def check_obs_noop(mesh, n, big_n=1_000_000):
+    """The PR-7 obs contract on the sharded path: `run_controlled` with an
+    `Obs` (manifest + per-chunk round/control/span events) is bit-exact with
+    ``obs=None`` and adds ZERO `_run_fleet_scan` cache entries, at fleet
+    scale (``big_n`` clients); the in-scan `io_callback` tap (small n) also
+    leaves results and the un-tapped scan's cache untouched."""
+    import tempfile
+
+    from repro.energy import ControlBounds, ServerController, run_controlled
+    from repro.obs import Obs, load_events
+
+    proc = MarkovSolar.create(big_n, day_mean=0.9)
+    bat = BatteryConfig(capacity=4.0, leak=0.01, init_charge=1.0)
+    cfg = FleetConfig(num_clients=big_n, policy=Policy.SUSTAINABLE, seed=2,
+                      local_steps=5)
+
+    def controller():
+        return ServerController(
+            T0=cfg.local_steps, E0=4,
+            bounds=ControlBounds(t_min=1, t_max=10, e_min=1, e_max=64))
+
+    base, _ = run_controlled(proc, bat, 0.4, cfg, 30, controller(),
+                             control_every=10, mesh=mesh)
+    size = _run_fleet_scan._cache_size()
+    with tempfile.TemporaryDirectory() as d:
+        with Obs(d) as obs:
+            res, _ = run_controlled(proc, bat, 0.4, cfg, 30, controller(),
+                                    control_every=10, mesh=mesh, obs=obs)
+        events = load_events(obs.log.path)
+    assert _run_fleet_scan._cache_size() == size, \
+        "obs= grew the fleet scan's jit cache on the sharded path"
+    assert np.array_equal(np.asarray(base.final_charge),
+                          np.asarray(res.final_charge))
+    for k in base.stats:
+        assert np.array_equal(base.stats[k], res.stats[k]), k
+    kinds = [e["kind"] for e in events]
+    assert kinds[0] == "manifest" and events[0]["run_kind"] \
+        == "fleet_controlled"
+    assert sum(k == "round" for k in kinds) == 30
+    assert sum(k == "control" for k in kinds) == 3
+    assert sum(k == "retrace_warning" for k in kinds) == 0
+
+    # in-scan io_callback tap (small n): bit-exact, un-tapped cache unmoved
+    E = np.asarray(EnergyProfile(n).cycles())
+    proc = Bernoulli.create(n, prob=0.375, amount=1.25)
+    bat = BatteryConfig(capacity=2.5, leak=0.0, init_charge=0.5)
+    cfg = FleetConfig(num_clients=n, policy=Policy.THRESHOLD, threshold=1.5,
+                      seed=3)
+    host = simulate_fleet(proc, bat, 0.75, cfg, 20, E=E, mesh=mesh)
+    size = _run_fleet_scan._cache_size()
+    with tempfile.TemporaryDirectory() as d:
+        with Obs(d, tap=True) as obs:
+            tapped = simulate_fleet(proc, bat, 0.75, cfg, 20, E=E, mesh=mesh,
+                                    obs=obs)
+        events = load_events(obs.log.path)
+    assert _run_fleet_scan._cache_size() == size, \
+        "the io_callback tap touched the un-tapped scan's jit cache"
+    for k in host.stats:
+        assert np.array_equal(host.stats[k], tapped.stats[k]), k
+    rounds = sorted((e for e in events if e["kind"] == "round"),
+                    key=lambda e: e["round"])
+    assert [e["round"] for e in rounds] == list(range(20))
+    assert all(abs(r["participants"] - float(host.stats["participants"][i]))
+               < 1e-6 for i, r in enumerate(rounds))
+
+
 def main():
     n_dev = len(jax.devices())
     assert n_dev == 8, f"expected 8 emulated CPU devices, got {n_dev}"
@@ -150,6 +216,7 @@ def main():
     check_kernel_parity(mesh, n=24)
     check_kernel_parity(mesh, n=21)
     check_sharded_cache_reuse(mesh, n=32)
+    check_obs_noop(mesh, n=24)
     # a mesh with a model axis: fleet state shards over data axes only
     mesh2 = jax.make_mesh((4, 2), ("data", "model"))
     check_parity(mesh2, n=21)   # padded 21 -> 24 (4-way data axis)

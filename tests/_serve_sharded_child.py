@@ -162,6 +162,79 @@ def check_sharded_cache_reuse(mesh, n):
         "sharded simulate_serve retraced on a backend/seed sweep"
 
 
+def check_obs_noop(mesh, n, big_n=1_000_000):
+    """The PR-7 obs contract on the sharded serve path: `run_serve_controlled`
+    with an `Obs` (manifest + per-chunk round/control/span events) is
+    bit-exact with ``obs=None`` and adds ZERO `_run_serve_scan` cache
+    entries, at fleet scale (``big_n`` clients); the in-scan `io_callback`
+    tap (small n) also leaves results and the un-tapped scan's cache
+    untouched."""
+    import tempfile
+
+    from repro.energy import AdmissionRule, ServerController
+    from repro.obs import Obs, load_events
+    from repro.serve import run_serve_controlled
+
+    traffic = DiurnalPoisson.create(big_n, base=1.5, swing=0.8)
+    harvest = MarkovSolar.create(big_n, day_mean=0.7)
+    bat = BatteryConfig(capacity=2.5, leak=0.02, init_charge=0.4)
+    cost = DecodeCostModel(1e-3, 2e-3, 5e-2)
+    cfg = ServeConfig(num_clients=big_n, seed=11)
+    pol = BatteryGated.create(big_n, hi=1.2, lo=1.0)
+
+    def controller():
+        return ServerController(T0=5, E0=1, rules=(AdmissionRule(),))
+
+    base, _ = run_serve_controlled(traffic, harvest, bat, cost, QOS, pol,
+                                   cfg, 30, controller(), control_every=10,
+                                   mesh=mesh)
+    size = _run_serve_scan._cache_size()
+    with tempfile.TemporaryDirectory() as d:
+        with Obs(d) as obs:
+            res, _ = run_serve_controlled(traffic, harvest, bat, cost, QOS,
+                                          pol, cfg, 30, controller(),
+                                          control_every=10, mesh=mesh,
+                                          obs=obs)
+        events = load_events(obs.log.path)
+    assert _run_serve_scan._cache_size() == size, \
+        "obs= grew the serve scan's jit cache on the sharded path"
+    assert np.array_equal(np.asarray(base.final_charge),
+                          np.asarray(res.final_charge))
+    for k in base.stats:
+        assert np.array_equal(base.stats[k], res.stats[k]), k
+    kinds = [e["kind"] for e in events]
+    assert kinds[0] == "manifest" and events[0]["run_kind"] \
+        == "serve_controlled"
+    assert sum(k == "round" for k in kinds) == 30
+    assert sum(k == "control" for k in kinds) == 3
+    assert sum(k == "retrace_warning" for k in kinds) == 0
+
+    # in-scan io_callback tap (small n): bit-exact, un-tapped cache unmoved
+    traffic = Constant.create(n, rate=2.0)
+    harvest = Bernoulli.create(n, prob=0.375, amount=1.25)
+    bat = BatteryConfig(capacity=2.5, leak=0.0, init_charge=0.5)
+    cost = DecodeCostModel(2.0 ** -8, 2.0 ** -9, 2.0 ** -6)
+    cfg = ServeConfig(num_clients=n, seed=3)
+    pol = BatteryGated.create(n, hi=1.0, lo=1.0)
+    host = simulate_serve(traffic, harvest, bat, cost, QOS, pol, cfg, 20,
+                          mesh=mesh)
+    size = _run_serve_scan._cache_size()
+    with tempfile.TemporaryDirectory() as d:
+        with Obs(d, tap=True) as obs:
+            tapped = simulate_serve(traffic, harvest, bat, cost, QOS, pol,
+                                    cfg, 20, mesh=mesh, obs=obs)
+        events = load_events(obs.log.path)
+    assert _run_serve_scan._cache_size() == size, \
+        "the io_callback tap touched the un-tapped serve scan's jit cache"
+    for k in host.stats:
+        assert np.array_equal(host.stats[k], tapped.stats[k]), k
+    epochs = sorted((e for e in events if e["kind"] == "round"),
+                    key=lambda e: e["round"])
+    assert [e["round"] for e in epochs] == list(range(20))
+    assert all(abs(r["offered"] - float(host.stats["offered"][i])) < 1e-6
+               for i, r in enumerate(epochs))
+
+
 def main():
     n_dev = len(jax.devices())
     assert n_dev == 8, f"expected 8 emulated CPU devices, got {n_dev}"
@@ -175,6 +248,7 @@ def main():
     check_kernel_parity(mesh, n=24)
     check_kernel_parity(mesh, n=21)
     check_sharded_cache_reuse(mesh, n=32)
+    check_obs_noop(mesh, n=24)
     # a mesh with a model axis: serve state shards over data axes only
     mesh2 = jax.make_mesh((4, 2), ("data", "model"))
     check_parity(mesh2, n=21)   # padded 21 -> 24 (4-way data axis)
