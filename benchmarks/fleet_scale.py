@@ -26,6 +26,7 @@ from __future__ import annotations
 import argparse
 import contextlib
 import json
+import os
 import time
 
 import jax
@@ -152,7 +153,8 @@ def bench_round_step(n: int, reps: int = 3) -> dict:
     }
 
 
-def bench_controller(n: int, rounds: int, control_every: int = 10) -> dict:
+def bench_controller(n: int, rounds: int, control_every: int = 10,
+                     checkpoint=None, resume: bool = False) -> dict:
     """Static §V schedule vs `ServerController` under a MarkovSolar drought
     (short days, 20-round nights): the controller should cut depletion AND
     lift participation by cheapening rounds / matching the ask rate."""
@@ -171,7 +173,8 @@ def bench_controller(n: int, rounds: int, control_every: int = 10) -> dict:
         bounds=ControlBounds(t_min=1, t_max=10, e_min=1, e_max=64))
     t0 = time.perf_counter()
     res, ctrl = run_controlled(proc, bat, cost, cfg, rounds, ctrl,
-                               control_every=control_every)
+                               control_every=control_every,
+                               checkpoint=checkpoint, resume=resume)
     wall = time.perf_counter() - t0
     return {
         "num_clients": n,
@@ -197,16 +200,48 @@ def main():
                     help="also stream bench progress as a repro.obs JSONL "
                          "event log (manifest + per-section spans + "
                          "per-record events)")
+    ap.add_argument("--checkpoint-dir", default=None,
+                    help="persist each completed bench record so a killed "
+                         "run resumes past the sections it already measured "
+                         "(repro.checkpoint.SectionCheckpoint)")
+    ap.add_argument("--resume", action="store_true",
+                    help="replay completed records from --checkpoint-dir and "
+                         "only compute the rest")
     args = ap.parse_args()
+
+    if args.resume and not args.checkpoint_dir:
+        ap.error("--resume requires --checkpoint-dir")
+    sc = None
+    if args.checkpoint_dir:
+        from repro.checkpoint import SectionCheckpoint
+        from repro.obs.events import pytree_hash
+        sc = SectionCheckpoint(
+            args.checkpoint_dir, kind="fleet_scale",
+            config_hash=pytree_hash(("fleet_scale", bool(args.smoke),
+                                     int(args.rounds))),
+            resume=args.resume)
+        if sc.resumed:
+            done = {k: len(v) for k, v in sc.sections.items()}
+            print(f"resuming: replaying completed records {done}")
+
+    def cached(section, index, fn):
+        return sc.cached(section, index, fn) if sc is not None else fn()
 
     from repro.obs import Obs, RunManifest
     obs = Obs(args.obs_dir) if args.obs_dir else None
+    # the BENCH json always carries a fresh manifest (it describes THIS
+    # process), but a resumed run re-attaches to the obs stream with a
+    # `resume` event instead of a second manifest (DESIGN.md §13.4)
+    manifest = RunManifest.create("fleet_scale", horizon=args.rounds,
+                                  smoke=args.smoke)
     if obs is not None:
-        manifest = obs.write_manifest("fleet_scale", horizon=args.rounds,
-                                      smoke=args.smoke)
-    else:
-        manifest = RunManifest.create("fleet_scale", horizon=args.rounds,
-                                      smoke=args.smoke)
+        if sc is not None and sc.resumed:
+            obs.event("resume", run_kind="fleet_scale", step=sc.step,
+                      config_hash=sc.config_hash,
+                      checkpoint_dir=args.checkpoint_dir)
+        else:
+            manifest = obs.write_manifest("fleet_scale", horizon=args.rounds,
+                                          smoke=args.smoke)
 
     def _span(name):
         return obs.span(name) if obs is not None else contextlib.nullcontext()
@@ -234,7 +269,9 @@ def main():
     for n in sizes:
         for policy, process in combos:
             with _span("results"):
-                rec = bench_one(n, args.rounds, policy, process)
+                rec = cached("results", len(results),
+                             lambda n=n, policy=policy, process=process:
+                             bench_one(n, args.rounds, policy, process))
             results.append(rec)
             _note("results", rec)
             print(f"N={n:>9,} {policy.value:>11}/{process:<9} "
@@ -251,8 +288,10 @@ def main():
         for n in sharded_sizes:
             for policy, process in combos[:2]:
                 with _span("sharded"):
-                    rec = bench_one(n, args.rounds, policy, process,
-                                    mesh=mesh)
+                    rec = cached("sharded", len(sharded),
+                                 lambda n=n, policy=policy, process=process:
+                                 bench_one(n, args.rounds, policy, process,
+                                           mesh=mesh))
                 sharded.append(rec)
                 _note("sharded", rec)
                 print(f"N={n:>9,} {policy.value:>11}/{process:<9} sharded/"
@@ -269,7 +308,9 @@ def main():
     round_step = []
     for n in [1_000_000, 10_000_000]:
         with _span("round_step"):
-            rec = bench_round_step(n, reps=3 if n <= 1_000_000 else 2)
+            rec = cached("round_step", len(round_step),
+                         lambda n=n: bench_round_step(
+                             n, reps=3 if n <= 1_000_000 else 2))
         round_step.append(rec)
         _note("round_step", rec)
         print(f"round_step N={n:>10,}: unfused={rec['unfused_ms']:.2f}ms  "
@@ -280,7 +321,14 @@ def main():
               f"bytes-model={rec['modeled_bytes_ratio']:.2f}x", flush=True)
 
     with _span("controller"):
-        ctrl_rec = bench_controller(ctrl_n, args.rounds)
+        # the controlled run inside the record is ALSO chunk-checkpointed
+        # (its own subdirectory): a kill mid-controller-run resumes from the
+        # last chunk boundary, not from the top of the section
+        ctrl_rec = cached("controller", 0, lambda: bench_controller(
+            ctrl_n, args.rounds,
+            checkpoint=(os.path.join(args.checkpoint_dir, "controller_run")
+                        if args.checkpoint_dir else None),
+            resume=args.resume))
     print(f"controller N={ctrl_n:,}: participation "
           f"{ctrl_rec['static_participation']:.4f} -> "
           f"{ctrl_rec['controlled_participation']:.4f}, depleted "

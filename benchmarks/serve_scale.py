@@ -29,6 +29,7 @@ from __future__ import annotations
 import argparse
 import contextlib
 import json
+import os
 import time
 
 import jax
@@ -177,7 +178,8 @@ def bench_round_step(n: int, reps: int = 3) -> dict:
     }
 
 
-def bench_admission(n: int, epochs: int, control_every: int = 24) -> dict:
+def bench_admission(n: int, epochs: int, control_every: int = 24,
+                    checkpoint=None, resume: bool = False) -> dict:
     """The acceptance comparison: solar day/night + diurnal traffic, with a
     training load competing for the same batteries.  Battery-gated admission
     (static margins, and closed-loop with `AdmissionRule`) vs the
@@ -217,7 +219,8 @@ def bench_admission(n: int, epochs: int, control_every: int = 24) -> dict:
                             bounds=ControlBounds())
     res, ctrl = run_serve_controlled(
         traffic, harvest, bat, COST, QOS, BatteryGated.create(n), cfg,
-        epochs, ctrl, train_cost=train_cost, control_every=control_every)
+        epochs, ctrl, train_cost=train_cost, control_every=control_every,
+        checkpoint=checkpoint, resume=resume)
     out["controlled"] = summarize(res)
     out["controlled"]["admit_trace"] = [t["admit"] for t in ctrl.trace]
     out["run_s"] = round(time.perf_counter() - t0, 4)
@@ -234,16 +237,45 @@ def main():
                     help="also stream bench progress as a repro.obs JSONL "
                          "event log (manifest + per-section spans + "
                          "per-record events)")
+    ap.add_argument("--checkpoint-dir", default=None,
+                    help="persist each completed bench record so a killed "
+                         "run resumes past the sections it already measured "
+                         "(repro.checkpoint.SectionCheckpoint)")
+    ap.add_argument("--resume", action="store_true",
+                    help="replay completed records from --checkpoint-dir and "
+                         "only compute the rest")
     args = ap.parse_args()
+
+    if args.resume and not args.checkpoint_dir:
+        ap.error("--resume requires --checkpoint-dir")
+    sc = None
+    if args.checkpoint_dir:
+        from repro.checkpoint import SectionCheckpoint
+        from repro.obs.events import pytree_hash
+        sc = SectionCheckpoint(
+            args.checkpoint_dir, kind="serve_scale",
+            config_hash=pytree_hash(("serve_scale", bool(args.smoke),
+                                     int(args.epochs))),
+            resume=args.resume)
+        if sc.resumed:
+            done = {k: len(v) for k, v in sc.sections.items()}
+            print(f"resuming: replaying completed records {done}")
+
+    def cached(section, index, fn):
+        return sc.cached(section, index, fn) if sc is not None else fn()
 
     from repro.obs import Obs, RunManifest
     obs = Obs(args.obs_dir) if args.obs_dir else None
+    manifest = RunManifest.create("serve_scale", horizon=args.epochs,
+                                  smoke=args.smoke)
     if obs is not None:
-        manifest = obs.write_manifest("serve_scale", horizon=args.epochs,
-                                      smoke=args.smoke)
-    else:
-        manifest = RunManifest.create("serve_scale", horizon=args.epochs,
-                                      smoke=args.smoke)
+        if sc is not None and sc.resumed:
+            obs.event("resume", run_kind="serve_scale", step=sc.step,
+                      config_hash=sc.config_hash,
+                      checkpoint_dir=args.checkpoint_dir)
+        else:
+            manifest = obs.write_manifest("serve_scale", horizon=args.epochs,
+                                          smoke=args.smoke)
 
     def _span(name):
         return obs.span(name) if obs is not None else contextlib.nullcontext()
@@ -272,7 +304,10 @@ def main():
     for n in sizes:
         for traffic_name, policy_name in combos:
             with _span("results"):
-                rec = bench_one(n, args.epochs, traffic_name, policy_name)
+                rec = cached(
+                    "results", len(results),
+                    lambda n=n, t=traffic_name, p=policy_name:
+                    bench_one(n, args.epochs, t, p))
             results.append(rec)
             _note("results", rec)
             print(f"N={n:>9,} {traffic_name:>8}/{policy_name:<9} "
@@ -287,8 +322,10 @@ def main():
         for n, epochs in sharded:
             for traffic_name, policy_name in combos[:1]:
                 with _span("sharded"):
-                    rec = bench_one(n, epochs, traffic_name, policy_name,
-                                    mesh=mesh)
+                    rec = cached(
+                        "sharded", len(sharded_results),
+                        lambda n=n, e=epochs, t=traffic_name, p=policy_name:
+                        bench_one(n, e, t, p, mesh=mesh))
                 sharded_results.append(rec)
                 _note("sharded", rec)
                 print(f"N={n:>9,} {traffic_name:>8}/{policy_name:<9} sharded/"
@@ -304,7 +341,9 @@ def main():
     round_step = []
     for n in [1_000_000, 10_000_000]:
         with _span("round_step"):
-            rec = bench_round_step(n, reps=3 if n <= 1_000_000 else 2)
+            rec = cached("round_step", len(round_step),
+                         lambda n=n: bench_round_step(
+                             n, reps=3 if n <= 1_000_000 else 2))
         round_step.append(rec)
         _note("round_step", rec)
         print(f"round_step N={n:>10,}: unfused={rec['unfused_ms']:.2f}ms  "
@@ -315,7 +354,14 @@ def main():
               f"bytes-model={rec['modeled_bytes_ratio']:.2f}x", flush=True)
 
     with _span("admission"):
-        adm = bench_admission(adm_n, args.epochs)
+        # the controlled run inside the record is ALSO chunk-checkpointed
+        # (its own subdirectory): a kill mid-run resumes from the last
+        # chunk boundary, not from the top of the section
+        adm = cached("admission", 0, lambda: bench_admission(
+            adm_n, args.epochs,
+            checkpoint=(os.path.join(args.checkpoint_dir, "admission_run")
+                        if args.checkpoint_dir else None),
+            resume=args.resume))
     print(f"admission N={adm_n:,}: unanswered "
           f"{adm['agnostic']['unanswered_rate']:.3f} (agnostic) -> "
           f"{adm['gated']['unanswered_rate']:.3f} (gated) / "

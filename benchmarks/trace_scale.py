@@ -157,16 +157,45 @@ def main():
                     help="also stream bench progress as a repro.obs JSONL "
                          "event log (manifest + per-section spans + "
                          "per-record events)")
+    ap.add_argument("--checkpoint-dir", default=None,
+                    help="persist each completed bench record so a killed "
+                         "run resumes past the sections it already measured "
+                         "(repro.checkpoint.SectionCheckpoint)")
+    ap.add_argument("--resume", action="store_true",
+                    help="replay completed records from --checkpoint-dir and "
+                         "only compute the rest")
     args = ap.parse_args()
+
+    if args.resume and not args.checkpoint_dir:
+        ap.error("--resume requires --checkpoint-dir")
+    sc = None
+    if args.checkpoint_dir:
+        from repro.checkpoint import SectionCheckpoint
+        from repro.obs.events import pytree_hash
+        sc = SectionCheckpoint(
+            args.checkpoint_dir, kind="trace_scale",
+            config_hash=pytree_hash(("trace_scale", bool(args.smoke),
+                                     int(args.epochs))),
+            resume=args.resume)
+        if sc.resumed:
+            done = {k: len(v) for k, v in sc.sections.items()}
+            print(f"resuming: replaying completed records {done}")
+
+    def cached(section, index, fn):
+        return sc.cached(section, index, fn) if sc is not None else fn()
 
     from repro.obs import Obs, RunManifest
     obs = Obs(args.obs_dir) if args.obs_dir else None
+    manifest = RunManifest.create("trace_scale", horizon=args.epochs,
+                                  smoke=args.smoke)
     if obs is not None:
-        manifest = obs.write_manifest("trace_scale", horizon=args.epochs,
-                                      smoke=args.smoke)
-    else:
-        manifest = RunManifest.create("trace_scale", horizon=args.epochs,
-                                      smoke=args.smoke)
+        if sc is not None and sc.resumed:
+            obs.event("resume", run_kind="trace_scale", step=sc.step,
+                      config_hash=sc.config_hash,
+                      checkpoint_dir=args.checkpoint_dir)
+        else:
+            manifest = obs.write_manifest("trace_scale", horizon=args.epochs,
+                                          smoke=args.smoke)
 
     def _span(name):
         return obs.span(name) if obs is not None else contextlib.nullcontext()
@@ -192,7 +221,8 @@ def main():
     for n in sizes:
         for bench in (bench_fleet, bench_serve):
             with _span("results"):
-                rec = bench(n, args.epochs)
+                rec = cached("results", len(results),
+                             lambda n=n, bench=bench: bench(n, args.epochs))
             results.append(rec)
             _note("results", rec)
             per_s = rec.get("client_rounds_per_s",
@@ -206,7 +236,9 @@ def main():
         mesh = jax.make_mesh((n_dev,), ("data",))
         for n, epochs in sharded:
             with _span("sharded"):
-                rec = bench_serve(n, epochs, mesh=mesh)
+                rec = cached("sharded", len(sharded_results),
+                             lambda n=n, e=epochs:
+                             bench_serve(n, e, mesh=mesh))
             sharded_results.append(rec)
             _note("sharded", rec)
             print(f"N={n:>9,}  serve sharded/{n_dev}dev epochs={epochs} "
@@ -218,7 +250,8 @@ def main():
               "(set XLA_FLAGS=--xla_force_host_platform_device_count=8)")
 
     with _span("calibration"):
-        cal = bench_calibration(fit_n, fit_r)
+        cal = cached("calibration", 0,
+                     lambda: bench_calibration(fit_n, fit_r))
     for name in ("markov_solar", "diurnal_poisson", "mmpp"):
         print(f"calibration {name}: true={cal[name]['true']} "
               f"fitted={cal[name]['fitted']} ({cal[name]['fit_s']}s)",

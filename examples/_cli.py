@@ -47,7 +47,31 @@ def add_scenario_flags(parser: argparse.ArgumentParser,
                              "(manifest + per-round energy seven / serve "
                              "ledger + spans) into this directory; inspect "
                              "with `python -m repro.obs.report summary DIR`")
+    parser.add_argument("--checkpoint-dir", default=None,
+                        help="save a chunk-boundary run checkpoint into this "
+                             "directory (retained-last-k rotation + "
+                             "MANIFEST.json, repro.checkpoint.resume)")
+    parser.add_argument("--resume", action="store_true",
+                        help="resume from the newest intact checkpoint in "
+                             "--checkpoint-dir (bit-exact with the "
+                             "uninterrupted run; DESIGN.md §13)")
     return parser
+
+
+def checkpoint_args(args, run: str | None = None) -> dict:
+    """``checkpoint=``/``resume=`` kwargs for a controlled run from the
+    shared ``--checkpoint-dir``/``--resume`` flags.  ``run`` names a
+    per-run subdirectory for scripts that drive several controlled runs
+    (each run has its own config hash and round offset, so they cannot
+    share one checkpoint directory)."""
+    d = getattr(args, "checkpoint_dir", None)
+    if not d:
+        if getattr(args, "resume", False):
+            raise SystemExit("--resume requires --checkpoint-dir")
+        return {}
+    import os
+    return {"checkpoint": os.path.join(d, run) if run else d,
+            "resume": args.resume}
 
 
 def make_obs(args):

@@ -18,8 +18,13 @@ Run:  PYTHONPATH=src python examples/battery_control.py
 
 Add more devices to shard the client axis, e.g.
 ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` — `run_controlled`
-passes ``mesh=`` straight through to the sharded fleet path.
+passes ``mesh=`` straight through to the sharded fleet path.  Pass
+``--checkpoint-dir DIR`` to checkpoint the controlled run at chunk
+boundaries and ``--resume`` to pick an interrupted run back up, bit-exactly
+(DESIGN.md §13).
 """
+import argparse
+
 import jax
 import numpy as np
 
@@ -27,6 +32,17 @@ from repro.core import EnergyProfile, Policy
 from repro.energy import (BatteryConfig, ControlBounds, DeviceCostModel,
                           FleetConfig, MarkovSolar, ServerController,
                           run_controlled, simulate_fleet)
+
+ap = argparse.ArgumentParser(description=__doc__)
+ap.add_argument("--checkpoint-dir", default=None,
+                help="save chunk-boundary checkpoints of the controlled run "
+                     "here (repro.checkpoint.resume)")
+ap.add_argument("--resume", action="store_true",
+                help="resume the controlled run from the newest intact "
+                     "checkpoint in --checkpoint-dir")
+args = ap.parse_args()
+if args.resume and not args.checkpoint_dir:
+    raise SystemExit("--resume requires --checkpoint-dir")
 
 N, ROUNDS, CONTROL_EVERY = 50_000, 200, 10
 
@@ -58,7 +74,8 @@ controller = ServerController(
     bounds=ControlBounds(t_min=1, t_max=10, e_min=1, e_max=64))
 controlled, controller = run_controlled(
     process, battery, cost, cfg, ROUNDS, controller,
-    control_every=CONTROL_EVERY, mesh=mesh)
+    control_every=CONTROL_EVERY, mesh=mesh,
+    checkpoint=args.checkpoint_dir, resume=args.resume)
 
 print(f"{'':>12} {'part%':>7} {'depleted%':>9} {'spent J':>10} {'wasted J':>10}")
 for name, res in [("static", static), ("controlled", controlled)]:

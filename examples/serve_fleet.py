@@ -38,8 +38,8 @@ import argparse
 import jax
 import numpy as np
 
-from _cli import (add_scenario_flags, assistant_traffic, make_obs,
-                  scenario_name, solar_harvest)
+from _cli import (add_scenario_flags, assistant_traffic, checkpoint_args,
+                  make_obs, scenario_name, solar_harvest)
 from repro.energy import (AdmissionRule, BatteryConfig, ControlBounds,
                           DecodeCostModel, ServerController)
 from repro.serve import (BatteryGated, EnergyAgnostic, QoSSpec, ServeConfig,
@@ -90,7 +90,7 @@ obs = make_obs(args)
 runs["controlled"], controller = run_serve_controlled(
     traffic, harvest, battery, cost, qos, BatteryGated.create(N), cfg,
     EPOCHS, controller, train_cost=0.2, control_every=CONTROL_EVERY,
-    mesh=mesh, backend=args.backend, obs=obs)
+    mesh=mesh, backend=args.backend, obs=obs, **checkpoint_args(args))
 if obs is not None:
     obs.close()
     print(f"obs events (controlled run) -> {obs.log.path}\n")

@@ -27,7 +27,7 @@ import argparse
 
 import numpy as np
 
-from _cli import add_scenario_flags, make_obs
+from _cli import add_scenario_flags, checkpoint_args, make_obs
 from repro.energy import (AdmissionRule, BatteryConfig, ControlBounds,
                           DecodeCostModel, ServerController, TraceHarvest)
 from repro.serve import (BatteryGated, DiurnalPoisson, QoSSpec, ServeConfig,
@@ -93,9 +93,12 @@ for name, (h, t) in {"trace": (harvest, traffic),
                      "twin": (twin_solar, twin_diurnal)}.items():
     ctrl = ServerController(T0=5, E0=4, rules=(AdmissionRule(),),
                             bounds=ControlBounds())
+    # per-run checkpoint subdirectories: the trace and twin runs have
+    # different config hashes, so they cannot share one directory
     res, ctrl = run_serve_controlled(
         t, h, battery, cost, qos, BatteryGated.create(N), cfg, EPOCHS, ctrl,
-        train_cost=0.2, control_every=24, backend=args.backend, obs=obs)
+        train_cost=0.2, control_every=24, backend=args.backend, obs=obs,
+        **checkpoint_args(args, run=name))
     results[name] = res
     s = res.stats
     off = max(s["offered"].sum(), 1e-9)

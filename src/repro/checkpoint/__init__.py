@@ -1,3 +1,13 @@
-from repro.checkpoint.ckpt import load_checkpoint, save_checkpoint
+from repro.checkpoint.ckpt import (CheckpointError, load_checkpoint,
+                                   save_checkpoint, validate_leaves)
+from repro.checkpoint.resume import (RunCheckpoint, RunCheckpointer,
+                                     SectionCheckpoint, as_checkpointer,
+                                     pack_controller, restore_run, save_run,
+                                     unpack_controller)
 
-__all__ = ["load_checkpoint", "save_checkpoint"]
+__all__ = [
+    "CheckpointError", "load_checkpoint", "save_checkpoint",
+    "validate_leaves", "RunCheckpoint", "RunCheckpointer",
+    "SectionCheckpoint", "as_checkpointer", "pack_controller",
+    "restore_run", "save_run", "unpack_controller",
+]

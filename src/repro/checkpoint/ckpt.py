@@ -1,4 +1,17 @@
-"""msgpack tree checkpointing (atomic write + metadata), dependency-light."""
+"""msgpack tree checkpointing (atomic write + metadata), dependency-light.
+
+Contract (DESIGN.md §13.1):
+
+* `save_checkpoint` is atomic — the payload is written to a same-directory
+  temp file and `os.replace`d over the target, so readers only ever see a
+  complete previous checkpoint or a complete new one, never a torn mix.
+  A failed write leaves no temp file behind.
+* `load_checkpoint` either returns a fully validated tree or raises
+  `CheckpointError` — a truncated/corrupt file can never yield a partial
+  tree.  With ``like`` given, every leaf's dtype AND shape is checked
+  against ``like``'s leaves (a checkpoint written by a different config
+  must fail loudly, not be silently cast).
+"""
 from __future__ import annotations
 
 import os
@@ -13,6 +26,11 @@ import numpy as np
 PyTree = Any
 
 _DTYPE_KEY = "__np__"
+
+
+class CheckpointError(RuntimeError):
+    """A checkpoint could not be read or does not match what the caller
+    expects (truncated/corrupt bytes, wrong leaf count/dtype/shape)."""
 
 
 def _pack(obj):
@@ -54,18 +72,65 @@ def save_checkpoint(path: str, tree: PyTree, step: int = 0,
         raise
 
 
+def validate_leaves(leaves: list, like: PyTree,
+                    context: str = "checkpoint") -> PyTree:
+    """Unflatten ``leaves`` into ``like``'s treedef, raising
+    `CheckpointError` on any leaf-count/dtype/shape mismatch.  This is the
+    restore-side type guard: msgpack round-trips exact bytes, so anything
+    that does not match ``like`` means the checkpoint was written by a
+    different program, and silently casting it would corrupt the run."""
+    ref_leaves, treedef = jax.tree.flatten(like)
+    if len(ref_leaves) != len(leaves):
+        raise CheckpointError(
+            f"{context} has {len(leaves)} leaves, expected "
+            f"{len(ref_leaves)} (treedef {treedef})")
+    out = []
+    for i, (leaf, ref) in enumerate(zip(leaves, ref_leaves)):
+        arr, ref_arr = np.asarray(leaf), np.asarray(ref)
+        if arr.dtype != ref_arr.dtype or arr.shape != ref_arr.shape:
+            raise CheckpointError(
+                f"{context} leaf {i}: stored {arr.dtype}{arr.shape}, "
+                f"expected {ref_arr.dtype}{ref_arr.shape} — refusing to "
+                f"cast (the checkpoint was written by a different config)")
+        # numpy, not jnp: jnp.asarray would downcast 64-bit leaves under
+        # the default x64-disabled jax, silently breaking the exact-dtype
+        # guarantee just established
+        out.append(arr)
+    return jax.tree.unflatten(treedef, out)
+
+
 def load_checkpoint(path: str, like: PyTree | None = None
                     ) -> tuple[PyTree, int, dict]:
-    """Load a checkpoint.  ``like`` provides the treedef (required: treedefs
-    are not round-trippable from their string form); leaves are cast to the
-    dtypes of ``like``'s leaves when given."""
+    """Load a checkpoint.
+
+    ``like`` provides the reference treedef; every stored leaf must match
+    the corresponding ``like`` leaf's dtype and shape exactly or
+    `CheckpointError` is raised (never a silent cast).  Without ``like``
+    the nested dict/list structure saved alongside the leaves is
+    reconstructed when unambiguous, else the flat leaf list is returned.
+    Truncated or corrupt bytes raise `CheckpointError` — never a partial
+    tree.
+    """
     with open(path, "rb") as f:
-        payload = msgpack.unpackb(f.read(), raw=False)
-    leaves = [_unpack(x) for x in payload["leaves"]]
-    if like is None:
-        return leaves, payload["step"], payload["metadata"]
-    ref_leaves, treedef = jax.tree.flatten(like)
-    assert len(ref_leaves) == len(leaves), \
-        f"checkpoint has {len(leaves)} leaves, expected {len(ref_leaves)}"
-    cast = [jnp.asarray(l, dtype=r.dtype) for l, r in zip(leaves, ref_leaves)]
-    return jax.tree.unflatten(treedef, cast), payload["step"], payload["metadata"]
+        raw = f.read()
+    try:
+        payload = msgpack.unpackb(raw, raw=False)
+        if not isinstance(payload, dict):
+            raise TypeError(f"payload is {type(payload).__name__}, not dict")
+        leaves = [_unpack(x) for x in payload["leaves"]]
+        step, metadata = payload["step"], payload["metadata"]
+    except CheckpointError:
+        raise
+    except Exception as e:
+        raise CheckpointError(
+            f"checkpoint {path} is truncated or corrupt: "
+            f"{type(e).__name__}: {e}") from e
+    if like is not None:
+        return validate_leaves(leaves, like, context=path), step, metadata
+    structure = payload.get("structure")
+    if structure is not None:
+        treedef = jax.tree.structure(structure,
+                                     is_leaf=lambda x: x is None)
+        if treedef.num_leaves == len(leaves):
+            return jax.tree.unflatten(treedef, leaves), step, metadata
+    return leaves, step, metadata

@@ -1,0 +1,330 @@
+"""Preemption-safe resumable runs (DESIGN.md §13).
+
+The chunked controller loops (`energy.control.run_controlled`,
+`serve.fleet_serve.run_serve_controlled`) already thread the complete
+cross-chunk state — ``(charge, process_state)`` / ``(charge, traffic,
+harvest)``, the `ControlState` knobs and the absolute round offset — so a
+chunk boundary is, by construction, a point where the whole run is a small
+pytree.  This module persists that pytree:
+
+* `RunCheckpointer` — one checkpoint file per saved boundary
+  (``ckpt-<round:08d>.msgpack``, written atomically by
+  `ckpt.save_checkpoint`), a retained-last-k rotation, and an atomic
+  ``MANIFEST.json`` describing what is on disk.  `restore_payload` walks
+  newest→oldest and skips torn/corrupt files (`CheckpointError` from
+  `ckpt.load_checkpoint`), so a crash *during* a save falls back to the
+  previous retained boundary.
+* `save_run` / `restore_run` — the closed-loop run schema: simulator state
+  leaves, accumulated telemetry, packed controller state + trace, the RNG
+  base key, and a config `pytree_hash` guard (resuming under a different
+  config raises instead of silently diverging).  Mesh/backend are
+  deliberately NOT part of the guard: the sharded/pallas parity contract
+  makes resume across topologies and backends bit-exact.
+* `SectionCheckpoint` — record-level resume for the scale benchmarks: each
+  completed bench record is persisted so a killed ``--smoke`` run resumes
+  past the sections it already measured.
+
+Every value a checkpoint carries round-trips as exact bytes (msgpack of
+the raw array buffers), which is what makes kill-and-resume runs
+bit-identical to uninterrupted ones (`tests/test_resume.py`).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import tempfile
+import time
+from typing import Any
+
+import numpy as np
+
+from repro.checkpoint.ckpt import (CheckpointError, load_checkpoint,
+                                   save_checkpoint, validate_leaves)
+
+PyTree = Any
+
+MANIFEST_NAME = "MANIFEST.json"
+_PREFIX, _SUFFIX = "ckpt-", ".msgpack"
+
+
+class RunCheckpointer:
+    """Retained-last-k rotation of atomic checkpoints in one directory."""
+
+    def __init__(self, directory: str | os.PathLike, *, keep: int = 3):
+        self.directory = os.fspath(directory)
+        self.keep = max(1, int(keep))
+        os.makedirs(self.directory, exist_ok=True)
+
+    def path(self, step: int) -> str:
+        return os.path.join(self.directory, f"{_PREFIX}{step:08d}{_SUFFIX}")
+
+    @property
+    def manifest_path(self) -> str:
+        return os.path.join(self.directory, MANIFEST_NAME)
+
+    def steps(self) -> list[int]:
+        """Retained checkpoint steps, oldest first."""
+        out = []
+        for name in os.listdir(self.directory):
+            if name.startswith(_PREFIX) and name.endswith(_SUFFIX):
+                try:
+                    out.append(int(name[len(_PREFIX):-len(_SUFFIX)]))
+                except ValueError:
+                    continue
+        return sorted(out)
+
+    def save(self, step: int, tree: PyTree, metadata: dict | None = None
+             ) -> str:
+        """Atomically write ``step``'s checkpoint, prune beyond ``keep``,
+        refresh the manifest.  Returns the checkpoint path."""
+        path = self.path(int(step))
+        save_checkpoint(path, tree, step=int(step), metadata=metadata or {})
+        steps = self.steps()
+        for old in steps[:-self.keep]:
+            try:
+                os.unlink(self.path(old))
+            except FileNotFoundError:
+                pass
+        self._write_manifest(steps[-self.keep:], metadata or {})
+        return path
+
+    def _write_manifest(self, steps: list[int], metadata: dict) -> None:
+        man = {"updated": round(time.time(), 3), "keep": self.keep,
+               "steps": steps, "kind": metadata.get("kind"),
+               "config_hash": metadata.get("config_hash"),
+               "seed": metadata.get("seed")}
+        fd, tmp = tempfile.mkstemp(dir=self.directory)
+        try:
+            with os.fdopen(fd, "w") as f:
+                json.dump(man, f, indent=2)
+            os.replace(tmp, self.manifest_path)
+        except BaseException:
+            if os.path.exists(tmp):
+                os.unlink(tmp)
+            raise
+
+    def restore_payload(self) -> tuple[PyTree, int, dict] | None:
+        """Newest *intact* checkpoint as ``(tree, step, metadata)``, or None
+        when the directory holds none.  Torn/corrupt files (a kill mid-save,
+        a truncated disk) are skipped — the previous retained boundary
+        wins."""
+        for step in reversed(self.steps()):
+            try:
+                return load_checkpoint(self.path(step))
+            except CheckpointError:
+                continue
+        return None
+
+
+def as_checkpointer(checkpoint, *, keep: int = 3) -> RunCheckpointer:
+    """Accept a directory path or an existing `RunCheckpointer`."""
+    if isinstance(checkpoint, RunCheckpointer):
+        return checkpoint
+    return RunCheckpointer(checkpoint, keep=keep)
+
+
+# ---------------------------------------------------------------------------
+# Controller (ControlState + trace) <-> arrays.
+
+_TEL_SCALARS = ("participation_rate", "frac_depleted", "overflow_frac",
+                "mean_charge", "shed_rate", "deadline_miss_rate")
+_TEL_GROUPS = ("group_frac_depleted", "group_participation_rate")
+
+
+def pack_controller(controller) -> dict:
+    """`ServerController` knobs + full trace as a dict of arrays (the
+    telemetry objects flatten to per-field columns; per-group columns are
+    present only when every trace entry carries them)."""
+    st = controller.state
+    tels = [t["telemetry"] for t in controller.trace]
+    out = {
+        "T": np.asarray(st.T, np.int64),
+        "E": np.asarray(st.E),
+        "admit": np.asarray(st.admit, np.float64),
+        "trace_T": np.asarray([t["T"] for t in controller.trace], np.int64),
+        "trace_E_mean": np.asarray(
+            [t["E_mean"] for t in controller.trace], np.float64),
+        "trace_admit": np.asarray(
+            [t["admit"] for t in controller.trace], np.float64),
+    }
+    for f in _TEL_SCALARS:
+        out["tel_" + f] = np.asarray([getattr(t, f) for t in tels],
+                                     np.float64)
+    for f in _TEL_GROUPS:
+        vals = [getattr(t, f) for t in tels]
+        if vals and all(v is not None for v in vals):
+            out["tel_" + f] = np.asarray(vals, np.float64)
+    return out
+
+
+def unpack_controller(controller, packed: dict) -> None:
+    """Inverse of `pack_controller`, in place: restore the knobs and rebuild
+    the trace (including `Telemetry` entries) bit-exactly."""
+    if not packed or "T" not in packed:
+        return
+    from repro.energy.control import ControlState, Telemetry
+
+    controller.state = ControlState(
+        T=int(np.asarray(packed["T"])),
+        E=np.array(np.asarray(packed["E"])),       # writable copy
+        admit=float(np.asarray(packed["admit"])))
+    k = int(np.asarray(packed["trace_T"]).shape[0])
+    trace = []
+    for i in range(k):
+        kw = {f: float(np.asarray(packed["tel_" + f])[i])
+              for f in _TEL_SCALARS}
+        for f in _TEL_GROUPS:
+            if "tel_" + f in packed:
+                kw[f] = np.array(np.asarray(packed["tel_" + f])[i])
+        trace.append({"T": int(np.asarray(packed["trace_T"])[i]),
+                      "E_mean": float(np.asarray(packed["trace_E_mean"])[i]),
+                      "admit": float(np.asarray(packed["trace_admit"])[i]),
+                      "telemetry": Telemetry(**kw)})
+    controller.trace = trace
+
+
+# ---------------------------------------------------------------------------
+# Closed-loop run schema.
+
+@dataclasses.dataclass
+class RunCheckpoint:
+    """One restored chunk boundary of a controlled run."""
+
+    kind: str            # "fleet_controlled" / "serve_controlled" / ...
+    round_offset: int    # rounds/epochs already simulated
+    state: PyTree        # simulator cross-chunk state, validated vs like
+    stats: dict          # accumulated telemetry, (round_offset,) per key
+    metadata: dict
+
+
+def _base_key_data(seed) -> np.ndarray:
+    import jax
+
+    if seed is None:
+        return np.zeros((), np.uint32)
+    return np.asarray(jax.random.key_data(jax.random.PRNGKey(int(seed))))
+
+
+def save_run(ckptr: RunCheckpointer, *, kind: str, round_offset: int,
+             state: PyTree, stats: dict, controller=None,
+             config_hash: str | None = None, seed=None,
+             extra: dict | None = None) -> str:
+    """Persist one chunk boundary.  ``state`` is stored as its flat leaf
+    list (msgpack cannot round-trip tuples-in-treedefs; `restore_run`
+    re-hangs the leaves on a caller-built ``state_like``)."""
+    import jax
+
+    tree = {
+        "state": [np.asarray(x) for x in jax.tree.leaves(state)],
+        "stats": {k: np.asarray(v) for k, v in stats.items()},
+        "controller": {} if controller is None else
+        pack_controller(controller),
+        "rng": {"base_key": _base_key_data(seed)},
+    }
+    meta = {"kind": kind, "round_offset": int(round_offset),
+            "config_hash": config_hash,
+            "seed": None if seed is None else int(seed),
+            "created": round(time.time(), 3)}
+    if extra:
+        meta.update(extra)
+    return ckptr.save(int(round_offset), tree, meta)
+
+
+def restore_run(ckptr: RunCheckpointer, *, kind: str, state_like: PyTree,
+                config_hash: str | None = None, seed=None, controller=None
+                ) -> RunCheckpoint | None:
+    """Restore the newest intact boundary, or None for an empty directory.
+
+    Guards (each raises `CheckpointError` rather than diverging silently):
+    the stored run ``kind``, the config `pytree_hash`, the RNG base key
+    derived from ``seed``, and every state leaf's dtype/shape vs
+    ``state_like``.  When ``controller`` is given its knobs and trace are
+    restored in place.
+    """
+    payload = ckptr.restore_payload()
+    if payload is None:
+        return None
+    tree, step, meta = payload
+    if meta.get("kind") != kind:
+        raise CheckpointError(
+            f"checkpoint dir {ckptr.directory} holds a {meta.get('kind')!r} "
+            f"run, expected {kind!r}")
+    if config_hash is not None and meta.get("config_hash") != config_hash:
+        raise CheckpointError(
+            "refusing to resume: the checkpoint was written by a different "
+            f"config (stored hash {meta.get('config_hash')}, current "
+            f"{config_hash}) — use a fresh checkpoint dir or drop resume")
+    want = _base_key_data(seed)
+    got = np.asarray(tree.get("rng", {}).get("base_key", want))
+    if got.shape != want.shape or not np.array_equal(got, want):
+        raise CheckpointError(
+            "refusing to resume: the checkpointed RNG base key does not "
+            f"match the current seed (stored seed {meta.get('seed')}, "
+            f"current {seed})")
+    state = validate_leaves(tree["state"], state_like,
+                            context=f"{kind} state at round {step}")
+    if controller is not None:
+        unpack_controller(controller, tree.get("controller", {}))
+    stats = {k: np.asarray(v) for k, v in tree["stats"].items()}
+    return RunCheckpoint(kind=kind, round_offset=int(meta["round_offset"]),
+                         state=state, stats=stats, metadata=meta)
+
+
+# ---------------------------------------------------------------------------
+# Benchmark section/record resume.
+
+class SectionCheckpoint:
+    """Record-granular resume for the scale benchmarks.
+
+    Completed bench records (plain JSON-able dicts) ride in checkpoint
+    *metadata* — the payload tree is empty — so a killed benchmark re-run
+    with ``--resume`` replays finished records from disk and only computes
+    the rest.  Records are keyed ``(section, index)``: benches append
+    records in a deterministic order, so "the first ``len(stored)``
+    records of a section are done" is exact.
+    """
+
+    def __init__(self, directory: str | os.PathLike, *, kind: str,
+                 config_hash: str | None, resume: bool = False,
+                 keep: int = 2):
+        self.mgr = RunCheckpointer(directory, keep=keep)
+        self.kind, self.config_hash = kind, config_hash
+        self.sections: dict[str, list] = {}
+        self.step = 0
+        if resume:
+            payload = self.mgr.restore_payload()
+            if payload is not None:
+                _, step, meta = payload
+                if meta.get("kind") != kind:
+                    raise CheckpointError(
+                        f"checkpoint dir {self.mgr.directory} holds a "
+                        f"{meta.get('kind')!r} run, expected {kind!r}")
+                if (config_hash is not None
+                        and meta.get("config_hash") != config_hash):
+                    raise CheckpointError(
+                        "refusing to resume benchmark: stored config hash "
+                        f"{meta.get('config_hash')} != current {config_hash}")
+                self.sections = {k: list(v) for k, v in
+                                 (meta.get("sections") or {}).items()}
+                self.step = int(step)
+
+    @property
+    def resumed(self) -> bool:
+        return self.step > 0
+
+    def cached(self, section: str, index: int, fn):
+        """Return the stored record for ``(section, index)`` if the previous
+        run completed it, else compute ``fn()``, persist, and return it."""
+        recs = self.sections.setdefault(section, [])
+        if index < len(recs):
+            return recs[index]
+        from repro.obs.events import _json_default
+
+        rec = json.loads(json.dumps(fn(), default=_json_default))
+        recs.append(rec)
+        self.step += 1
+        self.mgr.save(self.step, {}, {
+            "kind": self.kind, "config_hash": self.config_hash,
+            "sections": self.sections})
+        return rec

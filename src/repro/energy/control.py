@@ -360,7 +360,8 @@ def run_controlled(process, bat, cost, cfg, num_rounds: int,
                    controller: ServerController, *, control_every: int = 10,
                    mesh=None, phase=None,
                    record_masks: bool = False, backend: str = "lax",
-                   obs=None):
+                   obs=None, pad_to: int | None = None, checkpoint=None,
+                   resume: bool = False, checkpoint_every: int = 1):
     """Closed-loop fleet horizon: `simulate_fleet` in chunks of
     ``control_every`` rounds, with the controller adapting ``T`` (round
     pricing via ``cfg.local_steps``) and per-group ``E`` between chunks.
@@ -378,24 +379,71 @@ def run_controlled(process, bat, cost, cfg, num_rounds: int,
     post-update ``control`` events cost zero program changes, and a
     `RetraceSentinel` warns if any chunk after the first retraces the scan.
 
+    ``checkpoint=`` (a directory or `repro.checkpoint.RunCheckpointer`)
+    persists every ``checkpoint_every``-th chunk boundary — simulator state,
+    accumulated telemetry, controller knobs + trace, RNG base key, config
+    hash (DESIGN.md §13).  ``resume=True`` restores the newest intact
+    boundary and continues; a kill-and-resume run is bit-identical to an
+    uninterrupted one and compiles nothing beyond the first chunk (the
+    restored state has the same avals — `tests/test_resume.py`).  On resume
+    an existing ``obs`` stream gets a ``resume`` event, not a second
+    manifest.
+
     Returns ``(FleetResult over the full horizon, controller)``.
     """
+    if resume and checkpoint is None:
+        raise ValueError("resume=True requires checkpoint=")
+    ckptr, cfg_hash, start, restored_stats, state = None, None, 0, None, None
+    if checkpoint is not None:
+        if record_masks:
+            raise ValueError(
+                "checkpoint= cannot carry record_masks=True: the (R, N) "
+                "mask history is unbounded state the chunk boundary "
+                "checkpoints do not persist")
+        from repro.checkpoint import resume as resume_lib
+        from repro.obs.events import pytree_hash
+        ckptr = resume_lib.as_checkpointer(checkpoint)
+        # mesh/backend/pad_to excluded on purpose: sharded & pallas parity
+        # make resume across topologies/backends bit-exact
+        cfg_hash = pytree_hash((
+            "fleet_controlled", process, bat, cost, cfg, phase,
+            int(control_every), controller.rules, controller.bounds,
+            controller.groups))
+        if resume:
+            rc = resume_lib.restore_run(
+                ckptr, kind="fleet_controlled", config_hash=cfg_hash,
+                state_like=(bat.init(cfg.num_clients), process.init()),
+                seed=cfg.seed, controller=controller)
+            if rc is not None:
+                state, start = rc.state, rc.round_offset
+                restored_stats = rc.stats
     sentinel = None
     if obs is not None:
         from repro.obs.profile import RetraceSentinel
-        obs.write_manifest(
-            "fleet_controlled", config=(process, bat, cost), seed=cfg.seed,
-            backend=backend, mesh=mesh, num_clients=cfg.num_clients,
-            horizon=num_rounds, control_every=control_every,
-            policy=cfg.policy)
+        if start:
+            obs.event("resume", run_kind="fleet_controlled", round=start,
+                      horizon=num_rounds, config_hash=cfg_hash,
+                      checkpoint_dir=ckptr.directory)
+        else:
+            obs.write_manifest(
+                "fleet_controlled", config=(process, bat, cost),
+                seed=cfg.seed, backend=backend, mesh=mesh,
+                num_clients=cfg.num_clients, horizon=num_rounds,
+                control_every=control_every, policy=cfg.policy)
         sentinel = RetraceSentinel(obs)
-    state = None
     chunks: list[fleet_lib.FleetResult] = []
-    offset = 0
+    offset = start
+
+    def acc_stats():
+        parts = ([restored_stats] if restored_stats is not None else []) \
+            + [c.stats for c in chunks]
+        return {k: np.concatenate([p[k] for p in parts]) for k in parts[0]}
+
     # grouped controllers get per-group telemetry (BudgetRule then moves
     # each E_k from its own group's depletion — ROADMAP per-group item)
     groups = controller.groups
     num_groups = None if groups is None else controller.E.size
+    chunk_i = 0
     while offset < num_rounds:
         chunk = min(control_every, num_rounds - offset)
         ccfg = dataclasses.replace(cfg, local_steps=controller.T)
@@ -406,8 +454,8 @@ def run_controlled(process, bat, cost, cfg, num_rounds: int,
                 process, bat, cost, ccfg, chunk,
                 E=controller.client_E(cfg.num_clients),
                 phase=phase, record_masks=record_masks, mesh=mesh,
-                state=state, round_offset=offset, groups=groups,
-                num_groups=num_groups, backend=backend)
+                pad_to=pad_to, state=state, round_offset=offset,
+                groups=groups, num_groups=num_groups, backend=backend)
         state = res.final_state
         chunks.append(res)
         controller.update(res.stats, cfg.num_clients)
@@ -416,17 +464,24 @@ def run_controlled(process, bat, cost, cfg, num_rounds: int,
             obs.event("control", round=offset + chunk, T=controller.state.T,
                       E_mean=float(np.mean(controller.state.E)),
                       admit=controller.state.admit)
-            if offset == 0:
+            if offset == start:
                 sentinel.snapshot()
             else:
                 sentinel.check(context=f"fleet chunk at round {offset}")
         offset += chunk
-    stats = {k: np.concatenate([c.stats[k] for c in chunks])
-             for k in chunks[0].stats}
+        chunk_i += 1
+        if ckptr is not None and (chunk_i % max(1, checkpoint_every) == 0
+                                  or offset >= num_rounds):
+            from repro.checkpoint import resume as resume_lib
+            resume_lib.save_run(
+                ckptr, kind="fleet_controlled", round_offset=offset,
+                state=state, stats=acc_stats(), controller=controller,
+                config_hash=cfg_hash, seed=cfg.seed)
+    stats = acc_stats()
     masks = (np.concatenate([np.asarray(c.masks) for c in chunks])
-             if record_masks else None)
-    out = fleet_lib.FleetResult(stats=stats,
-                                final_charge=chunks[-1].final_charge,
-                                masks=masks,
-                                final_pstate=chunks[-1].final_pstate)
+             if record_masks and chunks else None)
+    final_charge = chunks[-1].final_charge if chunks else state[0]
+    final_pstate = chunks[-1].final_pstate if chunks else state[1]
+    out = fleet_lib.FleetResult(stats=stats, final_charge=final_charge,
+                                masks=masks, final_pstate=final_pstate)
     return out, controller

@@ -67,6 +67,15 @@ def main():
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--ckpt", default="")
     ap.add_argument("--log", default="")
+    ap.add_argument("--checkpoint-dir", default="",
+                    help="save a resumable run checkpoint (params + round + "
+                         "history, retained-last-k rotation) into this "
+                         "directory every --checkpoint-every rounds")
+    ap.add_argument("--resume", action="store_true",
+                    help="resume from the newest intact checkpoint in "
+                         "--checkpoint-dir (bit-exact: per-round RNG and "
+                         "batches are derived from the absolute round index)")
+    ap.add_argument("--checkpoint-every", type=int, default=5)
     ap.add_argument("--obs-dir", default="",
                     help="stream a repro.obs run (manifest + per-round "
                          "events + span timings) to this directory")
@@ -102,21 +111,58 @@ def main():
         source = SyntheticTokens(cfg.vocab_size, args.seq, C, seed=args.seed)
         batch_fn = token_batch_fn(cfg, source, C, T, args.batch)
 
+    ckptr, cfg_hash, start, history = None, None, 0, []
+    if args.resume and not args.checkpoint_dir:
+        raise SystemExit("--resume requires --checkpoint-dir")
+    if args.checkpoint_dir:
+        from repro.checkpoint import resume as resume_lib
+        from repro.obs.events import pytree_hash
+        ckptr = resume_lib.as_checkpointer(args.checkpoint_dir)
+        cfg_hash = pytree_hash(("train", cfg.name, fed, args.optimizer,
+                                args.lr, T, args.batch, args.seq, taus))
+        if args.resume:
+            rc = resume_lib.restore_run(ckptr, kind="train", state_like=w,
+                                        config_hash=cfg_hash, seed=args.seed)
+            if rc is not None:
+                w, start = rc.state, rc.round_offset
+                history = [{"round": i, "loss": float(l),
+                            "participants": float(p)}
+                           for i, (l, p) in enumerate(
+                               zip(rc.stats["loss"],
+                                   rc.stats["participants"]))]
+                print(f"resumed from round {start} "
+                      f"({ckptr.path(start)})")
+
     obs = None
     if args.obs_dir:
         from repro.obs import Obs
         obs = Obs(args.obs_dir)
-        obs.write_manifest("train", config=fed, seed=args.seed,
-                           num_clients=C, horizon=args.rounds,
-                           arch=cfg.name, family=cfg.family,
-                           params=int(n_params), policy=args.policy,
-                           local_steps=T, optimizer=args.optimizer,
-                           lr=args.lr)
+        if start:
+            # re-attach to the existing event stream: a resumed run emits a
+            # `resume` event, never a second manifest (DESIGN.md §13.4)
+            obs.event("resume", run_kind="train", round=start,
+                      horizon=args.rounds, config_hash=cfg_hash,
+                      checkpoint_dir=args.checkpoint_dir)
+        else:
+            obs.write_manifest("train", config=fed, seed=args.seed,
+                               num_clients=C, horizon=args.rounds,
+                               arch=cfg.name, family=cfg.family,
+                               params=int(n_params), policy=args.policy,
+                               local_steps=T, optimizer=args.optimizer,
+                               lr=args.lr)
+
+    def save_run(round_done):
+        from repro.checkpoint import resume as resume_lib
+        resume_lib.save_run(
+            ckptr, kind="train", round_offset=round_done, state=w,
+            stats={"loss": np.asarray([h["loss"] for h in history]),
+                   "participants": np.asarray(
+                       [h["participants"] for h in history])},
+            config_hash=cfg_hash, seed=args.seed)
 
     round_fn = jax.jit(partial(parallel_round, loss_fn, opt, fed))
-    history = []
     t0 = time.time()
-    for r in range(args.rounds):
+    for r in range(start, args.rounds):
         if obs is not None:
             with obs.span("train_round"):
                 w, m = round_fn(w, batch_fn(r), p, E, jnp.int32(r),
@@ -130,6 +176,9 @@ def main():
         history.append(rec)
         if obs is not None:
             obs.event("round", scan="train", **rec)
+        if ckptr is not None and ((r + 1) % max(1, args.checkpoint_every) == 0
+                                  or r == args.rounds - 1):
+            save_run(r + 1)
         if r % max(1, args.rounds // 10) == 0 or r == args.rounds - 1:
             print(f"round {r:4d} loss={rec['loss']:.4f} "
                   f"participants={rec['participants']:.0f} "

@@ -71,6 +71,14 @@ class EventLog:
             os.makedirs(parent, exist_ok=True)
         self._f: IO[str] | None = open(self.path, "a")
         self._seq = 0
+        if self._f.tell():
+            # Appending to an existing stream (a resumed run re-attaches to
+            # the same events.jsonl — DESIGN.md §13): continue the monotone
+            # seq from the last intact line instead of restarting at 0.
+            for ev in load_events(self.path):
+                s = ev.get("seq")
+                if isinstance(s, int) and s >= self._seq:
+                    self._seq = s + 1
 
     def emit(self, kind: str, **fields) -> dict:
         """Append one event; returns the record as written."""
@@ -124,6 +132,11 @@ def pytree_hash(tree: PyTree) -> str:
     for leaf in leaves:
         try:
             a = np.asarray(leaf)
+            if a.dtype == object:
+                # an object array's bytes are memory addresses — different
+                # every process, while this hash must match across runs (it
+                # is the resume config guard); hash the repr instead
+                raise TypeError(a.dtype)
             h.update(str(a.dtype).encode())
             h.update(str(a.shape).encode())
             h.update(np.ascontiguousarray(a).tobytes())

@@ -406,7 +406,9 @@ def run_serve_controlled(traffic, harvest, bat, cost: DecodeCostModel,
                          num_epochs: int, controller, *,
                          train_cost=None, control_every: int = 24,
                          mesh=None, record_modes: bool = False,
-                         backend: str = "lax", obs=None):
+                         backend: str = "lax", obs=None,
+                         pad_to: int | None = None, checkpoint=None,
+                         resume: bool = False, checkpoint_every: int = 1):
     """Closed-loop serving horizon: `simulate_serve` in chunks of
     ``control_every`` epochs, with an `energy.control.ServerController`
     adapting its knobs between chunks — the admission-threshold scale
@@ -426,21 +428,64 @@ def run_serve_controlled(traffic, harvest, bat, cost: DecodeCostModel,
     post-update ``control`` events cost zero program changes, and a
     `RetraceSentinel` warns if any chunk after the first retraces the scan.
 
+    ``checkpoint=``/``resume=``/``checkpoint_every=`` persist and restore
+    chunk boundaries exactly like `energy.control.run_controlled`
+    (DESIGN.md §13): serve state ``(charge, traffic, harvest)``,
+    accumulated ledger, controller knobs + trace, RNG base key, and a
+    config-hash guard; a resumed run is bit-identical to an uninterrupted
+    one, retraces nothing, and re-attaches ``obs`` with a ``resume`` event
+    instead of a second manifest.
+
     Returns ``(ServeResult over the full horizon, controller)``.
     """
     n = cfg.num_clients
+    if resume and checkpoint is None:
+        raise ValueError("resume=True requires checkpoint=")
+    ckptr, cfg_hash, start, restored_stats, state = None, None, 0, None, None
+    if checkpoint is not None:
+        if record_modes:
+            raise ValueError(
+                "checkpoint= cannot carry record_modes=True: the (E, N) "
+                "mode history is unbounded state the chunk boundary "
+                "checkpoints do not persist")
+        from repro.checkpoint import resume as resume_lib
+        from repro.obs.events import pytree_hash
+        ckptr = resume_lib.as_checkpointer(checkpoint)
+        cfg_hash = pytree_hash((
+            "serve_controlled", traffic, harvest, bat, cost, qos, policy,
+            cfg, train_cost, int(control_every), controller.rules,
+            controller.bounds, controller.groups))
+        if resume:
+            rc = resume_lib.restore_run(
+                ckptr, kind="serve_controlled", config_hash=cfg_hash,
+                state_like=(bat.init(n), traffic.init(), harvest.init()),
+                seed=cfg.seed, controller=controller)
+            if rc is not None:
+                state, start = rc.state, rc.round_offset
+                restored_stats = rc.stats
     sentinel = None
     if obs is not None:
         from repro.obs.profile import RetraceSentinel
-        obs.write_manifest(
-            "serve_controlled",
-            config=(traffic, harvest, bat, cost, qos, policy),
-            seed=cfg.seed, backend=backend, mesh=mesh, num_clients=n,
-            horizon=num_epochs, control_every=control_every)
+        if start:
+            obs.event("resume", run_kind="serve_controlled", round=start,
+                      horizon=num_epochs, config_hash=cfg_hash,
+                      checkpoint_dir=ckptr.directory)
+        else:
+            obs.write_manifest(
+                "serve_controlled",
+                config=(traffic, harvest, bat, cost, qos, policy),
+                seed=cfg.seed, backend=backend, mesh=mesh, num_clients=n,
+                horizon=num_epochs, control_every=control_every)
         sentinel = RetraceSentinel(obs)
-    state = None
     chunks: list[ServeResult] = []
-    offset = 0
+    offset = start
+
+    def acc_stats():
+        parts = ([restored_stats] if restored_stats is not None else []) \
+            + [c.stats for c in chunks]
+        return {k: np.concatenate([p[k] for p in parts]) for k in parts[0]}
+
+    chunk_i = 0
     while offset < num_epochs:
         chunk = min(control_every, num_epochs - offset)
         train = None if train_cost is None else TrainLoad.create(
@@ -451,8 +496,8 @@ def run_serve_controlled(traffic, harvest, bat, cost: DecodeCostModel,
             res = simulate_serve(
                 traffic, harvest, bat, cost, qos, policy, cfg, chunk,
                 train=train, admit=controller.state.admit, mesh=mesh,
-                record_modes=record_modes, state=state, epoch_offset=offset,
-                backend=backend)
+                pad_to=pad_to, record_modes=record_modes, state=state,
+                epoch_offset=offset, backend=backend)
         state = res.final_state
         chunks.append(res)
         controller.update(res.stats, n)
@@ -461,16 +506,26 @@ def run_serve_controlled(traffic, harvest, bat, cost: DecodeCostModel,
             obs.event("control", round=offset + chunk, T=controller.state.T,
                       E_mean=float(np.mean(controller.state.E)),
                       admit=controller.state.admit)
-            if offset == 0:
+            if offset == start:
                 sentinel.snapshot()
             else:
                 sentinel.check(context=f"serve chunk at epoch {offset}")
         offset += chunk
-    stats = {k: np.concatenate([c.stats[k] for c in chunks])
-             for k in chunks[0].stats}
+        chunk_i += 1
+        if ckptr is not None and (chunk_i % max(1, checkpoint_every) == 0
+                                  or offset >= num_epochs):
+            from repro.checkpoint import resume as resume_lib
+            resume_lib.save_run(
+                ckptr, kind="serve_controlled", round_offset=offset,
+                state=state, stats=acc_stats(), controller=controller,
+                config_hash=cfg_hash, seed=cfg.seed)
+    stats = acc_stats()
     modes = (np.concatenate([np.asarray(c.modes) for c in chunks])
-             if record_modes else None)
-    out = ServeResult(stats=stats, final_charge=chunks[-1].final_charge,
-                      modes=modes, final_tstate=chunks[-1].final_tstate,
-                      final_hstate=chunks[-1].final_hstate)
+             if record_modes and chunks else None)
+    final_charge = chunks[-1].final_charge if chunks else state[0]
+    final_tstate = chunks[-1].final_tstate if chunks else state[1]
+    final_hstate = chunks[-1].final_hstate if chunks else state[2]
+    out = ServeResult(stats=stats, final_charge=final_charge,
+                      modes=modes, final_tstate=final_tstate,
+                      final_hstate=final_hstate)
     return out, controller

@@ -19,8 +19,59 @@ except ImportError:
     sys.modules["hypothesis"] = _hypothesis_stub
     sys.modules["hypothesis.strategies"] = _hypothesis_stub.strategies
 
+import subprocess
+
 import jax
 import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def child_env(devices: int | None = None) -> dict:
+    """Environment for a spawned test child: forced-CPU jax, ``src`` on
+    PYTHONPATH, and (optionally) ``devices`` emulated CPU devices.  The
+    override lives in the CHILD only — the tier-1 pytest process must keep
+    the real single CPU device (see module docstring)."""
+    env = dict(os.environ)
+    env["JAX_PLATFORMS"] = "cpu"
+    if devices is not None:
+        env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(REPO, "src")]
+        + ([env["PYTHONPATH"]] if env.get("PYTHONPATH") else []))
+    return env
+
+
+def spawn_child(script: str, *args: str, devices: int | None = None,
+                timeout: int = 600, expect: str | None = None
+                ) -> subprocess.CompletedProcess:
+    """Run a tests/ child script to completion; assert exit 0 and (when
+    given) that ``expect`` appears on its stdout."""
+    out = subprocess.run(
+        [sys.executable, os.path.join(REPO, "tests", script), *args],
+        env=child_env(devices), cwd=REPO, capture_output=True, text=True,
+        timeout=timeout)
+    assert out.returncode == 0, \
+        f"child {script} failed:\n{out.stdout}\n{out.stderr}"
+    if expect is not None:
+        assert expect in out.stdout, \
+            f"child {script} never printed {expect!r}:\n{out.stdout}"
+    return out
+
+
+def kill_at(script: str, *args: str, signum: int, devices: int | None = None,
+            timeout: int = 600) -> subprocess.CompletedProcess:
+    """Run a child that self-kills with ``signum`` at a scripted point (the
+    crash-injection harness, `tests/_resume_child.py`); assert it really
+    died by that signal rather than exiting."""
+    out = subprocess.run(
+        [sys.executable, os.path.join(REPO, "tests", script), *args],
+        env=child_env(devices), cwd=REPO, capture_output=True, text=True,
+        timeout=timeout)
+    assert out.returncode == -signum, \
+        (f"child {script} exited {out.returncode}, expected signal "
+         f"{signum}:\n{out.stdout}\n{out.stderr}")
+    return out
 
 
 @pytest.fixture(scope="session")

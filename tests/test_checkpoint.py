@@ -1,11 +1,15 @@
-"""Checkpoint roundtrip."""
+"""Checkpoint roundtrip, restore-side type validation, and torn-file
+behavior (DESIGN.md §13.1): a load either returns a fully validated tree or
+raises `CheckpointError` — never a silently cast or partial one."""
 import os
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
-from repro.checkpoint import load_checkpoint, save_checkpoint
+from repro.checkpoint import (CheckpointError, load_checkpoint,
+                              save_checkpoint)
 
 
 def test_roundtrip(tmp_path):
@@ -33,3 +37,86 @@ def test_atomic_overwrite(tmp_path):
     loaded, step, _ = load_checkpoint(path, like=t2)
     assert step == 2
     np.testing.assert_array_equal(np.asarray(loaded["w"]), np.ones(3))
+    # the atomic temp files are gone: only the checkpoint itself remains
+    assert os.listdir(tmp_path) == ["c.msgpack"]
+
+
+def test_dtype_mismatch_raises_instead_of_casting(tmp_path):
+    """The old behavior silently cast stored leaves to ``like``'s dtypes —
+    a checkpoint written by a different config must refuse to load."""
+    path = os.path.join(tmp_path, "c.msgpack")
+    save_checkpoint(path, {"w": jnp.arange(4, dtype=jnp.float32)})
+    with pytest.raises(CheckpointError, match="refusing to cast"):
+        load_checkpoint(path, like={"w": jnp.arange(4, dtype=jnp.bfloat16)})
+    with pytest.raises(CheckpointError, match="refusing to cast"):
+        load_checkpoint(path, like={"w": jnp.zeros((2, 2), jnp.float32)})
+    with pytest.raises(CheckpointError, match="leaves"):
+        load_checkpoint(path, like={"w": jnp.zeros(4), "b": jnp.zeros(1)})
+
+
+def test_scalar_leaf_roundtrip(tmp_path):
+    """0-d and python-scalar leaves round-trip with exact dtypes."""
+    path = os.path.join(tmp_path, "c.msgpack")
+    tree = {"f32": jnp.asarray(2.5, jnp.float32), "py_float": 2.5,
+            "py_int": 7, "i64": np.int64(3)}
+    save_checkpoint(path, tree)
+    loaded, _, _ = load_checkpoint(path, like=tree)
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(loaded)):
+        a = np.asarray(a)
+        assert np.asarray(b).dtype == a.dtype
+        assert np.array_equal(np.asarray(b), a)
+
+
+def test_empty_pytree_roundtrip(tmp_path):
+    path = os.path.join(tmp_path, "c.msgpack")
+    for empty in ({}, []):
+        save_checkpoint(path, empty, step=4, metadata={"note": "empty"})
+        loaded, step, meta = load_checkpoint(path, like=empty)
+        assert step == 4 and meta["note"] == "empty"
+        assert jax.tree.leaves(loaded) == []
+        loaded, _, _ = load_checkpoint(path)   # structure-based restore
+        assert jax.tree.leaves(loaded) == []
+
+
+def test_structure_restore_without_like(tmp_path):
+    """``like=None`` rebuilds the saved nested dict/list structure from the
+    stored skeleton (exact dtypes/bytes, no cast)."""
+    path = os.path.join(tmp_path, "c.msgpack")
+    tree = {"a": {"w": np.arange(6, dtype=np.float32).reshape(2, 3)},
+            "b": [np.int64(2), np.float64(0.5)]}
+    save_checkpoint(path, tree, step=9)
+    loaded, step, _ = load_checkpoint(path)
+    assert step == 9
+    assert set(loaded) == {"a", "b"}
+    assert loaded["a"]["w"].dtype == np.float32
+    assert np.array_equal(loaded["a"]["w"], tree["a"]["w"])
+    assert loaded["b"][0] == 2 and loaded["b"][1] == 0.5
+
+
+def test_truncated_and_corrupt_files_raise_cleanly(tmp_path):
+    path = os.path.join(tmp_path, "c.msgpack")
+    tree = {"w": np.arange(64, dtype=np.float32)}
+    save_checkpoint(path, tree)
+    blob = open(path, "rb").read()
+    for bad in (blob[: len(blob) // 2], b"\x00" * 16 + blob[16:], b""):
+        with open(path, "wb") as f:
+            f.write(bad)
+        with pytest.raises(CheckpointError, match="truncated or corrupt"):
+            load_checkpoint(path, like=tree)
+        with pytest.raises(CheckpointError):
+            load_checkpoint(path)
+
+
+def test_failed_save_leaves_no_tmp_files(tmp_path):
+    """A save whose serialization blows up must unlink its temp file — the
+    checkpoint directory never accumulates droppings (and an existing
+    checkpoint at the target path survives untouched)."""
+    path = os.path.join(tmp_path, "c.msgpack")
+    save_checkpoint(path, {"w": np.ones(3)}, step=1)
+    with pytest.raises(TypeError):
+        # object() is not msgpack-serializable -> packb raises mid-save
+        save_checkpoint(path, {"w": np.ones(3)},
+                        metadata={"bad": object()})
+    assert os.listdir(tmp_path) == ["c.msgpack"]
+    loaded, step, _ = load_checkpoint(path, like={"w": np.ones(3)})
+    assert step == 1 and np.array_equal(np.asarray(loaded["w"]), np.ones(3))

@@ -14,10 +14,6 @@
   seeds/thresholds must not retrace the cached scan (host-local here; the
   sharded path's twin assertion lives in the child).
 """
-import os
-import subprocess
-import sys
-
 import jax
 import numpy as np
 import pytest
@@ -29,8 +25,6 @@ from repro.energy import (BatteryConfig, Bernoulli, FleetConfig, MarkovSolar,
                           simulate_fleet)
 from repro.energy.fleet import FLEET_POLICIES, _run_fleet_scan
 from repro.launch.mesh import SpecMesh, production_spec_mesh
-
-_REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
 def _profile_E(n):
@@ -85,17 +79,9 @@ def test_sharded_parity_multidevice():
     """The real thing: 8 emulated CPU devices in a child process, sharded vs
     host-local bit-exactness for every policy on divisible AND padded N, a
     (data, model) mesh, and sharded jit-cache reuse."""
-    env = dict(os.environ)
-    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
-    env["JAX_PLATFORMS"] = "cpu"
-    env["PYTHONPATH"] = os.pathsep.join(
-        [os.path.join(_REPO, "src")]
-        + ([env["PYTHONPATH"]] if env.get("PYTHONPATH") else []))
-    child = os.path.join(_REPO, "tests", "_fleet_sharded_child.py")
-    out = subprocess.run([sys.executable, child], env=env, cwd=_REPO,
-                         capture_output=True, text=True, timeout=600)
-    assert out.returncode == 0, f"child failed:\n{out.stdout}\n{out.stderr}"
-    assert "sharded parity OK" in out.stdout
+    from conftest import spawn_child
+    spawn_child("_fleet_sharded_child.py", devices=8,
+                expect="sharded parity OK")
 
 
 def test_arrival_rng_is_padding_invariant():

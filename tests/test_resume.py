@@ -1,0 +1,424 @@
+"""Preemption-safe resume test layer (`repro.checkpoint.resume`,
+DESIGN.md §13).
+
+* **Crash injection** — subprocess children (``_resume_child.py``) kill
+  themselves with SIGKILL/SIGTERM at parent-randomized chunk boundaries
+  (and mid-write: the newest checkpoint is torn before dying); the
+  kill-and-resume sequence must produce telemetry, final charge, and
+  controller history bit-identical to an uninterrupted run — host-local,
+  padded, 8-device sharded, lax and pallas — with at most ONE compiled
+  chunk program per process (resume adds zero jit-cache entries).
+* **Determinism seams** — hypothesis property: ANY split of the horizon
+  into chunk sizes is bit-identical to the unchunked scan (fleet: every
+  policy; serve: every admission policy), and resuming at EVERY chunk
+  boundary through checkpoints reproduces the uninterrupted run.
+* **Checkpoint store** — retained-last-k rotation + manifest, torn-file
+  fallback to the previous retained boundary, config-hash/seed/kind
+  guards, and the obs contract: a resumed run appends a ``resume`` event
+  to the same stream instead of a second manifest.
+"""
+import dataclasses
+import json
+import os
+import random
+import signal
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from conftest import kill_at, spawn_child
+from repro.checkpoint import (CheckpointError, RunCheckpointer,
+                              load_checkpoint, pack_controller, restore_run,
+                              save_run)
+from repro.core import Policy
+from repro.energy import (AdmissionRule, BatteryConfig, Bernoulli,
+                          ControlBounds, DecodeCostModel, FleetConfig,
+                          ServerController, run_controlled, simulate_fleet)
+from repro.energy.control import BudgetRule, CadenceRule
+from repro.energy.fleet import FLEET_POLICIES, _run_fleet_scan
+from repro.obs import Obs, load_events
+from repro.serve import (BatteryGated, ChargeGated, Constant, EnergyAgnostic,
+                         QoSSpec, ServeConfig, run_serve_controlled,
+                         simulate_serve)
+from repro.serve.fleet_serve import _run_serve_scan
+
+CHILD = "_resume_child.py"
+SIGNALS = {"KILL": signal.SIGKILL, "TERM": signal.SIGTERM}
+ROUNDS, EVERY, CHUNKS = 36, 6, 6
+
+QOS = QoSSpec(prompt_tokens=64.0, full_decode_tokens=128.0,
+              short_decode_tokens=32.0)
+COST = DecodeCostModel(2.0 ** -8, 2.0 ** -9, 2.0 ** -6)
+
+
+# ------------------------------------------------------------ scenarios ----
+# Exact-arithmetic configs (zero leak, dyadic grid — the sharded-parity
+# idiom): every fp32 partial sum is exact, so interrupted and uninterrupted
+# runs must agree bitwise, not just closely.
+
+def _fleet_scenario(n=21):
+    proc = Bernoulli.create(n, prob=0.375, amount=1.25)
+    bat = BatteryConfig(capacity=2.5, leak=0.0, init_charge=0.5)
+    cfg = FleetConfig(num_clients=n, policy=Policy.SUSTAINABLE,
+                      threshold=1.5, seed=3)
+    return proc, bat, 0.75, cfg
+
+
+def _fleet_controller(n=21):
+    return ServerController(
+        T0=5, E0=[1, 2, 4], groups=np.arange(n) % 3,
+        bounds=ControlBounds(t_min=1, t_max=10, e_min=1, e_max=64),
+        rules=(CadenceRule(), BudgetRule()))
+
+
+def _serve_scenario(n=21):
+    traffic = Constant.create(n, rate=2.0)
+    harvest = Bernoulli.create(n, prob=0.375, amount=1.25)
+    bat = BatteryConfig(capacity=2.5, leak=0.0, init_charge=0.5)
+    cfg = ServeConfig(num_clients=n, seed=5)
+    return traffic, harvest, bat, cfg
+
+
+def _serve_controller():
+    return ServerController(
+        T0=4, E0=4, admit0=1.0,
+        rules=(AdmissionRule(), CadenceRule(), BudgetRule()))
+
+
+def _assert_controllers_equal(a, b):
+    pa, pb = pack_controller(a), pack_controller(b)
+    assert sorted(pa) == sorted(pb)
+    for k in pa:
+        assert np.array_equal(pa[k], pb[k]), k
+
+
+# ------------------------------------------------------- crash injection ---
+
+def _child_args(kind, ckpt, out=None, *, backend="lax", pad_to=None,
+                resume=False, kill=None, sig="KILL", corrupt="none",
+                mesh=False):
+    args = ["--kind", kind, "--rounds", str(ROUNDS),
+            "--control-every", str(EVERY), "--backend", backend]
+    if mesh:
+        args += ["--mesh"]
+    if ckpt:
+        args += ["--ckpt", ckpt]
+    if out:
+        args += ["--out", out]
+    if pad_to:
+        args += ["--pad-to", str(pad_to)]
+    if resume:
+        args += ["--resume"]
+    if kill:
+        args += ["--kill-after-saves", str(kill), "--signal", sig,
+                 "--corrupt", corrupt]
+    return args
+
+
+def _npz_equal(a_path, b_path):
+    with np.load(a_path) as a, np.load(b_path) as b:
+        assert sorted(a.files) == sorted(b.files)
+        for k in a.files:
+            assert a[k].dtype == b[k].dtype, k
+            assert np.array_equal(a[k], b[k]), k
+
+
+def _crash_and_resume(tmp_path, kind, *, backend="lax", devices=None,
+                      pad_to=None, sig="KILL", corrupt="none", seed=0,
+                      kills=2):
+    """Uninterrupted baseline (no checkpointing at all), then a sequence of
+    runs killed at randomized chunk boundaries, then a final resumed run to
+    completion — whose output must be bit-identical to the baseline."""
+    rnd = random.Random(seed)
+    mesh = devices is not None
+    base, out = str(tmp_path / "base.npz"), str(tmp_path / "run.npz")
+    ckpt = str(tmp_path / "ckpt")
+    spawn_child(CHILD, *_child_args(kind, None, base, backend=backend,
+                                    pad_to=pad_to, mesh=mesh),
+                devices=devices, expect="resume child OK")
+    done, resume = 0, False
+    for _ in range(kills):
+        if CHUNKS - done < 2:
+            break
+        j = rnd.randint(1, CHUNKS - done - 1)
+        kill_at(CHILD, *_child_args(kind, ckpt, backend=backend,
+                                    pad_to=pad_to, mesh=mesh, resume=resume,
+                                    kill=j, sig=sig, corrupt=corrupt),
+                signum=SIGNALS[sig], devices=devices)
+        # a torn final save falls back one boundary on the next resume
+        done += j if corrupt == "none" else j - 1
+        resume = True
+    spawn_child(CHILD, *_child_args(kind, ckpt, out, backend=backend,
+                                    pad_to=pad_to, mesh=mesh, resume=True),
+                devices=devices, expect="resume child OK")
+    _npz_equal(base, out)
+
+
+@pytest.mark.parametrize("kind", ["fleet", "serve"])
+def test_crash_resume_host_local(tmp_path, kind):
+    """SIGKILL at two randomized chunk boundaries, host-local lax."""
+    _crash_and_resume(tmp_path, kind, sig="KILL",
+                      seed=0 if kind == "fleet" else 1)
+
+
+def test_crash_resume_padded_pallas_sigterm(tmp_path):
+    """SIGTERM on the padded (21→24) pallas path: the kill-and-resume
+    contract holds across backend and phantom-lane padding."""
+    _crash_and_resume(tmp_path, "fleet", backend="pallas", pad_to=24,
+                      sig="TERM", seed=7, kills=1)
+
+
+def test_crash_resume_midwrite_torn_file(tmp_path):
+    """Kill 'mid-write': the newest checkpoint is truncated before dying,
+    so resume must fall back to the previous retained boundary — and still
+    reproduce the uninterrupted run bit-exactly."""
+    _crash_and_resume(tmp_path, "fleet", corrupt="truncate", seed=11,
+                      kills=2)
+
+
+def test_crash_resume_sharded_fleet(tmp_path):
+    """SIGKILL + resume under 8 emulated devices (mesh-sharded client axis,
+    padded 21→24); resumed output bit-identical to the uninterrupted
+    sharded run."""
+    _crash_and_resume(tmp_path, "fleet", devices=8, seed=3, kills=1)
+
+
+def test_crash_resume_sharded_serve_pallas(tmp_path):
+    """The serve loop, sharded AND on the pallas backend, killed and
+    resumed."""
+    _crash_and_resume(tmp_path, "serve", devices=8, backend="pallas",
+                      seed=5, kills=1)
+
+
+# --------------------------------------------- resume at every boundary ----
+
+def test_resume_at_every_boundary_fleet(tmp_path):
+    """Extending the horizon one chunk at a time through checkpoint resume
+    — stopping and restarting at EVERY boundary — reproduces the
+    uninterrupted run bitwise and never retraces the chunk scan."""
+    proc, bat, cost, cfg = _fleet_scenario()
+    base, cbase = run_controlled(proc, bat, cost, cfg, ROUNDS,
+                                 _fleet_controller(), control_every=EVERY)
+    size = _run_fleet_scan._cache_size()
+    d = str(tmp_path / "ckpt")
+    for b in range(EVERY, ROUNDS + 1, EVERY):
+        res, ctl = run_controlled(proc, bat, cost, cfg, b,
+                                  _fleet_controller(), control_every=EVERY,
+                                  checkpoint=d, resume=True)
+    assert _run_fleet_scan._cache_size() == size, \
+        "boundary-by-boundary resume grew the jit cache"
+    for k in base.stats:
+        assert np.array_equal(base.stats[k], res.stats[k]), k
+    assert np.array_equal(np.asarray(base.final_charge),
+                          np.asarray(res.final_charge))
+    _assert_controllers_equal(cbase, ctl)
+
+
+def test_resume_at_every_boundary_serve(tmp_path):
+    traffic, harvest, bat, cfg = _serve_scenario()
+    pol = BatteryGated.create(cfg.num_clients)
+    kw = dict(train_cost=0.25, control_every=EVERY)
+    base, cbase = run_serve_controlled(traffic, harvest, bat, COST, QOS, pol,
+                                       cfg, ROUNDS, _serve_controller(), **kw)
+    size = _run_serve_scan._cache_size()
+    d = str(tmp_path / "ckpt")
+    for b in range(EVERY, ROUNDS + 1, EVERY):
+        res, ctl = run_serve_controlled(traffic, harvest, bat, COST, QOS,
+                                        pol, cfg, b, _serve_controller(),
+                                        checkpoint=d, resume=True, **kw)
+    assert _run_serve_scan._cache_size() == size
+    for k in base.stats:
+        assert np.array_equal(base.stats[k], res.stats[k]), k
+    assert np.array_equal(np.asarray(base.final_charge),
+                          np.asarray(res.final_charge))
+    _assert_controllers_equal(cbase, ctl)
+
+
+# ---------------------------------------------- chunk-split property -------
+
+@settings(max_examples=8, deadline=None)
+@given(st.lists(st.integers(1, 9), min_size=1, max_size=5),
+       st.sampled_from(FLEET_POLICIES))
+def test_any_chunk_split_matches_unchunked_fleet(splits, policy):
+    """ANY split of the horizon into chunk sizes, threaded through
+    ``state``/``round_offset``, is bit-identical to the unchunked scan —
+    the seam every checkpoint boundary rests on — for every fleet
+    policy."""
+    n = 16
+    proc = Bernoulli.create(n, prob=0.375, amount=1.25)
+    bat = BatteryConfig(capacity=2.5, leak=0.0, init_charge=0.5)
+    cfg = FleetConfig(num_clients=n, policy=policy, threshold=1.5, seed=2)
+    E = np.full(n, 2)
+    R = sum(splits)
+    base = simulate_fleet(proc, bat, 0.75, cfg, R, E=E)
+    state, off, parts = None, 0, []
+    for c in splits:
+        r = simulate_fleet(proc, bat, 0.75, cfg, c, E=E, state=state,
+                           round_offset=off)
+        state, off = r.final_state, off + c
+        parts.append(r.stats)
+    for k in base.stats:
+        assert np.array_equal(base.stats[k],
+                              np.concatenate([p[k] for p in parts])), k
+    assert np.array_equal(np.asarray(base.final_charge),
+                          np.asarray(state[0]))
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.lists(st.integers(1, 9), min_size=1, max_size=5),
+       st.sampled_from(["agnostic", "gated", "charge"]))
+def test_any_chunk_split_matches_unchunked_serve(splits, pol_name):
+    """The serve twin, over every admission policy."""
+    n = 16
+    traffic, harvest, bat, cfg = _serve_scenario(n)
+    pol = {"agnostic": EnergyAgnostic(),
+           "gated": BatteryGated.create(n),
+           "charge": ChargeGated.create(n)}[pol_name]
+    R = sum(splits)
+    base = simulate_serve(traffic, harvest, bat, COST, QOS, pol, cfg, R)
+    state, off, parts = None, 0, []
+    for c in splits:
+        r = simulate_serve(traffic, harvest, bat, COST, QOS, pol, cfg, c,
+                           state=state, epoch_offset=off)
+        state, off = r.final_state, off + c
+        parts.append(r.stats)
+    for k in base.stats:
+        assert np.array_equal(base.stats[k],
+                              np.concatenate([p[k] for p in parts])), k
+    assert np.array_equal(np.asarray(base.final_charge),
+                          np.asarray(state[0]))
+
+
+# --------------------------------------------------- store & guards --------
+
+def test_rotation_retains_last_k_and_manifest(tmp_path):
+    ck = RunCheckpointer(tmp_path / "r", keep=3)
+    for s in range(1, 7):
+        ck.save(s, {"x": np.arange(s)}, {"kind": "t", "config_hash": "h"})
+    assert ck.steps() == [4, 5, 6]
+    with open(ck.manifest_path) as f:
+        man = json.load(f)
+    assert man["steps"] == [4, 5, 6]
+    assert man["kind"] == "t" and man["config_hash"] == "h"
+    assert man["keep"] == 3
+    tree, step, meta = ck.restore_payload()
+    assert step == 6 and np.array_equal(tree["x"], np.arange(6))
+    # only the 3 retained files + MANIFEST live in the directory (no tmp
+    # droppings from the atomic writes)
+    assert sorted(os.listdir(ck.directory)) == [
+        "MANIFEST.json", "ckpt-00000004.msgpack", "ckpt-00000005.msgpack",
+        "ckpt-00000006.msgpack"]
+
+
+def test_torn_file_falls_back_to_previous_boundary(tmp_path):
+    ck = RunCheckpointer(tmp_path / "r", keep=3)
+    ck.save(1, {"x": np.arange(4.0)})
+    ck.save(2, {"x": np.arange(8.0)})
+    p2 = ck.path(2)
+    with open(p2, "r+b") as f:
+        f.truncate(os.path.getsize(p2) // 2)
+    with pytest.raises(CheckpointError, match="truncated or corrupt"):
+        load_checkpoint(p2)
+    tree, step, _ = ck.restore_payload()
+    assert step == 1 and np.array_equal(tree["x"], np.arange(4.0))
+    p1 = ck.path(1)
+    with open(p1, "r+b") as f:
+        f.write(b"\x00" * 32)
+    assert ck.restore_payload() is None   # every retained file torn
+
+
+def test_restore_run_guards(tmp_path):
+    state = {"charge": np.arange(4, dtype=np.float32)}
+    stats = {"a": np.arange(5.0)}
+    ck = RunCheckpointer(tmp_path / "g")
+    save_run(ck, kind="fleet_controlled", round_offset=5, state=state,
+             stats=stats, config_hash="abc", seed=1)
+    # wrong kind
+    with pytest.raises(CheckpointError, match="expected 'serve_controlled'"):
+        restore_run(ck, kind="serve_controlled", state_like=state,
+                    config_hash="abc", seed=1)
+    # wrong config hash
+    with pytest.raises(CheckpointError, match="different config"):
+        restore_run(ck, kind="fleet_controlled", state_like=state,
+                    config_hash="zzz", seed=1)
+    # wrong RNG seed
+    with pytest.raises(CheckpointError, match="RNG base key"):
+        restore_run(ck, kind="fleet_controlled", state_like=state,
+                    config_hash="abc", seed=2)
+    # wrong state dtype
+    bad = {"charge": np.arange(4, dtype=np.float64)}
+    with pytest.raises(CheckpointError, match="refusing to cast"):
+        restore_run(ck, kind="fleet_controlled", state_like=bad,
+                    config_hash="abc", seed=1)
+    rc = restore_run(ck, kind="fleet_controlled", state_like=state,
+                     config_hash="abc", seed=1)
+    assert rc.round_offset == 5
+    assert np.array_equal(np.asarray(rc.state["charge"]), state["charge"])
+    assert np.array_equal(rc.stats["a"], stats["a"])
+    # empty directory → None, not an error
+    assert restore_run(RunCheckpointer(tmp_path / "empty"), kind="x",
+                       state_like=state) is None
+
+
+def test_resume_rejects_config_change_end_to_end(tmp_path):
+    proc, bat, cost, cfg = _fleet_scenario()
+    d = str(tmp_path / "ck")
+    run_controlled(proc, bat, cost, cfg, 12, _fleet_controller(),
+                   control_every=EVERY, checkpoint=d)
+    cfg2 = dataclasses.replace(cfg, threshold=1.25)
+    with pytest.raises(CheckpointError, match="different config"):
+        run_controlled(proc, bat, cost, cfg2, 24, _fleet_controller(),
+                       control_every=EVERY, checkpoint=d, resume=True)
+
+
+def test_checkpoint_argument_guards(tmp_path):
+    proc, bat, cost, cfg = _fleet_scenario()
+    with pytest.raises(ValueError, match="resume=True requires"):
+        run_controlled(proc, bat, cost, cfg, 6, _fleet_controller(),
+                       resume=True)
+    with pytest.raises(ValueError, match="record_masks"):
+        run_controlled(proc, bat, cost, cfg, 6, _fleet_controller(),
+                       checkpoint=str(tmp_path / "ck"), record_masks=True)
+
+
+def test_resume_past_horizon_returns_restored_run(tmp_path):
+    """Resuming a run whose checkpoint already covers the horizon returns
+    the stored result without simulating (or compiling) anything."""
+    proc, bat, cost, cfg = _fleet_scenario()
+    d = str(tmp_path / "ck")
+    base, _ = run_controlled(proc, bat, cost, cfg, 12, _fleet_controller(),
+                             control_every=EVERY, checkpoint=d)
+    size = _run_fleet_scan._cache_size()
+    res, _ = run_controlled(proc, bat, cost, cfg, 12, _fleet_controller(),
+                            control_every=EVERY, checkpoint=d, resume=True)
+    assert _run_fleet_scan._cache_size() == size
+    for k in base.stats:
+        assert np.array_equal(base.stats[k], res.stats[k]), k
+    assert np.array_equal(np.asarray(base.final_charge),
+                          np.asarray(res.final_charge))
+
+
+def test_obs_resume_event_not_second_manifest(tmp_path):
+    """A resumed run re-attaches the SAME event stream: one manifest (from
+    the original run), a ``resume`` event at the restored round, seq
+    monotone across both processes' appends."""
+    proc, bat, cost, cfg = _fleet_scenario()
+    d, od = str(tmp_path / "ck"), str(tmp_path / "obs")
+    with Obs(od) as obs:
+        run_controlled(proc, bat, cost, cfg, 12, _fleet_controller(),
+                       control_every=EVERY, checkpoint=d, obs=obs)
+    with Obs(od) as obs:
+        run_controlled(proc, bat, cost, cfg, 24, _fleet_controller(),
+                       control_every=EVERY, checkpoint=d, resume=True,
+                       obs=obs)
+        path = obs.log.path
+    events = load_events(path)
+    kinds = [e["kind"] for e in events]
+    assert kinds[0] == "manifest" and kinds.count("manifest") == 1
+    assert kinds.count("resume") == 1
+    r = next(e for e in events if e["kind"] == "resume")
+    assert r["run_kind"] == "fleet_controlled" and r["round"] == 12
+    assert sum(k == "round" for k in kinds) == 24
+    seqs = [e["seq"] for e in events]
+    assert seqs == list(range(len(seqs))), "seq restarted on resume"

@@ -3,10 +3,6 @@ RNG contracts, admission semantics, the serving simulator's request/energy
 conservation laws, jit/eager and padded/sharded parity, retrace regression,
 the train-vs-serve battery competition, and the closed-loop admission
 controller."""
-import os
-import subprocess
-import sys
-
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -21,8 +17,6 @@ from repro.serve import (BatteryGated, ChargeGated, Constant, DiurnalPoisson,
                          TrainLoad, run_serve_controlled, simulate_serve)
 from repro.serve.fleet_serve import _run_serve_scan
 from repro.serve.qos import DEGRADED, FULL, SHED
-
-_REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 QOS = QoSSpec(prompt_tokens=64.0, full_decode_tokens=128.0,
               short_decode_tokens=32.0)
@@ -277,17 +271,9 @@ def test_sharded_parity_multidevice():
     """8 emulated CPU devices in a child process: sharded vs host-local
     bit-exactness for every admission policy on divisible AND padded N, a
     (data, model) mesh, and sharded jit-cache reuse."""
-    env = dict(os.environ)
-    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
-    env["JAX_PLATFORMS"] = "cpu"
-    env["PYTHONPATH"] = os.pathsep.join(
-        [os.path.join(_REPO, "src")]
-        + ([env["PYTHONPATH"]] if env.get("PYTHONPATH") else []))
-    child = os.path.join(_REPO, "tests", "_serve_sharded_child.py")
-    out = subprocess.run([sys.executable, child], env=env, cwd=_REPO,
-                         capture_output=True, text=True, timeout=600)
-    assert out.returncode == 0, f"child failed:\n{out.stdout}\n{out.stderr}"
-    assert "serve sharded parity OK" in out.stdout
+    from conftest import spawn_child
+    spawn_child("_serve_sharded_child.py", devices=8,
+                expect="serve sharded parity OK")
 
 
 # ------------------------------------------------------ retrace regression --
