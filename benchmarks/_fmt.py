@@ -4,10 +4,15 @@ One source of truth for the fixed-width text tables (`benchmarks.roofline`)
 and the markdown tables (`benchmarks.report`) that used to be hand-rolled
 in each module, plus `manifest_line` — the renderer for the provenance
 manifest block PR 7 embeds in every ``BENCH_*.json`` (`repro.obs.events
-.RunManifest`).  All of it is stdlib-only: `benchmarks.run` imports the
-roofline module without repro on the path.
+.RunManifest`) — and `append_history`, the one-line-per-run JSONL appender
+behind the committed ``BENCH_history.jsonl`` trajectory file that
+``repro.obs.report trend`` renders.  All of it is stdlib-only:
+`benchmarks.run` imports the roofline module without repro on the path.
 """
 from __future__ import annotations
+
+import json
+import time
 
 
 def text_table(headers: list[str], rows: list[list], align: str | None = None
@@ -53,3 +58,28 @@ def manifest_line(bench: dict) -> str:
             f"devices={man.get('device_count', '?')} "
             f"mesh={mesh if mesh else 'host-local'} "
             f"config_hash={man.get('config_hash', '?')}")
+
+
+def append_history(path: str, bench: str, headline: dict,
+                   manifest: dict | None = None, **extra) -> dict:
+    """Append one bench-trajectory record to a ``BENCH_history.jsonl``.
+
+    One JSON line per bench run: the bench name, the manifest's git rev and
+    run id (provenance — which commit produced these numbers), a UTC
+    timestamp, and a flat ``headline`` dict of the few numbers worth
+    tracking across commits.  ``repro.obs.report trend`` renders the file;
+    records are append-only so the committed history is a merge-friendly
+    log, not a mutable table.  Returns the record written.
+    """
+    man = manifest if isinstance(manifest, dict) else {}
+    rec = {
+        "bench": bench,
+        "git_rev": man.get("git_rev"),
+        "run_id": man.get("run_id"),
+        "recorded": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
+        "headline": {k: v for k, v in headline.items() if v is not None},
+    }
+    rec.update(extra)
+    with open(path, "a") as f:
+        f.write(json.dumps(rec) + "\n")
+    return rec

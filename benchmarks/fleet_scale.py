@@ -190,12 +190,53 @@ def bench_controller(n: int, rounds: int, control_every: int = 10,
     }
 
 
+def bench_dist(n: int, rounds: int, regime: str, obs=None) -> dict:
+    """Distributional probe (DESIGN.md §14): one ``hist=True`` run per
+    harvest regime streams per-round SoC/spend/streak histograms into the
+    obs log (CI renders them with ``report dist``) and distills the
+    depletion tail — p95(frac_depleted) plus the SoC/streak histogram
+    quantiles — into the ``percentiles`` tripwire section, so a fattening
+    tail fails bench-diff even when every mean stays flat."""
+    from repro.obs import hist as hist_lib
+
+    day_mean = {"sunny": 1.1, "drought": 0.55}[regime]
+    proc = MarkovSolar.create(n, p_stay_day=0.6, p_stay_night=0.95,
+                              day_mean=day_mean)
+    bat = BatteryConfig(capacity=2.0, leak=0.01, init_charge=0.5)
+    E = np.asarray(EnergyProfile(n).cycles())
+    cfg = FleetConfig(num_clients=n, policy=Policy.SUSTAINABLE, seed=0)
+    t0 = time.perf_counter()
+    res = simulate_fleet(proc, bat, 1.0, cfg, rounds, E=E, obs=obs,
+                         hist=True)
+    wall = time.perf_counter() - t0
+    fd = np.asarray(res.stats["frac_depleted"]).reshape(-1)
+    rec = {
+        "scan": "fleet", "regime": regime, "num_clients": n,
+        "rounds": rounds, "policy": cfg.policy.value,
+        "run_s": round(wall, 4),
+        "mean_frac_depleted": float(fd.mean()),
+        "p95_frac_depleted": float(np.percentile(fd, 95)),
+    }
+    for name in ("hist_soc", "hist_streak"):
+        spec = hist_lib.SPECS_BY_NAME[name]
+        counts = np.asarray(res.stats[name]).reshape(-1, spec.bins).sum(0)
+        q = hist_lib.quantiles_from_counts(counts, spec)
+        rec[f"{name}_p50"] = q["p50"]
+        rec[f"{name}_p95"] = q["p95"]
+    return rec
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="CI-sized sweep (seconds, not minutes)")
     ap.add_argument("--out", default="BENCH_fleet.json")
     ap.add_argument("--rounds", type=int, default=100)
+    ap.add_argument("--history", default=None,
+                    help="append this run's headline numbers (+ manifest "
+                         "git rev) as one JSON line to the given "
+                         "BENCH_history.jsonl — the committed bench "
+                         "trajectory `repro.obs.report trend` renders")
     ap.add_argument("--obs-dir", default=None,
                     help="also stream bench progress as a repro.obs JSONL "
                          "event log (manifest + per-section spans + "
@@ -257,6 +298,7 @@ def main():
         combos = [(Policy.THRESHOLD, "bernoulli"), (Policy.SUSTAINABLE, "solar")]
         sharded_sizes = [200_000]
         ctrl_n = 20_000
+        dist_n = 20_000
     else:
         sizes = [1_000, 100_000, 1_000_000]
         combos = [(Policy.THRESHOLD, "bernoulli"),
@@ -264,6 +306,7 @@ def main():
                   (Policy.SUSTAINABLE, "solar")]
         sharded_sizes = [1_000_000, 10_000_000]
         ctrl_n = 200_000
+        dist_n = 200_000
 
     results = []
     for n in sizes:
@@ -320,6 +363,23 @@ def main():
               f"speedup={rec['speedup_fused_vs_unfused']:.2f}x  "
               f"bytes-model={rec['modeled_bytes_ratio']:.2f}x", flush=True)
 
+    # distributional probe: sunny vs drought depletion tails — the fresh
+    # side of the `percentiles` bench-diff section, and (with --obs-dir)
+    # the hist-event stream behind CI's `report dist` markdown artifact
+    percentiles = []
+    for regime in ("sunny", "drought"):
+        with _span("percentiles"):
+            rec = cached("percentiles", len(percentiles),
+                         lambda r=regime: bench_dist(dist_n, args.rounds, r,
+                                                     obs=obs))
+        percentiles.append(rec)
+        _note("percentiles", rec)
+        print(f"dist N={dist_n:,} {regime:>8}: frac_depleted "
+              f"mean={rec['mean_frac_depleted']:.3f} "
+              f"p95={rec['p95_frac_depleted']:.3f}  "
+              f"soc p50={rec['hist_soc_p50']:.3f}  "
+              f"streak p95={rec['hist_streak_p95']:.0f}", flush=True)
+
     with _span("controller"):
         # the controlled run inside the record is ALSO chunk-checkpointed
         # (its own subdirectory): a kill mid-controller-run resumes from the
@@ -339,12 +399,30 @@ def main():
     out = {"bench": "fleet_scale", "smoke": args.smoke, "rounds": args.rounds,
            "devices": n_dev, "manifest": manifest.to_dict(),
            "results": results, "sharded": sharded,
-           "round_step": round_step, "controller": ctrl_rec}
+           "round_step": round_step, "percentiles": percentiles,
+           "controller": ctrl_rec}
     with open(args.out, "w") as f:
         json.dump(out, f, indent=1)
     if obs is not None:
         obs.close()
     print(f"wrote {args.out}")
+
+    if args.history:
+        try:                              # `python -m benchmarks.fleet_scale`
+            from benchmarks._fmt import append_history
+        except ImportError:               # `python benchmarks/fleet_scale.py`
+            from _fmt import append_history
+        drought = next(r for r in percentiles if r["regime"] == "drought")
+        append_history(args.history, "fleet_scale", {
+            "max_client_rounds_per_s": max(r["client_rounds_per_s"]
+                                           for r in results),
+            "speedup_fused_vs_unfused_1e7":
+                round_step[-1]["speedup_fused_vs_unfused"],
+            "controlled_frac_depleted":
+                ctrl_rec["controlled_frac_depleted"],
+            "drought_p95_frac_depleted": drought["p95_frac_depleted"],
+        }, out["manifest"], smoke=args.smoke)
+        print(f"appended headline to {args.history}")
 
 
 if __name__ == "__main__":

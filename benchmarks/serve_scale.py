@@ -227,12 +227,56 @@ def bench_admission(n: int, epochs: int, control_every: int = 24,
     return out
 
 
+def bench_dist(n: int, epochs: int, regime: str, obs=None) -> dict:
+    """Distributional probe (DESIGN.md §14), serve twin of
+    `fleet_scale.bench_dist`: one ``hist=True`` serving run per solar
+    regime streams per-epoch SoC/spend/streak histograms into the obs log
+    and distills the depletion tail into the ``percentiles`` bench-diff
+    section."""
+    from repro.obs import hist as hist_lib
+
+    day_mean = {"sunny": 3.0, "drought": 1.2}[regime]
+    traffic = DiurnalPoisson.create(n, base=1.0, swing=0.9,
+                                    phase=np.arange(n) % 24)
+    harvest = MarkovSolar.create(n, p_stay_day=0.9, p_stay_night=0.9,
+                                 day_mean=day_mean)
+    bat = BatteryConfig(capacity=8.0, leak=0.01, init_charge=2.0)
+    pol = BatteryGated.create(n, hi=2.0, lo=1.5)
+    cfg = ServeConfig(num_clients=n, seed=0)
+    t0 = time.perf_counter()
+    res = simulate_serve(traffic, harvest, bat, COST, QOS, pol, cfg, epochs,
+                         obs=obs, hist=True)
+    wall = time.perf_counter() - t0
+    fd = np.asarray(res.stats["frac_depleted"]).reshape(-1)
+    offered = max(float(res.stats["offered"].sum()), 1e-9)
+    rec = {
+        "scan": "serve", "regime": regime, "num_clients": n,
+        "epochs": epochs, "policy": "gated",
+        "run_s": round(wall, 4),
+        "shed_rate": float(res.stats["shed"].sum() / offered),
+        "mean_frac_depleted": float(fd.mean()),
+        "p95_frac_depleted": float(np.percentile(fd, 95)),
+    }
+    for name in ("hist_soc", "hist_streak"):
+        spec = hist_lib.SPECS_BY_NAME[name]
+        counts = np.asarray(res.stats[name]).reshape(-1, spec.bins).sum(0)
+        q = hist_lib.quantiles_from_counts(counts, spec)
+        rec[f"{name}_p50"] = q["p50"]
+        rec[f"{name}_p95"] = q["p95"]
+    return rec
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="CI-sized sweep (seconds, not minutes)")
     ap.add_argument("--out", default="BENCH_serve.json")
     ap.add_argument("--epochs", type=int, default=96)
+    ap.add_argument("--history", default=None,
+                    help="append this run's headline numbers (+ manifest "
+                         "git rev) as one JSON line to the given "
+                         "BENCH_history.jsonl — the committed bench "
+                         "trajectory `repro.obs.report trend` renders")
     ap.add_argument("--obs-dir", default=None,
                     help="also stream bench progress as a repro.obs JSONL "
                          "event log (manifest + per-section spans + "
@@ -293,12 +337,14 @@ def main():
         # 8-device emulated job
         sharded = [(1_000_000, max(50, args.epochs // 2))]
         adm_n = 20_000
+        dist_n = 20_000
     else:
         sizes = [1_000, 100_000, 1_000_000]
         combos = [("diurnal", "gated"), ("diurnal", "agnostic"),
                   ("mmpp", "gated")]
         sharded = [(1_000_000, args.epochs), (10_000_000, args.epochs)]
         adm_n = 200_000
+        dist_n = 200_000
 
     results = []
     for n in sizes:
@@ -353,6 +399,23 @@ def main():
               f"speedup={rec['speedup_fused_vs_unfused']:.2f}x  "
               f"bytes-model={rec['modeled_bytes_ratio']:.2f}x", flush=True)
 
+    # distributional probe: sunny vs drought depletion tails — the fresh
+    # side of the `percentiles` bench-diff section, and (with --obs-dir)
+    # the hist-event stream behind CI's `report dist` markdown artifact
+    percentiles = []
+    for regime in ("sunny", "drought"):
+        with _span("percentiles"):
+            rec = cached("percentiles", len(percentiles),
+                         lambda r=regime: bench_dist(dist_n, args.epochs, r,
+                                                     obs=obs))
+        percentiles.append(rec)
+        _note("percentiles", rec)
+        print(f"dist N={dist_n:,} {regime:>8}: frac_depleted "
+              f"mean={rec['mean_frac_depleted']:.3f} "
+              f"p95={rec['p95_frac_depleted']:.3f}  "
+              f"soc p50={rec['hist_soc_p50']:.3f}  "
+              f"streak p95={rec['hist_streak_p95']:.0f}", flush=True)
+
     with _span("admission"):
         # the controlled run inside the record is ALSO chunk-checkpointed
         # (its own subdirectory): a kill mid-run resumes from the last
@@ -373,12 +436,30 @@ def main():
     out = {"bench": "serve_scale", "smoke": args.smoke, "epochs": args.epochs,
            "devices": n_dev, "manifest": manifest.to_dict(),
            "results": results, "sharded": sharded_results,
-           "round_step": round_step, "admission": adm}
+           "round_step": round_step, "percentiles": percentiles,
+           "admission": adm}
     with open(args.out, "w") as f:
         json.dump(out, f, indent=1)
     if obs is not None:
         obs.close()
     print(f"wrote {args.out}")
+
+    if args.history:
+        try:                              # `python -m benchmarks.serve_scale`
+            from benchmarks._fmt import append_history
+        except ImportError:               # `python benchmarks/serve_scale.py`
+            from _fmt import append_history
+        drought = next(r for r in percentiles if r["regime"] == "drought")
+        append_history(args.history, "serve_scale", {
+            "max_client_epochs_per_s": max(r["client_epochs_per_s"]
+                                           for r in results),
+            "speedup_fused_vs_unfused_1e7":
+                round_step[-1]["speedup_fused_vs_unfused"],
+            "controlled_unanswered_rate":
+                adm["controlled"]["unanswered_rate"],
+            "drought_p95_frac_depleted": drought["p95_frac_depleted"],
+        }, out["manifest"], smoke=args.smoke)
+        print(f"appended headline to {args.history}")
 
 
 if __name__ == "__main__":

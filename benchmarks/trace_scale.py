@@ -153,6 +153,11 @@ def main():
                     help="CI-sized sweep (seconds, not minutes)")
     ap.add_argument("--out", default="BENCH_traces.json")
     ap.add_argument("--epochs", type=int, default=96)
+    ap.add_argument("--history", default=None,
+                    help="append this run's headline numbers (+ manifest "
+                         "git rev) as one JSON line to the given "
+                         "BENCH_history.jsonl — the committed bench "
+                         "trajectory `repro.obs.report trend` renders")
     ap.add_argument("--obs-dir", default=None,
                     help="also stream bench progress as a repro.obs JSONL "
                          "event log (manifest + per-section spans + "
@@ -266,6 +271,24 @@ def main():
     if obs is not None:
         obs.close()
     print(f"wrote {args.out}")
+
+    if args.history:
+        try:                              # `python -m benchmarks.trace_scale`
+            from benchmarks._fmt import append_history
+        except ImportError:               # `python benchmarks/trace_scale.py`
+            from _fmt import append_history
+        fleet = [r for r in results if r["scan"] == "fleet"]
+        serve = [r for r in results if r["scan"] == "serve"]
+        append_history(args.history, "trace_scale", {
+            "max_client_rounds_per_s": max(r["client_rounds_per_s"]
+                                           for r in fleet),
+            "max_client_epochs_per_s": max(r["client_epochs_per_s"]
+                                           for r in serve),
+            "solar_day_mean_abs_err": round(abs(
+                cal["markov_solar"]["fitted"]["day_mean"]
+                - cal["markov_solar"]["true"]["day_mean"]), 4),
+        }, out["manifest"], smoke=args.smoke)
+        print(f"appended headline to {args.history}")
 
 
 if __name__ == "__main__":

@@ -47,6 +47,13 @@ def add_scenario_flags(parser: argparse.ArgumentParser,
                              "(manifest + per-round energy seven / serve "
                              "ledger + spans) into this directory; inspect "
                              "with `python -m repro.obs.report summary DIR`")
+    parser.add_argument("--hist", action="store_true",
+                        help="distributional telemetry (DESIGN.md §14): "
+                             "compute in-scan fixed-bin histograms of "
+                             "per-client SoC / per-round spend / the carried "
+                             "consecutive-depleted streak; streamed as "
+                             "`hist` events with --obs-dir and rendered by "
+                             "`python -m repro.obs.report dist DIR`")
     parser.add_argument("--checkpoint-dir", default=None,
                         help="save a chunk-boundary run checkpoint into this "
                              "directory (retained-last-k rotation + "

@@ -40,6 +40,16 @@ ap.add_argument("--checkpoint-dir", default=None,
 ap.add_argument("--resume", action="store_true",
                 help="resume the controlled run from the newest intact "
                      "checkpoint in --checkpoint-dir")
+ap.add_argument("--hist", action="store_true",
+                help="distributional telemetry (DESIGN.md §14): in-scan "
+                     "SoC/spend/depletion-streak histograms; prints the "
+                     "controlled run's SoC sparkline + tail quantiles")
+ap.add_argument("--depletion-signal", choices=("mean", "p95"),
+                default="mean",
+                help="which depletion statistic the control rules act on: "
+                     "the per-period mean (default) or the p95 over the "
+                     "period's rounds — the tail-aware controller reacts to "
+                     "droughts the mean smooths away")
 args = ap.parse_args()
 if args.resume and not args.checkpoint_dir:
     raise SystemExit("--resume requires --checkpoint-dir")
@@ -68,13 +78,17 @@ print(f"fleet: N={N:,}, {ROUNDS} rounds of solar drought "
 
 static = simulate_fleet(process, battery, cost, cfg, ROUNDS, E=E0, mesh=mesh)
 
+from repro.energy.control import BudgetRule, CadenceRule  # noqa: E402
+
 controller = ServerController(
     T0=cfg.local_steps, E0=profile.taus,
     groups=np.arange(N) % len(profile.taus),
+    rules=(CadenceRule(signal=args.depletion_signal),
+           BudgetRule(signal=args.depletion_signal)),
     bounds=ControlBounds(t_min=1, t_max=10, e_min=1, e_max=64))
 controlled, controller = run_controlled(
     process, battery, cost, cfg, ROUNDS, controller,
-    control_every=CONTROL_EVERY, mesh=mesh,
+    control_every=CONTROL_EVERY, mesh=mesh, hist=args.hist,
     checkpoint=args.checkpoint_dir, resume=args.resume)
 
 print(f"{'':>12} {'part%':>7} {'depleted%':>9} {'spent J':>10} {'wasted J':>10}")
@@ -93,3 +107,18 @@ print("  depl%  :", [round(100 * t["telemetry"].frac_depleted, 1)
 gain = (controlled.participation_rate.mean()
         / max(static.participation_rate.mean(), 1e-9) - 1)
 print(f"\nparticipation gain vs static schedule: {100 * gain:+.1f}%")
+
+if args.hist:
+    # whole-run SoC + drought-streak distributions from the in-scan
+    # histograms (DESIGN.md §14) — the tail the per-round means hide
+    from repro.obs.hist import SPECS_BY_NAME, quantiles_from_counts, \
+        sparkline
+    print("\ndistributional telemetry (controlled run, whole horizon):")
+    for name in ("hist_soc", "hist_streak"):
+        spec = SPECS_BY_NAME[name]
+        counts = np.asarray(controlled.stats[name]).reshape(
+            -1, spec.bins).sum(0)
+        q = quantiles_from_counts(counts, spec)
+        print(f"  {spec.buf:>10} [{spec.lo:g},{spec.hi:g}) "
+              f"|{sparkline(counts)}|  p50={q['p50']:g} p95={q['p95']:g} "
+              f"p99={q['p99']:g}")

@@ -65,7 +65,7 @@ for policy, thr in [(Policy.SUSTAINABLE, 1.0), (Policy.GREEDY, 1.0),
     cfg = FleetConfig(num_clients=N, policy=policy, threshold=thr,
                       seed=args.seed)
     res = simulate_fleet(process, battery, 1.0, cfg, ROUNDS, E=E,
-                         backend=args.backend, obs=obs)
+                         backend=args.backend, obs=obs, hist=args.hist)
     s = res.stats
     print(f"{policy.value:>12} {100*res.participation_rate.mean():7.2f} "
           f"{s['consumed'].sum():10.0f} {s['overflowed'].sum():10.0f} "

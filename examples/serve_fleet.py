@@ -90,10 +90,13 @@ obs = make_obs(args)
 runs["controlled"], controller = run_serve_controlled(
     traffic, harvest, battery, cost, qos, BatteryGated.create(N), cfg,
     EPOCHS, controller, train_cost=0.2, control_every=CONTROL_EVERY,
-    mesh=mesh, backend=args.backend, obs=obs, **checkpoint_args(args))
+    mesh=mesh, backend=args.backend, obs=obs, hist=args.hist,
+    **checkpoint_args(args))
 if obs is not None:
     obs.close()
-    print(f"obs events (controlled run) -> {obs.log.path}\n")
+    print(f"obs events (controlled run) -> {obs.log.path}"
+          + ("  (python -m repro.obs.report dist for SoC/streak quantiles)"
+             if args.hist else "") + "\n")
 
 print(f"{'':>12} {'served%':>8} {'degr%':>6} {'shed%':>6} {'miss%':>6} "
       f"{'depl%':>6} {'train%':>7} {'J/tok':>8}")

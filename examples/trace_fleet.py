@@ -98,7 +98,7 @@ for name, (h, t) in {"trace": (harvest, traffic),
     res, ctrl = run_serve_controlled(
         t, h, battery, cost, qos, BatteryGated.create(N), cfg, EPOCHS, ctrl,
         train_cost=0.2, control_every=24, backend=args.backend, obs=obs,
-        **checkpoint_args(args, run=name))
+        hist=args.hist, **checkpoint_args(args, run=name))
     results[name] = res
     s = res.stats
     off = max(s["offered"].sum(), 1e-9)
@@ -120,3 +120,7 @@ if obs is not None:
     obs.close()
     print(f"\nobs events -> {obs.log.path}  "
           f"(python -m repro.obs.report summary {args.obs_dir})")
+    if args.hist:
+        print(f"  distributional: python -m repro.obs.report dist "
+              f"{args.obs_dir}  (the depletion-tail p95 comparison above, "
+              f"recomputed from the stream)")

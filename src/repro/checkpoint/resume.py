@@ -128,14 +128,16 @@ def as_checkpointer(checkpoint, *, keep: int = 3) -> RunCheckpointer:
 # Controller (ControlState + trace) <-> arrays.
 
 _TEL_SCALARS = ("participation_rate", "frac_depleted", "overflow_frac",
-                "mean_charge", "shed_rate", "deadline_miss_rate")
+                "mean_charge", "p95_frac_depleted", "shed_rate",
+                "deadline_miss_rate")
 _TEL_GROUPS = ("group_frac_depleted", "group_participation_rate")
 
 
 def pack_controller(controller) -> dict:
     """`ServerController` knobs + full trace as a dict of arrays (the
-    telemetry objects flatten to per-field columns; per-group columns are
-    present only when every trace entry carries them)."""
+    telemetry objects flatten to per-field columns; per-group and
+    histogram-quantile columns are present only when every trace entry
+    carries them)."""
     st = controller.state
     tels = [t["telemetry"] for t in controller.trace]
     out = {
@@ -155,6 +157,18 @@ def pack_controller(controller) -> dict:
         vals = [getattr(t, f) for t in tels]
         if vals and all(v is not None for v in vals):
             out["tel_" + f] = np.asarray(vals, np.float64)
+    # hist_quantiles ({"hist_soc": {"p50": ...}, ...}) flatten to one
+    # "tel_hq_<name>_<q>" column per (histogram, quantile) — only when the
+    # whole trace carries an identical key set (hist runs do)
+    hqs = [t.hist_quantiles for t in tels]
+    if hqs and all(h is not None for h in hqs):
+        keys = [(name, q) for name in sorted(hqs[0])
+                for q in sorted(hqs[0][name])]
+        if all(sorted((n, q) for n in h for q in h[n]) == sorted(keys)
+               for h in hqs):
+            for name, q in keys:
+                out[f"tel_hq_{name}_{q}"] = np.asarray(
+                    [h[name][q] for h in hqs], np.float64)
     return out
 
 
@@ -173,10 +187,18 @@ def unpack_controller(controller, packed: dict) -> None:
     trace = []
     for i in range(k):
         kw = {f: float(np.asarray(packed["tel_" + f])[i])
-              for f in _TEL_SCALARS}
+              for f in _TEL_SCALARS if "tel_" + f in packed}
         for f in _TEL_GROUPS:
             if "tel_" + f in packed:
                 kw[f] = np.array(np.asarray(packed["tel_" + f])[i])
+        hq: dict = {}
+        for key in packed:
+            if not key.startswith("tel_hq_"):
+                continue
+            name, q = key[len("tel_hq_"):].rsplit("_", 1)
+            hq.setdefault(name, {})[q] = float(np.asarray(packed[key])[i])
+        if hq:
+            kw["hist_quantiles"] = hq
         trace.append({"T": int(np.asarray(packed["trace_T"])[i]),
                       "E_mean": float(np.asarray(packed["trace_E_mean"])[i]),
                       "admit": float(np.asarray(packed["trace_admit"])[i]),

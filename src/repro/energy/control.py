@@ -44,6 +44,7 @@ from typing import Any, Callable, Sequence
 import numpy as np
 
 from repro.energy import fleet as fleet_lib
+from repro.obs import hist as hist_lib
 
 PyTree = Any
 
@@ -100,6 +101,13 @@ class Telemetry:
     frac_depleted: float        # mean fraction unable to afford a round
     overflow_frac: float        # overflowed / harvested (wasted harvest)
     mean_charge: float
+    # distributional signals (DESIGN.md §14)
+    p95_frac_depleted: float = 0.0   # p95 over the period's per-round
+    #                                  frac_depleted values (tail rounds)
+    hist_quantiles: dict[str, dict[str, float]] | None = None
+    #   {"hist_soc": {"p50": .., "p95": .., "p99": ..}, ...} extracted from
+    #   the period-summed streamed histogram counts, when the producing run
+    #   carried hist=True telemetry
     # serving ledger (`repro.serve.fleet_serve` stats)
     shed_rate: float = 0.0          # shed / offered requests
     deadline_miss_rate: float = 0.0  # admitted-but-unaffordable / offered
@@ -116,6 +124,20 @@ class Telemetry:
         harvested = float(arr("harvested").sum())
         overflowed = float(arr("overflowed").sum())
         extra: dict = {}
+        fd = arr("frac_depleted").reshape(-1)
+        extra["p95_frac_depleted"] = (
+            float(np.percentile(fd, 95)) if fd.size else 0.0)
+        hq = {}
+        for k in stats:
+            if not hist_lib.is_hist_key(k):
+                continue
+            spec = hist_lib.SPECS_BY_NAME.get(k)
+            if spec is None:
+                continue
+            counts = arr(k).reshape(-1, spec.bins).sum(0)
+            hq[k] = hist_lib.quantiles_from_counts(counts, spec)
+        if hq:
+            extra["hist_quantiles"] = hq
         if "offered" in stats:
             offered = float(arr("offered").sum())
             extra["shed_rate"] = _div(float(arr("shed").sum()), offered)
@@ -143,6 +165,18 @@ class Telemetry:
             **extra,
         )
 
+    def depletion(self, signal: str = "mean") -> float:
+        """The depletion signal a rule acts on: the period mean (default) or
+        the p95 over the period's per-round ``frac_depleted`` (``"p95"`` —
+        tail-aware control: a fleet whose *worst* rounds deplete a third of
+        clients backs off even when the mean looks healthy)."""
+        if signal == "p95":
+            return self.p95_frac_depleted
+        if signal != "mean":
+            raise ValueError(f"unknown depletion signal {signal!r} "
+                             f"(expected 'mean' or 'p95')")
+        return self.frac_depleted
+
 
 Rule = Callable[[ControlState, Telemetry, ControlBounds], ControlState]
 
@@ -156,6 +190,11 @@ class CadenceRule:
     Depleted below ``depleted_low`` *and* overflow above ``overflow_high``
     (batteries full, harvest wasted) → the fleet can afford more local work:
     additive increase (``T + grow``).  Anywhere in between: hold.
+
+    ``signal`` selects the depletion statistic the rule reads:
+    ``"mean"`` (default, the period-mean frac_depleted) or ``"p95"``
+    (`Telemetry.p95_frac_depleted` — react to the period's worst rounds,
+    DESIGN.md §14).
     """
 
     depleted_high: float = 0.3
@@ -163,12 +202,14 @@ class CadenceRule:
     overflow_high: float = 0.2
     backoff: float = 0.5
     grow: int = 1
+    signal: str = "mean"
 
     def __call__(self, state: ControlState, tel: Telemetry,
                  bounds: ControlBounds) -> ControlState:
-        if tel.frac_depleted > self.depleted_high:
+        dep = tel.depletion(self.signal)
+        if dep > self.depleted_high:
             t = max(bounds.t_min, int(np.floor(state.T * self.backoff)))
-        elif (tel.frac_depleted < self.depleted_low
+        elif (dep < self.depleted_low
               and tel.overflow_frac > self.overflow_high):
             t = min(bounds.t_max, state.T + self.grow)
         else:
@@ -200,6 +241,11 @@ class BudgetRule:
     from its OWN group's depletion and slot slip instead — a drought in the
     τ=20 group no longer throttles the τ=1 group.  Each component is
     monotone under constant telemetry, so convergence is per-group.
+
+    ``signal`` (``"mean"``/``"p95"``) selects the fleet-wide depletion
+    statistic for the scalar branch, exactly as in `CadenceRule`; the
+    per-group branch always reads the per-group means (group histograms are
+    not carried).
     """
 
     depleted_high: float = 0.3
@@ -208,6 +254,7 @@ class BudgetRule:
     slip: float = 0.3     # escalate only when >70% of asked slots are missed
     grow: float = 2.0
     shrink: int = 1
+    signal: str = "mean"
 
     def __call__(self, state: ControlState, tel: Telemetry,
                  bounds: ControlBounds) -> ControlState:
@@ -226,12 +273,13 @@ class BudgetRule:
                 np.where(recover, np.maximum(bounds.e_min, e - self.shrink),
                          e)).astype(e.dtype)
         else:
+            dep = tel.depletion(self.signal)
             asked = float(np.mean(1.0 / np.maximum(e, 1)))
-            if (tel.frac_depleted > self.depleted_high
+            if (dep > self.depleted_high
                     and tel.participation_rate < self.slip * asked):
                 e = np.minimum(bounds.e_max,
                                np.ceil(e * self.grow).astype(e.dtype))
-            elif (tel.frac_depleted < self.depleted_low
+            elif (dep < self.depleted_low
                   and tel.overflow_frac > self.overflow_high):
                 e = np.maximum(bounds.e_min, e - self.shrink)
         return dataclasses.replace(state, E=e)
@@ -261,13 +309,16 @@ class AdmissionRule:
     shed_high: float = 0.1
     backoff: float = 2.0
     recover: float = 0.25
+    signal: str = "mean"   # depletion statistic ("mean" / "p95"), as in
+    #                        CadenceRule
 
     def __call__(self, state: ControlState, tel: Telemetry,
                  bounds: ControlBounds) -> ControlState:
-        if (tel.frac_depleted > self.depleted_high
+        dep = tel.depletion(self.signal)
+        if (dep > self.depleted_high
                 or tel.deadline_miss_rate > self.miss_high):
             a = min(bounds.admit_max, state.admit * self.backoff)
-        elif (tel.frac_depleted < self.depleted_low
+        elif (dep < self.depleted_low
               and tel.shed_rate > self.shed_high):
             a = max(bounds.admit_min, state.admit - self.recover)
         else:
@@ -361,7 +412,8 @@ def run_controlled(process, bat, cost, cfg, num_rounds: int,
                    mesh=None, phase=None,
                    record_masks: bool = False, backend: str = "lax",
                    obs=None, pad_to: int | None = None, checkpoint=None,
-                   resume: bool = False, checkpoint_every: int = 1):
+                   resume: bool = False, checkpoint_every: int = 1,
+                   hist: bool = False):
     """Closed-loop fleet horizon: `simulate_fleet` in chunks of
     ``control_every`` rounds, with the controller adapting ``T`` (round
     pricing via ``cfg.local_steps``) and per-group ``E`` between chunks.
@@ -389,6 +441,12 @@ def run_controlled(process, bat, cost, cfg, num_rounds: int,
     an existing ``obs`` stream gets a ``resume`` event, not a second
     manifest.
 
+    ``hist=True`` enables distributional telemetry (DESIGN.md §14): every
+    chunk carries the per-client depletion streak and streams the fixed-bin
+    histograms, `Telemetry` gains exact ``hist_quantiles``, checkpoints
+    persist the streak + accumulated counts (kill-and-resume stays
+    bit-exact), and rules built with ``signal="p95"`` act on tail depletion.
+
     Returns ``(FleetResult over the full horizon, controller)``.
     """
     if resume and checkpoint is None:
@@ -408,12 +466,16 @@ def run_controlled(process, bat, cost, cfg, num_rounds: int,
         cfg_hash = pytree_hash((
             "fleet_controlled", process, bat, cost, cfg, phase,
             int(control_every), controller.rules, controller.bounds,
-            controller.groups))
+            controller.groups, bool(hist)))
         if resume:
+            import jax.numpy as jnp
+            n = cfg.num_clients
+            state_like = (bat.init(n), process.init()) if not hist \
+                else (bat.init(n), jnp.zeros((n,), jnp.float32),
+                      process.init())
             rc = resume_lib.restore_run(
                 ckptr, kind="fleet_controlled", config_hash=cfg_hash,
-                state_like=(bat.init(cfg.num_clients), process.init()),
-                seed=cfg.seed, controller=controller)
+                state_like=state_like, seed=cfg.seed, controller=controller)
             if rc is not None:
                 state, start = rc.state, rc.round_offset
                 restored_stats = rc.stats
@@ -455,7 +517,8 @@ def run_controlled(process, bat, cost, cfg, num_rounds: int,
                 E=controller.client_E(cfg.num_clients),
                 phase=phase, record_masks=record_masks, mesh=mesh,
                 pad_to=pad_to, state=state, round_offset=offset,
-                groups=groups, num_groups=num_groups, backend=backend)
+                groups=groups, num_groups=num_groups, backend=backend,
+                hist=hist)
         state = res.final_state
         chunks.append(res)
         controller.update(res.stats, cfg.num_clients)
@@ -480,8 +543,15 @@ def run_controlled(process, bat, cost, cfg, num_rounds: int,
     stats = acc_stats()
     masks = (np.concatenate([np.asarray(c.masks) for c in chunks])
              if record_masks and chunks else None)
-    final_charge = chunks[-1].final_charge if chunks else state[0]
-    final_pstate = chunks[-1].final_pstate if chunks else state[1]
+    if chunks:
+        last = chunks[-1]
+        final_charge, final_streak = last.final_charge, last.final_streak
+        final_pstate = last.final_pstate
+    elif hist:
+        final_charge, final_streak, final_pstate = state
+    else:
+        (final_charge, final_pstate), final_streak = state, None
     out = fleet_lib.FleetResult(stats=stats, final_charge=final_charge,
-                                masks=masks, final_pstate=final_pstate)
+                                masks=masks, final_pstate=final_pstate,
+                                final_streak=final_streak)
     return out, controller

@@ -87,10 +87,11 @@ class FleetConfig:
 
 @dataclasses.dataclass
 class FleetResult:
-    stats: dict[str, np.ndarray | jax.Array]   # each (R,)
+    stats: dict[str, np.ndarray | jax.Array]   # each (R,) (or (R, B) hists)
     final_charge: jax.Array                    # (N,)
     masks: jax.Array | None = None             # (R, N) when recorded
     final_pstate: Any = None                   # arrival-process state after R
+    final_streak: jax.Array | None = None      # (N,) when hist telemetry on
 
     @property
     def participation_rate(self):
@@ -99,9 +100,12 @@ class FleetResult:
 
     @property
     def final_state(self):
-        """(charge, process state) — feed back via ``simulate_fleet(state=)``
-        to continue the horizon (the chunked `energy.control.run_controlled`
-        loop)."""
+        """(charge, process state) — or (charge, streak, process state) when
+        the run carried hist telemetry — feed back via
+        ``simulate_fleet(state=)`` to continue the horizon (the chunked
+        `energy.control.run_controlled` loop)."""
+        if self.final_streak is not None:
+            return self.final_charge, self.final_streak, self.final_pstate
         return self.final_charge, self.final_pstate
 
 
@@ -137,9 +141,9 @@ def _round_cost_array(cost, cfg: FleetConfig) -> jax.Array:
 
 
 def _fleet_scan_impl(process, bat, round_cost, E, phase, valid, base_key,
-                     charge0, pstate0, seed, threshold, offset, groups,
-                     policy, num_rounds, record_masks, num_groups,
-                     backend, mesh, tap=None):
+                     charge0, streak0, pstate0, seed, threshold, offset,
+                     groups, policy, num_rounds, record_masks, num_groups,
+                     backend, mesh, hist, tap=None):
     """Shared scan body of `_run_fleet_scan` and its tapped twin.  ``tap``
     (a host callback, jit-static by identity) is the opt-in `repro.obs`
     round tap: an `io_callback` that only *reads* each round's
@@ -149,7 +153,7 @@ def _fleet_scan_impl(process, bat, round_cost, E, phase, valid, base_key,
     emit = record_masks if backend == "pallas" else True
     step = partial(_fleet_round, process, bat, policy, round_cost, E, phase,
                    valid, base_key, seed, threshold, groups, num_groups,
-                   backend, mesh, emit)
+                   backend, mesh, emit, hist)
 
     def body(carry, r):
         carry, mask, stats = step(carry, r)
@@ -164,16 +168,17 @@ def _fleet_scan_impl(process, bat, round_cost, E, phase, valid, base_key,
             stats = dict(stats, mask=mask)
         return carry, stats
 
-    return jax.lax.scan(body, (charge0, pstate0),
+    carry0 = (charge0, streak0, pstate0) if hist else (charge0, pstate0)
+    return jax.lax.scan(body, carry0,
                         offset + jnp.arange(num_rounds, dtype=jnp.int32))
 
 
 @partial(jax.jit, static_argnames=("policy", "num_rounds", "record_masks",
-                                   "num_groups", "backend", "mesh"))
+                                   "num_groups", "backend", "mesh", "hist"))
 def _run_fleet_scan(process, bat, round_cost, E, phase, valid, base_key,
-                    charge0, pstate0, seed, threshold, offset, groups=None, *,
-                    policy, num_rounds, record_masks, num_groups=None,
-                    backend="lax", mesh=None):
+                    charge0, streak0, pstate0, seed, threshold, offset,
+                    groups=None, *, policy, num_rounds, record_masks,
+                    num_groups=None, backend="lax", mesh=None, hist=False):
     """The whole-fleet scan, jitted ONCE per (process/battery structure,
     shapes, policy, horizon, backend): processes and `BatteryConfig` are
     registered pytrees and seed/threshold/offset are traced scalars, so
@@ -183,20 +188,24 @@ def _run_fleet_scan(process, bat, round_cost, E, phase, valid, base_key,
     are static (the mesh only reaches the trace on the pallas path, whose
     round step is an explicit `shard_map`; the lax path is partitioned by
     GSPMD from input shardings alone), so switching backends costs exactly
-    one extra cache entry."""
+    one extra cache entry.  ``hist`` is static too — the distributional
+    telemetry changes the program (streak carry + bincount reductions), so
+    enabling it costs one entry and *disabling* it costs none (the
+    ``hist=False`` program is byte-identical to the pre-hist one)."""
     return _fleet_scan_impl(process, bat, round_cost, E, phase, valid,
-                            base_key, charge0, pstate0, seed, threshold,
-                            offset, groups, policy, num_rounds, record_masks,
-                            num_groups, backend, mesh)
+                            base_key, charge0, streak0, pstate0, seed,
+                            threshold, offset, groups, policy, num_rounds,
+                            record_masks, num_groups, backend, mesh, hist)
 
 
 @partial(jax.jit, static_argnames=("policy", "num_rounds", "record_masks",
-                                   "num_groups", "backend", "mesh", "tap"))
+                                   "num_groups", "backend", "mesh", "hist",
+                                   "tap"))
 def _run_fleet_scan_tapped(process, bat, round_cost, E, phase, valid,
-                           base_key, charge0, pstate0, seed, threshold,
-                           offset, groups=None, *, policy, num_rounds,
-                           record_masks, num_groups=None, backend="lax",
-                           mesh=None, tap=None):
+                           base_key, charge0, streak0, pstate0, seed,
+                           threshold, offset, groups=None, *, policy,
+                           num_rounds, record_masks, num_groups=None,
+                           backend="lax", mesh=None, hist=False, tap=None):
     """`_run_fleet_scan` with the `repro.obs` in-scan round tap compiled in
     (an `io_callback` per round streaming the energy seven to the
     host DURING the scan).  A separate jitted function on purpose: the
@@ -204,14 +213,15 @@ def _run_fleet_scan_tapped(process, bat, round_cost, E, phase, valid,
     instrumentation (tested), and `Obs.round_tap` memoizes the callback so
     re-runs under the same Obs hit this cache too."""
     return _fleet_scan_impl(process, bat, round_cost, E, phase, valid,
-                            base_key, charge0, pstate0, seed, threshold,
-                            offset, groups, policy, num_rounds, record_masks,
-                            num_groups, backend, mesh, tap)
+                            base_key, charge0, streak0, pstate0, seed,
+                            threshold, offset, groups, policy, num_rounds,
+                            record_masks, num_groups, backend, mesh, hist,
+                            tap)
 
 
 def _fleet_round(process, bat: battery_lib.BatteryConfig, policy: Policy,
                  round_cost, E, phase, valid, base_key, seed, threshold,
-                 groups, num_groups, backend, mesh, emit, carry, r):
+                 groups, num_groups, backend, mesh, emit, hist, carry, r):
     """One round of the fleet scan; shared by the jitted scan body and the
     host-side `EnergyLoop` so the two paths are the same program.  ``seed``
     and ``threshold`` are (traceable) scalars — only ``policy`` (and the
@@ -227,13 +237,20 @@ def _fleet_round(process, bat: battery_lib.BatteryConfig, policy: Policy,
     with *global* per-client indices — the fusion boundary — and everything
     downstream runs either as plain (N,) jnp (`step_ops.run_step_lax`,
     backend ``"lax"``, the bit-exact reference) or as one fused VMEM tile
-    pass (`kernels.fleet_step`, backend ``"pallas"``)."""
-    charge, pstate = carry
+    pass (`kernels.fleet_step`, backend ``"pallas"``).  ``hist`` (static)
+    carries the per-client depletion streak in the scan state and adds the
+    fixed-bin histogram reductions (DESIGN.md §14)."""
+    if hist:
+        charge, streak, pstate = carry
+    else:
+        charge, pstate = carry
     harvest, pstate = process.sample(jax.random.fold_in(base_key, r), r, pstate)
     program, env = step_ops.fleet_step_program(
-        bat, policy, num_groups if groups is not None else None)
+        bat, policy, num_groups if groups is not None else None, hist=hist)
     env.update(charge=charge, harvest=harvest, round_cost=round_cost,
                threshold=threshold, valid=valid)
+    if hist:
+        env["streak"] = streak
     if Policy(policy) == Policy.SUSTAINABLE:
         env["want"] = scheduling.sustainable_schedule(
             jnp.asarray(seed), r, jnp.asarray(E, jnp.int32), phase)
@@ -249,10 +266,14 @@ def _fleet_round(process, bat: battery_lib.BatteryConfig, policy: Policy,
         else:
             state, emits, stats = fleet_step_kernel.fused_step_sharded(
                 program, env, mesh=mesh, **kwargs)
-        return (state["charge_out"], pstate), emits.get("mask"), stats
+        carry = (state["charge_out"], state["streak_out"], pstate) if hist \
+            else (state["charge_out"], pstate)
+        return carry, emits.get("mask"), stats
     env, stats = step_ops.run_step_lax(program, env, valid=valid,
                                        groups=groups, num_groups=num_groups)
-    return (env["charge_out"], pstate), env["mask"], stats
+    carry = (env["charge_out"], env["streak_out"], pstate) if hist \
+        else (env["charge_out"], pstate)
+    return carry, env["mask"], stats
 
 
 # ------------------------------------------------------ padding / sharding --
@@ -300,7 +321,8 @@ def simulate_fleet(process, bat: battery_lib.BatteryConfig, cost,
                    use_jit: bool = True, mesh=None, pad_to: int | None = None,
                    state=None, round_offset: int = 0, groups=None,
                    num_groups: int | None = None,
-                   backend: str = "lax", obs=None) -> FleetResult:
+                   backend: str = "lax", obs=None,
+                   hist: bool = False) -> FleetResult:
     """Simulate ``num_rounds`` global rounds of battery-gated scheduling for
     the whole fleet.
 
@@ -352,6 +374,13 @@ def simulate_fleet(process, bat: battery_lib.BatteryConfig, cost,
         separate jitted twin of the scan — results stay bit-exact and the
         un-tapped scan's jit cache is untouched; DESIGN.md §12).  ``None``
         (default) is a strict no-op.
+      hist: enable distributional telemetry (DESIGN.md §14): the stats dict
+        gains the fixed-bin `repro.obs.hist.FLEET_HIST_SPECS` histograms —
+        each an ``(R, bins)`` array of exact validity-weighted counts — and
+        the scan carries the per-client consecutive-depleted streak
+        (``state`` becomes a 3-tuple ``(charge, streak, process_state)``).
+        Static: the default ``False`` program is byte-identical to the
+        hist-less build and adds zero jit-cache entries.
 
     Returns:
       `FleetResult` with per-round aggregate telemetry (host numpy arrays).
@@ -371,8 +400,18 @@ def simulate_fleet(process, bat: battery_lib.BatteryConfig, cost,
         if num_groups is None:
             num_groups = int(np.asarray(groups).max()) + 1
     base_key = jax.random.PRNGKey(cfg.seed)
+    streak0 = jnp.zeros((n,), jnp.float32) if hist else None
     if state is None:
         charge0, pstate0 = bat.init(n), process.init()
+    elif hist:
+        if len(state) != 3:
+            raise ValueError(
+                "hist=True carries the depletion streak: pass the 3-tuple "
+                "state (charge, streak, process_state) from a hist run's "
+                "final_state, not the 2-tuple")
+        charge0, streak0, pstate0 = state
+        charge0 = jnp.asarray(charge0, jnp.float32)
+        streak0 = jnp.asarray(streak0, jnp.float32)
     else:
         charge0, pstate0 = state
         charge0 = jnp.asarray(charge0, jnp.float32)
@@ -395,14 +434,15 @@ def simulate_fleet(process, bat: battery_lib.BatteryConfig, cost,
                              f"data-axis product {axis}")
         n_pad = pad_to
     valid = (jnp.arange(n_pad) < n).astype(jnp.float32)
-    (process, bat, round_cost, E, phase, charge0, pstate0, groups) = \
-        _pad_clients((process, bat, round_cost, E, phase, charge0, pstate0,
-                      groups), n, n_pad)
+    (process, bat, round_cost, E, phase, charge0, streak0, pstate0,
+     groups) = _pad_clients(
+        (process, bat, round_cost, E, phase, charge0, streak0, pstate0,
+         groups), n, n_pad)
     if mesh is not None:
-        (process, bat, round_cost, E, phase, valid, charge0, pstate0,
-         groups) = _place_fleet(
-            (process, bat, round_cost, E, phase, valid, charge0, pstate0,
-             groups), n_pad, mesh)
+        (process, bat, round_cost, E, phase, valid, charge0, streak0,
+         pstate0, groups) = _place_fleet(
+            (process, bat, round_cost, E, phase, valid, charge0, streak0,
+             pstate0, groups), n_pad, mesh)
         base_key = jax.device_put(
             base_key, dist_sharding.shardings_of(
                 jax.sharding.PartitionSpec(), mesh))
@@ -412,37 +452,43 @@ def simulate_fleet(process, bat: battery_lib.BatteryConfig, cost,
                            seed=cfg.seed, backend=backend, mesh=mesh,
                            num_clients=n, horizon=num_rounds,
                            policy=Policy(cfg.policy).value,
-                           round_offset=round_offset)
+                           round_offset=round_offset, hist=bool(hist))
 
     # uint32: the traced seed is folded into PRNG key data downstream
     seed = jnp.uint32(cfg.seed)
     threshold = jnp.float32(cfg.threshold)
     offset = jnp.int32(round_offset)
     if use_jit and obs is not None and obs.tap:
-        (charge, pstate), stats = _run_fleet_scan_tapped(
+        carry, stats = _run_fleet_scan_tapped(
             process, bat, round_cost, E, phase, valid, base_key, charge0,
-            pstate0, seed, threshold, offset, groups, policy=cfg.policy,
-            num_rounds=num_rounds, record_masks=record_masks,
-            num_groups=num_groups, backend=backend,
-            mesh=mesh if backend == "pallas" else None,
-            tap=obs.round_tap("fleet"))
+            streak0, pstate0, seed, threshold, offset, groups,
+            policy=cfg.policy, num_rounds=num_rounds,
+            record_masks=record_masks, num_groups=num_groups,
+            backend=backend, mesh=mesh if backend == "pallas" else None,
+            hist=hist, tap=obs.round_tap("fleet"))
     elif use_jit:
-        (charge, pstate), stats = _run_fleet_scan(
+        carry, stats = _run_fleet_scan(
             process, bat, round_cost, E, phase, valid, base_key, charge0,
-            pstate0, seed, threshold, offset, groups, policy=cfg.policy,
-            num_rounds=num_rounds, record_masks=record_masks,
-            num_groups=num_groups, backend=backend,
-            mesh=mesh if backend == "pallas" else None)
+            streak0, pstate0, seed, threshold, offset, groups,
+            policy=cfg.policy, num_rounds=num_rounds,
+            record_masks=record_masks, num_groups=num_groups,
+            backend=backend, mesh=mesh if backend == "pallas" else None,
+            hist=hist)
     else:
         step = partial(_fleet_round, process, bat, cfg.policy, round_cost, E,
                        phase, valid, base_key, seed, threshold, groups,
-                       num_groups, backend, None, True)
-        carry, outs = (charge0, pstate0), []
+                       num_groups, backend, None, True, hist)
+        carry = (charge0, streak0, pstate0) if hist else (charge0, pstate0)
+        outs = []
         for r in range(num_rounds):
             carry, mask, s = step(carry, jnp.int32(round_offset + r))
             outs.append(dict(s, mask=mask) if record_masks else s)
-        charge, pstate = carry
         stats = {k: jnp.stack([o[k] for o in outs]) for k in outs[0]}
+    if hist:
+        charge, streak, pstate = carry
+        streak = streak[:n]
+    else:
+        (charge, pstate), streak = carry, None
     masks = stats.pop("mask", None) if record_masks else None
     if masks is not None:
         masks = masks[:, :n]
@@ -452,7 +498,8 @@ def simulate_fleet(process, bat: battery_lib.BatteryConfig, cost,
         # already emitted each round live from inside it
         obs.rounds("fleet", round_offset, stats)
     return FleetResult(stats=stats, final_charge=charge[:n], masks=masks,
-                       final_pstate=_slice_clients(pstate, n, n_pad))
+                       final_pstate=_slice_clients(pstate, n, n_pad),
+                       final_streak=streak)
 
 
 class EnergyLoop:
@@ -497,6 +544,6 @@ class EnergyLoop:
                        None if phase is None else jnp.asarray(phase, jnp.int32),
                        valid, jax.random.PRNGKey(seed), jnp.uint32(seed),
                        jnp.float32(self.threshold), None, None, "lax", None,
-                       True)
+                       True, False)
         self._carry, mask, stats = step(self._carry, jnp.int32(rnd))
         return np.asarray(mask), {k: float(v) for k, v in stats.items()}

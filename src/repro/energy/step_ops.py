@@ -56,6 +56,7 @@ import jax.numpy as jnp
 from repro.core.scheduling import Policy
 from repro.dist import collectives
 from repro.energy import battery as battery_lib
+from repro.obs import hist as hist_lib
 
 PyTree = Any
 
@@ -91,6 +92,9 @@ class StepProgram:
     reduced with `collectives.masked_total`/`masked_average` over the
     ``valid`` weight; ``group_totals``/``group_averages`` reduce with
     group-indicator weights (``valid * (groups == g)``, static G).
+    ``hists`` are `repro.obs.hist.HistSpec` fixed-bin histograms over
+    per-client buffers, reduced as validity-weighted bincounts — each stat
+    is a ``(bins,)`` row of exact integer counts (DESIGN.md §14).
     """
 
     name: str
@@ -101,6 +105,7 @@ class StepProgram:
     averages: tuple[tuple[str, str], ...] = ()
     group_totals: tuple[tuple[str, str], ...] = ()
     group_averages: tuple[tuple[str, str], ...] = ()
+    hists: tuple[hist_lib.HistSpec, ...] = ()
 
     def input_names(self) -> tuple[str, ...]:
         """Buffers the program consumes but never writes (the kernel's HBM
@@ -116,6 +121,9 @@ class StepProgram:
                 + self.group_totals + self.group_averages:
             if buf not in written and buf not in needed:
                 needed.append(buf)
+        for spec in self.hists:
+            if spec.buf not in written and spec.buf not in needed:
+                needed.append(spec.buf)
         return tuple(needed)
 
 
@@ -146,9 +154,47 @@ def _bind(prefix: str, obj: PyTree, env: dict):
     return names, rebuild
 
 
+# -------------------------------------------------------- distribution ops --
+def _hist_ops(bat_names: tuple[str, ...], bat_of, spend_buf: str
+              ) -> list[StepOp]:
+    """The three distributional-telemetry ops (DESIGN.md §14), appended to a
+    program when histograms are enabled:
+
+    * ``soc`` — state of charge ``charge_out / capacity`` in [0, 1).
+    * ``spend_frac`` — this round's per-client spend (``spend_buf``:
+      ``consumed`` for the fleet, ``consumed_total`` for serving) as a
+      fraction of capacity.
+    * ``streak`` — the carried consecutive-depleted streak counter:
+      ``(streak + 1) * depleted`` resets to 0 the moment a client can
+      afford the round again, else increments — drought *lengths*, not just
+      the per-round depleted fraction.  ``streak`` enters as a carried
+      input buffer and ``streak_out`` joins ``state_out``.
+
+    Elementwise and division-guarded like every other op, so they run
+    unchanged on (N,) fleet arrays and VMEM tiles.
+    """
+    def soc_fn(e):
+        cap = jnp.maximum(bat_of(e).capacity, 1e-20)
+        return (e["charge_out"] / cap,)
+
+    def spend_fn(e):
+        cap = jnp.maximum(bat_of(e).capacity, 1e-20)
+        return (e[spend_buf] / cap,)
+
+    def streak_fn(e):
+        return ((e["streak"] + 1.0) * e["depleted"],)
+
+    return [
+        StepOp("soc", ("charge_out",) + bat_names, ("soc",), soc_fn),
+        StepOp("spend_frac", (spend_buf,) + bat_names, ("spend_frac",),
+               spend_fn),
+        StepOp("streak", ("streak", "depleted"), ("streak_out",), streak_fn),
+    ]
+
+
 # ------------------------------------------------------------ fleet program --
 def fleet_step_program(bat: battery_lib.BatteryConfig, policy: Policy | str,
-                       num_groups: int | None = None
+                       num_groups: int | None = None, hist: bool = False
                        ) -> tuple[StepProgram, dict]:
     """Build the training-fleet round step (`energy.fleet._fleet_round`'s
     physics) for one policy.
@@ -157,6 +203,9 @@ def fleet_step_program(bat: battery_lib.BatteryConfig, policy: Policy | str,
     the caller adds the loop-invariant ``round_cost``/``threshold`` buffers
     and the per-round ``charge``/``harvest`` (+ ``want`` for SUSTAINABLE —
     the Algorithm-1 slot draw is RNG and stays outside the fusion boundary).
+    With ``hist=True`` the program additionally carries the per-client
+    depletion streak (``streak`` in, ``streak_out`` out) and reduces the
+    `repro.obs.hist.FLEET_HIST_SPECS` fixed-bin histograms.
     """
     pol = Policy(policy)
     env: dict = {}
@@ -213,10 +262,13 @@ def fleet_step_program(bat: battery_lib.BatteryConfig, policy: Policy | str,
     ops.append(StepOp("depleted", ("available", "round_cost"),
                       ("depleted",), depleted_fn))
 
+    if hist:
+        ops += _hist_ops(bat_names, bat_of, "consumed")
     grouped = num_groups is not None
     program = StepProgram(
         name="fleet_step", ops=tuple(ops),
-        state_out=("charge_out",), emit=("mask",),
+        state_out=("charge_out", "streak_out") if hist else ("charge_out",),
+        emit=("mask",),
         totals=(("participants", "mask"), ("harvested", "harvest"),
                 ("consumed", "consumed"), ("leaked", "leaked"),
                 ("overflowed", "overflow")),
@@ -224,13 +276,14 @@ def fleet_step_program(bat: battery_lib.BatteryConfig, policy: Policy | str,
                   ("frac_depleted", "depleted")),
         group_totals=(("group_participants", "mask"),) if grouped else (),
         group_averages=(("group_frac_depleted", "depleted"),) if grouped
-        else ())
+        else (),
+        hists=hist_lib.FLEET_HIST_SPECS if hist else ())
     return program, env
 
 
 # ------------------------------------------------------------ serve program --
 def serve_step_program(bat: battery_lib.BatteryConfig, cost, qos, policy,
-                       train) -> tuple[StepProgram, dict]:
+                       train, hist: bool = False) -> tuple[StepProgram, dict]:
     """Build the serving-epoch step (`serve.fleet_serve._serve_epoch`'s
     physics): absorb → price → admission decide → serve-drain → ledger →
     optional train gate+drain → token/total accounting.
@@ -238,7 +291,10 @@ def serve_step_program(bat: battery_lib.BatteryConfig, cost, qos, policy,
     Returns ``(program, env)`` with the battery/cost/qos/policy (and
     TrainLoad) leaves bound; the caller adds the traced ``admit`` scale and
     the per-epoch ``charge``/``harvest``/``requests`` (+ ``twant`` when the
-    training load uses the SUSTAINABLE slot draw).
+    training load uses the SUSTAINABLE slot draw).  With ``hist=True`` the
+    program carries the per-client depletion streak and reduces the
+    `repro.obs.hist.SERVE_HIST_SPECS` histograms (spend binned over the
+    combined serve + train drain, ``consumed_total``).
     """
     env: dict = {}
     bat_names, bat_of = _bind("bat", bat, env)
@@ -353,9 +409,12 @@ def serve_step_program(bat: battery_lib.BatteryConfig, cost, qos, policy,
     ops.append(StepOp("consumed_total", ("consumed_serve", "consumed_train"),
                       ("consumed_total",), total_fn))
 
+    if hist:
+        ops += _hist_ops(bat_names, bat_of, "consumed_total")
     program = StepProgram(
         name="serve_step", ops=tuple(ops),
-        state_out=("charge_out",), emit=("mode",),
+        state_out=("charge_out", "streak_out") if hist else ("charge_out",),
+        emit=("mode",),
         totals=(("participants", "tmask"), ("harvested", "harvest"),
                 ("consumed", "consumed_total"), ("leaked", "leaked"),
                 ("overflowed", "overflow"), ("offered", "requests"),
@@ -365,7 +424,8 @@ def serve_step_program(bat: battery_lib.BatteryConfig, cost, qos, policy,
                 ("consumed_serve", "consumed_serve"),
                 ("consumed_train", "consumed_train")),
         averages=(("mean_charge", "charge_out"),
-                  ("frac_depleted", "depleted")))
+                  ("frac_depleted", "depleted")),
+        hists=hist_lib.SERVE_HIST_SPECS if hist else ())
     return program, env
 
 
@@ -392,6 +452,9 @@ def run_step_lax(program: StepProgram, env: dict, *, valid, groups=None,
         for stat, buf in program.group_averages:
             stats[stat] = jax.vmap(
                 collectives.masked_average, (None, 0))(env[buf], gweights)
+    for spec in program.hists:
+        stats[spec.name] = hist_lib.masked_bincount(
+            env[spec.buf], valid, spec, axis_name)
     return env, stats
 
 
@@ -408,6 +471,8 @@ class UnfusedRunner:
         self._ops = [(op, jax.jit(op.fn)) for op in program.ops]
         self._total = jax.jit(collectives.masked_total)
         self._average = jax.jit(collectives.masked_average)
+        self._bincount = jax.jit(hist_lib.masked_bincount,
+                                 static_argnums=(2,))
 
     def __call__(self, env: dict, *, valid) -> tuple[dict, dict]:
         env = dict(env)
@@ -418,6 +483,8 @@ class UnfusedRunner:
                  for s, b in self.program.totals}
         stats.update({s: self._average(env[b], valid)
                       for s, b in self.program.averages})
+        stats.update({s.name: self._bincount(env[s.buf], valid, s)
+                      for s in self.program.hists})
         return env, stats
 
 
@@ -448,13 +515,15 @@ def bytes_moved(program: StepProgram, env: dict, n: int, *,
         unfused += per * len(op.writes)
     unfused += per * 2 * len(program.totals)       # value + valid re-read
     unfused += per * 4 * len(program.averages)     # two masked totals each
+    unfused += per * 2 * len(program.hists)        # value + valid per hist
 
     inputs = [nm for nm in program.input_names() if tiled(nm)] + ["valid"]
     fused = per * len(set(inputs))
     fused += per * len(program.state_out)
     if emit:
         fused += per * len(program.emit)
-    n_stats = len(program.totals) + len(program.averages) + 1
+    n_stats = len(program.totals) + len(program.averages) + 1 \
+        + sum(s.bins for s in program.hists)
     fused += n_stats * itemsize                    # partial-sum tile rows
     return {"unfused_bytes": unfused, "fused_bytes": fused,
             "ratio": unfused / max(fused, 1)}

@@ -47,6 +47,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.dist import sharding as dist_sharding
 from repro.energy import step_ops
+from repro.obs import hist as hist_lib
 
 # mirrors kernels.ops.INTERPRET (not imported: keep this module's import
 # graph to step_ops + jax so the energy layer can pull it in lazily)
@@ -81,17 +82,20 @@ def _stat_names(program: step_ops.StepProgram,
     if num_groups:
         names += [s for s, _ in program.group_totals
                   + program.group_averages]
+    names += [spec.name for spec in program.hists]
     return tuple(names)
 
 
 def _partials_width(program: step_ops.StepProgram,
                     num_groups: int | None) -> int:
     """Layout of one partial-sum row: [totals][average numerators][sum of
-    valid] then per group g: [group totals][group numerators][sum of w_g]."""
+    valid], then per group g: [group totals][group numerators][sum of w_g],
+    then per histogram spec: [bin counts] (bins entries each)."""
     base = len(program.totals) + len(program.averages) + 1
     if num_groups:
         base += num_groups * (len(program.group_totals)
                               + len(program.group_averages) + 1)
+    base += sum(spec.bins for spec in program.hists)
     return base
 
 
@@ -124,6 +128,15 @@ def _make_kernel(program: step_ops.StepProgram, names: tuple[str, ...],
                           for _, buf in program.group_totals
                           + program.group_averages]
                 parts.append(jnp.sum(wg))
+        # per-tile histogram partials: bin with the SAME `hist.bin_index`
+        # expression as the lax backend, then one valid-weighted indicator
+        # sum per bin — {0, 1} summands, so tile partials are exact integers
+        # and reassociate bit-exactly across tiles/shards
+        for spec in program.hists:
+            idx = hist_lib.bin_index(env[spec.buf], spec.lo, spec.hi,
+                                     spec.bins)
+            parts += [jnp.sum(valid * (idx == b).astype(jnp.float32))
+                      for b in range(spec.bins)]
         out_refs[k][...] = jnp.stack(parts)[None]
 
     return kernel
@@ -139,14 +152,20 @@ def _stats_from_partials(program: step_ops.StepProgram, p,
     den = jnp.maximum(p[T + A], 1.0)
     for j, (s, _) in enumerate(program.averages):
         stats[s] = p[T + j] / den
+    off = T + A + 1
     if num_groups:
         GT, GA = len(program.group_totals), len(program.group_averages)
-        block = p[T + A + 1:].reshape(num_groups, GT + GA + 1)   # (G, ...)
+        gwidth = num_groups * (GT + GA + 1)
+        block = p[off:off + gwidth].reshape(num_groups, GT + GA + 1)
         for k, (s, _) in enumerate(program.group_totals):
             stats[s] = block[:, k]
         gden = jnp.maximum(block[:, GT + GA], 1.0)
         for k, (s, _) in enumerate(program.group_averages):
             stats[s] = block[:, GT + k] / gden
+        off += gwidth
+    for spec in program.hists:
+        stats[spec.name] = p[off:off + spec.bins]
+        off += spec.bins
     return stats
 
 

@@ -10,9 +10,16 @@ the un-instrumented code path and adds zero jit-cache entries (tested).
 
     from repro.obs import Obs
     obs = Obs("runs/exp1")
-    res, ctrl = run_controlled(..., obs=obs)     # streams per-chunk JSONL
+    res, ctrl = run_controlled(..., obs=obs, hist=True)  # per-chunk JSONL
     # python -m repro.obs.report summary runs/exp1
+    # python -m repro.obs.report dist runs/exp1 --out dist.md
     # python -m repro.obs.report bench-diff BENCH_fleet.json fresh.json
+
+Distributional telemetry (DESIGN.md §14) lives in `repro.obs.hist`: the
+fixed-bin `HistSpec` contract, the in-scan `masked_bincount` reduction the
+simulators run under ``hist=True``, and the host-side
+`quantiles_from_counts` / `sparkline` readout that ``report dist`` and
+`energy.control.Telemetry` share.
 """
 from repro.obs.events import (
     EventLog,
@@ -21,8 +28,17 @@ from repro.obs.events import (
     load_events,
     pytree_hash,
 )
+from repro.obs.hist import (
+    FLEET_HIST_SPECS,
+    SERVE_HIST_SPECS,
+    HistSpec,
+    masked_bincount,
+    quantiles_from_counts,
+    sparkline,
+)
 from repro.obs.metrics import (
     ENERGY_SEVEN,
+    GROUP_KEYS,
     SERVE_LEDGER,
     Counter,
     Gauge,
@@ -37,12 +53,16 @@ from repro.obs.profile import (
     span,
     span_totals,
 )
-from repro.obs.report import bench_diff, render_summary, summarize
+from repro.obs.report import bench_diff, dist, render_dist, render_summary, \
+    summarize
 
 __all__ = [
     "EventLog", "RunManifest", "git_revision", "load_events", "pytree_hash",
-    "ENERGY_SEVEN", "SERVE_LEDGER", "Counter", "Gauge", "MetricStream", "Obs",
+    "FLEET_HIST_SPECS", "SERVE_HIST_SPECS", "HistSpec", "masked_bincount",
+    "quantiles_from_counts", "sparkline",
+    "ENERGY_SEVEN", "GROUP_KEYS", "SERVE_LEDGER", "Counter", "Gauge",
+    "MetricStream", "Obs",
     "RetraceSentinel", "annotate", "profiler_trace", "reset_spans", "span",
     "span_totals",
-    "bench_diff", "render_summary", "summarize",
+    "bench_diff", "dist", "render_dist", "render_summary", "summarize",
 ]

@@ -1,0 +1,165 @@
+"""Fixed-bin, mask-aware fleet histograms and their host-side quantile /
+rendering helpers (DESIGN.md §14).
+
+Every telemetry channel the simulators stream is a fleet-wide mean; the
+paper's sustainability claims are about the *tail* — which clients deplete
+and how long droughts last.  This module defines the distributional layer:
+
+* `HistSpec` — a fixed-bin histogram over one per-client step-op buffer.
+  The **bin-edge contract**: ``bins`` equal-width bins over ``[lo, hi)``,
+  ``edges[b] = lo + (hi - lo) * b / bins``; values below ``lo`` land in bin
+  0 and values at or above ``hi`` in bin ``bins - 1`` (clamped, never
+  dropped), so counts always sum to the number of valid clients.  Edges are
+  part of the spec — every producer and consumer of a named histogram uses
+  the SAME canonical spec (`FLEET_HIST_SPECS` / `SERVE_HIST_SPECS`), which
+  is what lets quantiles be extracted exactly from streamed counts alone.
+* `bin_index` / `masked_bincount` — the in-scan reduction.  Counts are
+  validity-weighted f32 sums of {0, 1} weights, so every partial sum is an
+  exact small integer: tile-partial accumulation (the pallas kernel), a
+  local-sum + `psum` reduction tree across mesh shards, and the host-local
+  scatter-add all produce bit-identical histograms — the same exactness
+  argument as `dist.collectives.masked_total` on dyadic configs, but
+  unconditional here because the summands are integers.
+* `quantiles_from_counts` — the **quantile extraction rule**: ``p_q`` is the
+  *upper edge* of the smallest bin whose cumulative count reaches
+  ``q * total`` (the exact empirical quantile up to bin resolution, biased
+  conservatively upward — a reported p95 never understates the tail).  A
+  zero-count histogram reports ``lo``.
+* `sparkline` / default spec tables — rendering for ``obs.report dist``.
+
+The canonical per-client channels (32/64 dyadic-width bins, so binning is
+exact floating-point arithmetic on the dyadic test configs):
+
+* ``hist_soc`` — state of charge ``charge_out / capacity`` in [0, 1).
+* ``hist_spend`` — this round's spend as a fraction of capacity in [0, 1).
+* ``hist_streak`` — the carried consecutive-depleted streak counter in
+  [0, 64): 0 when the client could afford the round, else previous streak
+  + 1 (`step_ops` streak op), so drought *lengths* are measured, not just
+  the per-round depleted fraction.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class HistSpec:
+    """One fixed-bin histogram: ``bins`` equal-width bins over ``[lo, hi)``
+    of the per-client step-op buffer ``buf``, streamed under stat ``name``.
+
+    Frozen + hashable: a tuple of specs rides inside `StepProgram` and
+    through jit-static plumbing without retrace hazards.
+    """
+
+    name: str      # stat name the counts are streamed under ("hist_soc")
+    buf: str       # step-op env buffer to bin ("soc", "spend_frac", ...)
+    lo: float
+    hi: float
+    bins: int
+
+    def edges(self) -> np.ndarray:
+        """(bins + 1,) bin edges; ``edges[b]``..``edges[b+1]`` bounds bin b
+        (the last bin additionally absorbs everything >= hi)."""
+        return self.lo + (self.hi - self.lo) \
+            * np.arange(self.bins + 1, dtype=np.float64) / self.bins
+
+
+def bin_index(v, lo: float, hi: float, bins: int):
+    """(N,) values -> (N,) int32 bin indices under the bin-edge contract.
+
+    ``floor((v - lo) * bins / (hi - lo))`` clipped into [0, bins - 1] —
+    under/overflow is clamped into the edge bins, never dropped.  Shared by
+    the lax and pallas backends (and the host oracle in tests), so indices
+    are computed by the identical float expression everywhere.
+    """
+    import jax.numpy as jnp
+
+    scale = bins / (hi - lo)
+    idx = jnp.floor((v - lo) * jnp.float32(scale))
+    return jnp.clip(idx, 0, bins - 1).astype(jnp.int32)
+
+
+def masked_bincount(v, valid, spec: HistSpec, axis_name=None):
+    """(bins,) f32 validity-weighted counts of ``v`` under ``spec``.
+
+    Padding/phantom lanes carry ``valid == 0`` and contribute nothing.  The
+    scatter-add accumulates {0, 1} weights, so the result is an exact
+    integer in f32 regardless of accumulation order; with ``axis_name`` the
+    per-shard counts are ``psum``-ed (bit-exact vs host-local).
+    """
+    import jax
+    import jax.numpy as jnp
+
+    idx = bin_index(v, spec.lo, spec.hi, spec.bins)
+    counts = jnp.zeros((spec.bins,), jnp.float32).at[idx].add(
+        jnp.asarray(valid, jnp.float32))
+    if axis_name is not None:
+        counts = jax.lax.psum(counts, axis_name)
+    return counts
+
+
+# -------------------------------------------------------- canonical specs --
+# dyadic widths (1/32, 1/32, 1) keep the binning arithmetic exact on the
+# dyadic test configs; streaks clip at 64 consecutive depleted rounds
+SOC_SPEC = HistSpec("hist_soc", "soc", 0.0, 1.0, 32)
+SPEND_SPEC = HistSpec("hist_spend", "spend_frac", 0.0, 1.0, 32)
+STREAK_SPEC = HistSpec("hist_streak", "streak_out", 0.0, 64.0, 64)
+
+FLEET_HIST_SPECS: tuple[HistSpec, ...] = (SOC_SPEC, SPEND_SPEC, STREAK_SPEC)
+SERVE_HIST_SPECS: tuple[HistSpec, ...] = (SOC_SPEC, SPEND_SPEC, STREAK_SPEC)
+
+SPECS_BY_NAME: dict[str, HistSpec] = {
+    s.name: s for s in FLEET_HIST_SPECS + SERVE_HIST_SPECS}
+
+HIST_PREFIX = "hist_"
+
+
+def is_hist_key(key: str) -> bool:
+    """True for stat keys carrying histogram counts (streamed as ``hist``
+    events, never inline in ``round`` events)."""
+    return key.startswith(HIST_PREFIX)
+
+
+# ------------------------------------------------------- host-side readout --
+def quantiles_from_counts(counts, spec: HistSpec,
+                          qs=(0.5, 0.95, 0.99)) -> dict[str, float]:
+    """Exact-within-bin-resolution quantiles from streamed counts.
+
+    The extraction rule (DESIGN.md §14): ``p_q`` is the upper edge of the
+    smallest bin whose cumulative count reaches ``q * total``.  Counts are
+    integers, so this is the exact empirical quantile rounded up to the
+    next bin edge; an all-zero histogram reports ``lo`` for every q.
+    """
+    counts = np.asarray(counts, np.float64).reshape(-1)
+    if counts.shape[0] != spec.bins:
+        raise ValueError(f"{spec.name}: got {counts.shape[0]} counts, "
+                         f"spec has {spec.bins} bins")
+    edges = spec.edges()
+    total = counts.sum()
+    out = {}
+    cum = np.cumsum(counts)
+    for q in qs:
+        key = f"p{round(q * 100):d}" if q * 100 == round(q * 100) \
+            else f"p{q * 100:g}"
+        if total <= 0:
+            out[key] = float(spec.lo)
+            continue
+        b = int(np.searchsorted(cum, q * total, side="left"))
+        out[key] = float(edges[min(b, spec.bins - 1) + 1])
+    return out
+
+
+_BLOCKS = " ▁▂▃▄▅▆▇█"
+
+
+def sparkline(counts) -> str:
+    """Unicode block-character rendering of one histogram row (count-scaled
+    to the row maximum; an all-zero row renders as spaces)."""
+    counts = np.asarray(counts, np.float64).reshape(-1)
+    top = counts.max()
+    if top <= 0:
+        return " " * counts.shape[0]
+    lvl = np.ceil(counts / top * (len(_BLOCKS) - 1)).astype(int)
+    return "".join(_BLOCKS[i] for i in np.clip(lvl, 0, len(_BLOCKS) - 1))

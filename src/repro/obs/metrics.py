@@ -21,7 +21,10 @@ Emitted per round: the fleet "energy seven" (participants / harvested /
 consumed / leaked / overflowed / mean_charge / frac_depleted), the serve
 ledger (offered / served_full / served_short / shed / deadline_missed /
 tokens_decoded / consumed_serve / consumed_train) and any per-group
-telemetry — whatever subset the producing simulator computed.
+telemetry — whatever subset the producing simulator computed.  Runs with
+``hist=True`` additionally stream each round's fixed-bin histogram counts
+as separate ``hist`` events (exact integers; one ``hist_spec`` event per
+stream pins the bin-edge contract — DESIGN.md §14).
 """
 from __future__ import annotations
 
@@ -31,6 +34,7 @@ from typing import Any
 
 import numpy as np
 
+from repro.obs import hist as hist_lib
 from repro.obs.events import EventLog, RunManifest
 
 # the per-round stats vocabulary, in emission order (DESIGN.md §12)
@@ -39,6 +43,9 @@ ENERGY_SEVEN = ("participants", "harvested", "consumed", "leaked",
 SERVE_LEDGER = ("offered", "served_full", "served_short", "shed",
                 "deadline_missed", "tokens_decoded", "consumed_serve",
                 "consumed_train")
+# (R, G) per-group telemetry (simulate_fleet(..., groups=)); streamed inline
+# in round events as G-length lists
+GROUP_KEYS = ("group_participants", "group_frac_depleted")
 # (R, N) per-client recordings never belong in an event stream
 _SKIP_KEYS = ("mask", "mode")
 
@@ -83,6 +90,7 @@ class MetricStream:
         self.log = log
         self._counters: dict[str, Counter] = {}
         self._gauges: dict[str, Gauge] = {}
+        self._specs_emitted: set[str] = set()
 
     def counter(self, name: str) -> Counter:
         return self._counters.setdefault(name, Counter(name))
@@ -90,18 +98,40 @@ class MetricStream:
     def gauge(self, name: str) -> Gauge:
         return self._gauges.setdefault(name, Gauge(name))
 
+    def emit_hist(self, scan: str, rnd: int, key: str, counts) -> None:
+        """One round's histogram counts as a ``hist`` event (and, once per
+        stream, the ``hist_spec`` event pinning the bin-edge contract the
+        counts were produced under — DESIGN.md §14)."""
+        spec = hist_lib.SPECS_BY_NAME.get(key)
+        if spec is not None and key not in self._specs_emitted:
+            self._specs_emitted.add(key)
+            self.log.emit("hist_spec", scan=scan, name=spec.name,
+                          buf=spec.buf, lo=spec.lo, hi=spec.hi,
+                          bins=spec.bins)
+        self.log.emit("hist", scan=scan, round=int(rnd), name=key,
+                      counts=[int(c) for c in
+                              np.asarray(counts).reshape(-1)])
+
     def emit_rounds(self, scan: str, offset: int, stats: dict) -> int:
         """Stream one ``round`` event per round from a stats dict of (R,)
-        (or (R, G) per-group) arrays — the simulators' native output shape.
-        Returns the number of rounds emitted."""
-        keys = [k for k in stats if k not in _SKIP_KEYS]
-        if not keys:
+        (or (R, G) per-group) arrays — the simulators' native output shape;
+        per-group columns (`GROUP_KEYS`) ride inline as G-length lists.
+        ``hist_*`` (R, bins) count matrices are split out as one ``hist``
+        event per (round, histogram) instead — exact integer counts, never
+        means.  Returns the number of rounds emitted."""
+        arrs = {k: np.asarray(stats[k]) for k in stats
+                if k not in _SKIP_KEYS}
+        if not arrs:
             return 0
-        arrs = {k: np.asarray(stats[k]) for k in keys}
+        keys = [k for k in arrs if not hist_lib.is_hist_key(k)]
+        hist_keys = [k for k in arrs if hist_lib.is_hist_key(k)]
         r_len = next(iter(arrs.values())).shape[0]
         for i in range(r_len):
-            self.log.emit("round", scan=scan, round=int(offset) + i,
-                          **{k: _scalarize(arrs[k][i]) for k in keys})
+            if keys:
+                self.log.emit("round", scan=scan, round=int(offset) + i,
+                              **{k: _scalarize(arrs[k][i]) for k in keys})
+            for k in hist_keys:
+                self.emit_hist(scan, int(offset) + i, k, arrs[k][i])
         self.counter(f"{scan}_rounds").inc(r_len)
         if "mean_charge" in arrs and r_len:
             self.gauge(f"{scan}_mean_charge").set(arrs["mean_charge"][-1])
@@ -191,9 +221,14 @@ class Obs:
         return self._taps[scan]
 
     def _on_round(self, scan: str, r, stats: dict) -> None:
-        self.log.emit("round", scan=scan, round=int(np.asarray(r)),
-                      **{k: _scalarize(v) for k, v in stats.items()
-                         if k not in _SKIP_KEYS})
+        rnd = int(np.asarray(r))
+        row = {k: _scalarize(v) for k, v in stats.items()
+               if k not in _SKIP_KEYS and not hist_lib.is_hist_key(k)}
+        if row:
+            self.log.emit("round", scan=scan, round=rnd, **row)
+        for k, v in stats.items():
+            if hist_lib.is_hist_key(k):
+                self.metrics.emit_hist(scan, rnd, k, v)
         self.metrics.counter(f"{scan}_rounds").inc()
 
     # -------------------------------------------------------------- close --

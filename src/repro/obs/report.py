@@ -1,24 +1,43 @@
 """Run-report aggregation and the bench-regression tripwire.
 
     python -m repro.obs.report summary <run_dir | events.jsonl>
+    python -m repro.obs.report dist <run_dir | events.jsonl> [--out F.md]
+    python -m repro.obs.report trend BENCH_history.jsonl [--bench NAME]
     python -m repro.obs.report bench-diff BASELINE.json FRESH.json \\
         [--sections round_step] [--rel 0.3]
 
 ``summary`` folds a run's JSONL event stream into one table: the manifest
-header, per-scan round counts and means of the energy seven / serve ledger,
-span totals, control-knob trajectory, and any retrace warnings.
+header, per-scan round counts and means of the energy seven / serve ledger
+(plus per-group columns), span totals, control-knob trajectory, resume
+markers, and any retrace warnings.  Degenerate streams — manifest-only, or
+a ``resume`` event with no rounds in the same file — summarize cleanly.
+
+``dist`` is the distributional report (DESIGN.md §14): per-scan quantiles
+of the round-scalar telemetry (``p95(frac_depleted)`` is exactly the PR 5
+depletion-tail comparison, recomputed from streamed events alone) plus, for
+``hist=True`` runs, the streamed fixed-bin histograms — whole-run sparkline,
+exact p50/p95/p99 from the summed counts, and a per-round quantile table —
+rendered as markdown (``--out`` writes the CI artifact, ``--json`` the raw
+dict).
+
+``trend`` renders the cross-PR bench trajectory from a committed
+``BENCH_history.jsonl`` (one line per bench run, appended by the benchmark
+scripts via ``--history``): headline numbers by git rev, so perf drift is
+visible across PRs instead of only within one bench-diff pair.
 
 ``bench-diff`` is the perf tripwire: it compares a fresh ``BENCH_*.json``
 against a committed baseline section-by-section with per-section relative
 tolerances (`SECTION_SPECS`) — timings may only regress (grow) by ``rel``,
 ratio metrics like the fused-vs-unfused speedup may only *shrink* by
-``rel`` — and exits non-zero on any violation, so CI fails the job instead
-of silently accumulating a slower artifact.  Records are matched by their
-identity keys (num_clients/policy/...), so a smoke baseline diffs cleanly
-against a full sweep on the overlapping rows; sections or rows absent from
-the baseline are skipped (pre-PR-7 BENCH files stay diffable), while a
-section present in the baseline but MISSING from the fresh run is itself a
-violation (a deleted benchmark must be deliberate).
+``rel``, and the ``percentiles`` section guards the depletion tail
+(``p95_frac_depleted`` may only grow by its tolerance) — and exits non-zero
+on any violation, so CI fails the job instead of silently accumulating a
+slower artifact.  Records are matched by their identity keys
+(num_clients/policy/...), so a smoke baseline diffs cleanly against a full
+sweep on the overlapping rows; sections or rows absent from the baseline
+are skipped (pre-PR-7 BENCH files stay diffable), while a section present
+in the baseline but MISSING from the fresh run is itself a violation (a
+deleted benchmark must be deliberate).
 """
 from __future__ import annotations
 
@@ -29,8 +48,9 @@ import sys
 
 import numpy as np
 
+from repro.obs import hist as hist_lib
 from repro.obs.events import load_events
-from repro.obs.metrics import ENERGY_SEVEN, SERVE_LEDGER
+from repro.obs.metrics import ENERGY_SEVEN, GROUP_KEYS, SERVE_LEDGER
 
 # ------------------------------------------------------------- summary -----
 
@@ -53,6 +73,8 @@ def summarize(events: list[dict]) -> dict:
     spans: dict[str, list[float]] = {}
     controls: list[dict] = []
     retraces: list[dict] = []
+    resumes: list[dict] = []
+    hist_counts: dict[str, dict[str, int]] = {}
     for e in events:
         if e["kind"] == "round":
             rounds.setdefault(e.get("scan", "?"), []).append(e)
@@ -62,6 +84,11 @@ def summarize(events: list[dict]) -> dict:
             controls.append(e)
         elif e["kind"] == "retrace_warning":
             retraces.append(e)
+        elif e["kind"] == "resume":
+            resumes.append(e)
+        elif e["kind"] == "hist":
+            per = hist_counts.setdefault(e.get("scan", "?"), {})
+            per[e["name"]] = per.get(e["name"], 0) + 1
 
     scan_stats = {}
     for scan, evs in rounds.items():
@@ -76,6 +103,13 @@ def summarize(events: list[dict]) -> dict:
             "means": {k: float(np.mean([float(e[k]) for e in evs]))
                       for k in keys},
         }
+        gkeys = [k for k in GROUP_KEYS if k in evs[0]]
+        if gkeys:
+            # (G,) per-group means over the streamed rounds — the rows the
+            # grouped BudgetRule acts on must survive into the report
+            scan_stats[scan]["group_means"] = {
+                k: np.mean([np.asarray(e[k], np.float64) for e in evs],
+                           axis=0).tolist() for k in gkeys}
     return {
         "manifest": manifest,
         "scans": scan_stats,
@@ -84,6 +118,8 @@ def summarize(events: list[dict]) -> dict:
                   for k, v in spans.items()},
         "controls": controls,
         "retrace_warnings": retraces,
+        "resumes": resumes,
+        "hists": hist_counts,
         "events": len(events),
     }
 
@@ -99,14 +135,34 @@ def render_summary(summary: dict) -> str:
                    f"devices={man.get('device_count')}  "
                    f"mesh={man.get('mesh_shape')}  "
                    f"config_hash={man.get('config_hash')}")
+    elif summary.get("resumes"):
+        out.append("(no manifest event — stream starts at a resume; the "
+                   "original manifest lives in the pre-crash log)")
     else:
         out.append("(no manifest event — pre-PR-7 or truncated log)")
     out.append(f"  events={summary['events']}")
+    for r in summary.get("resumes", ()):
+        out.append(f"  resumed {r.get('run_kind')} at round "
+                   f"{r.get('round')}/{r.get('horizon')} from "
+                   f"{r.get('checkpoint_dir')}")
+    if not summary["scans"]:
+        out.append("  (no round events)")
     for scan, s in summary["scans"].items():
         out.append(f"\n{scan}: rounds {s['first_round']}..{s['last_round']} "
                    f"({s['rounds']} emitted)")
         rows = [[k, f"{v:.6g}"] for k, v in s["means"].items()]
         out.append(_fmt_table(["stat (mean/round)", "value"], rows))
+        for k, vec in s.get("group_means", {}).items():
+            out.append(f"  {k} (per-group mean): "
+                       + "  ".join(f"{v:.6g}" for v in vec))
+        for name, n_ev in summary.get("hists", {}).get(scan, {}).items():
+            out.append(f"  {name}: {n_ev} hist events "
+                       f"(`report dist` for quantiles)")
+    for scan, per in summary.get("hists", {}).items():
+        if scan not in summary["scans"]:
+            for name, n_ev in per.items():
+                out.append(f"\n{scan}: {name}: {n_ev} hist events "
+                           f"(`report dist` for quantiles)")
     if summary["spans"]:
         out.append("\nspans:")
         rows = [[name, s["count"], f"{s['total_ms']:.3f}",
@@ -122,6 +178,169 @@ def render_summary(summary: dict) -> str:
         out.append(f"\nWARNING retrace: {w.get('fn')} grew by "
                    f"{w.get('delta')} entries ({w.get('context', '')})")
     return "\n".join(out)
+
+
+# ------------------------------------------------------------------ dist ----
+
+_DIST_QS = (0.5, 0.95, 0.99)
+
+
+def dist(events: list[dict], qs=_DIST_QS) -> dict:
+    """Reduce an event stream to its distributional report (DESIGN.md §14).
+
+    Two layers, both recomputed exactly from the stream:
+
+    * **round-scalar quantiles** — ``np.percentile`` over each telemetry
+      channel's per-round values from the ``round`` events.
+      ``p95(frac_depleted)`` here is precisely the depletion-tail comparison
+      PR 5 made by hand (0.32 vs 0.25 across harvest regimes).
+    * **histogram quantiles** — for ``hist=True`` runs, the ``hist`` events'
+      integer counts are summed per histogram and `hist.quantiles_from_counts`
+      extracts p50/p95/p99 under the stream's own ``hist_spec`` bin-edge
+      contract (falling back to the canonical spec table for older streams),
+      plus a per-round quantile row for each streamed round.
+    """
+    rounds: dict[str, list[dict]] = {}
+    hist_rows: dict[tuple[str, str], list[dict]] = {}
+    specs: dict[str, hist_lib.HistSpec] = {}
+    manifest = None
+    for e in events:
+        if e["kind"] == "round":
+            rounds.setdefault(e.get("scan", "?"), []).append(e)
+        elif e["kind"] == "hist":
+            hist_rows.setdefault((e.get("scan", "?"), e["name"]),
+                                 []).append(e)
+        elif e["kind"] == "hist_spec":
+            specs[e["name"]] = hist_lib.HistSpec(
+                e["name"], e.get("buf", "?"), float(e["lo"]), float(e["hi"]),
+                int(e["bins"]))
+        elif e["kind"] == "manifest" and manifest is None:
+            manifest = e
+
+    def qkey(q):
+        return f"p{q * 100:g}"
+
+    scans: dict[str, dict] = {}
+    for scan, evs in sorted(rounds.items()):
+        keys = [k for k in ENERGY_SEVEN + SERVE_LEDGER if k in evs[0]]
+        scans.setdefault(scan, {})["scalar_quantiles"] = {
+            k: {qkey(q): float(np.percentile(
+                    [float(e[k]) for e in evs], q * 100)) for q in qs}
+            for k in keys}
+        scans[scan]["rounds"] = len(evs)
+    for (scan, name), evs in sorted(hist_rows.items()):
+        spec = specs.get(name) or hist_lib.SPECS_BY_NAME.get(name)
+        if spec is None:
+            continue
+        evs = sorted(evs, key=lambda e: e.get("round", 0))
+        counts = [np.asarray(e["counts"], np.float64) for e in evs]
+        total = np.sum(counts, axis=0)
+        entry = {
+            "spec": {"buf": spec.buf, "lo": spec.lo, "hi": spec.hi,
+                     "bins": spec.bins},
+            "rounds": len(evs),
+            "total_counts": [int(c) for c in total],
+            "sparkline": hist_lib.sparkline(total),
+            "quantiles": hist_lib.quantiles_from_counts(total, spec, qs),
+            "per_round": [
+                dict(round=e.get("round"),
+                     **hist_lib.quantiles_from_counts(c, spec, qs))
+                for e, c in zip(evs, counts)],
+        }
+        scans.setdefault(scan, {}).setdefault("hists", {})[name] = entry
+    return {"manifest": manifest, "scans": scans,
+            "quantiles": [qkey(q) for q in qs]}
+
+
+def render_dist(report: dict) -> str:
+    """Markdown rendering of a `dist` report (the CI artifact)."""
+    qcols = report["quantiles"]
+    out = ["# Distributional telemetry"]
+    man = report.get("manifest")
+    if man:
+        out.append(f"\nrun `{man.get('run_id')}` [{man.get('run_kind')}] — "
+                   f"git `{man.get('git_rev')}`, backend "
+                   f"`{man.get('backend')}`, devices "
+                   f"{man.get('device_count')}")
+    if not report["scans"]:
+        out.append("\n_(no round or hist events in this stream)_")
+    for scan, s in report["scans"].items():
+        out.append(f"\n## {scan} ({s.get('rounds', 0)} rounds)")
+        sq = s.get("scalar_quantiles")
+        if sq:
+            out.append("\n### per-round scalar quantiles\n")
+            out.append("| stat | " + " | ".join(qcols) + " |")
+            out.append("|---" * (len(qcols) + 1) + "|")
+            for k, qv in sq.items():
+                out.append("| " + k + " | "
+                           + " | ".join(f"{qv[q]:.6g}" for q in qcols)
+                           + " |")
+        for name, h in s.get("hists", {}).items():
+            spec = h["spec"]
+            out.append(f"\n### {name} — `{spec['buf']}` over "
+                       f"[{spec['lo']:g}, {spec['hi']:g}) in "
+                       f"{spec['bins']} bins, {h['rounds']} rounds")
+            out.append(f"\n```\n{h['sparkline']}\n```")
+            out.append("\nwhole-run: "
+                       + ", ".join(f"{q}={h['quantiles'][q]:g}"
+                                   for q in qcols))
+            out.append("\n| round | " + " | ".join(qcols) + " |")
+            out.append("|---" * (len(qcols) + 1) + "|")
+            for row in h["per_round"]:
+                out.append("| " + str(row["round"]) + " | "
+                           + " | ".join(f"{row[q]:g}" for q in qcols)
+                           + " |")
+    return "\n".join(out)
+
+
+# ------------------------------------------------------------------ trend ---
+
+def load_history(path: str) -> list[dict]:
+    """Parse a ``BENCH_history.jsonl`` trajectory (blank lines and torn
+    trailing writes are skipped, like `events.load_events`)."""
+    records = []
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if not line:
+                continue
+            try:
+                records.append(json.loads(line))
+            except json.JSONDecodeError:
+                continue
+    return records
+
+
+def render_trend(records: list[dict], bench: str | None = None) -> str:
+    """One table per benchmark: headline numbers by git rev, in file
+    (= chronological append) order."""
+    by_bench: dict[str, list[dict]] = {}
+    for r in records:
+        by_bench.setdefault(r.get("bench", "?"), []).append(r)
+    if bench is not None:
+        by_bench = {k: v for k, v in by_bench.items() if k == bench}
+        if not by_bench:
+            return f"(no history records for bench {bench!r})"
+    if not by_bench:
+        return "(empty history)"
+    out = []
+    for name, recs in sorted(by_bench.items()):
+        cols: list[str] = []
+        for r in recs:
+            for k in r.get("headline", {}):
+                if k not in cols:
+                    cols.append(k)
+        rows = [[str(r.get("git_rev", "?"))[:12],
+                 r.get("recorded", "?")]
+                + [(f"{r['headline'][k]:.6g}"
+                    if isinstance(r.get("headline", {}).get(k), float)
+                    else str(r.get("headline", {}).get(k, "-")))
+                   for k in cols]
+                for r in recs]
+        out.append(f"{name}: {len(recs)} run(s)")
+        out.append(_fmt_table(["git_rev", "recorded"] + cols, rows))
+        out.append("")
+    return "\n".join(out).rstrip()
 
 
 # ----------------------------------------------------------- bench-diff ----
@@ -148,6 +367,17 @@ SECTION_SPECS: dict[str, dict] = {
         "slower": ("run_s",),
         "smaller": (),
         "rel": 0.50,
+    },
+    # depletion-tail guard (DESIGN.md §14): the scale benches record
+    # p95(frac_depleted) per config — a *fairness/sustainability* metric,
+    # not a timing, so its tolerance is tight (the simulators are
+    # deterministic per seed; growth means the physics or the schedule
+    # changed, which must be deliberate)
+    "percentiles": {
+        "match": ("scan", "regime", "num_clients", "policy"),
+        "slower": ("p95_frac_depleted",),
+        "smaller": (),
+        "rel": 0.25,
     },
 }
 
@@ -241,6 +471,21 @@ def main(argv=None) -> int:
     s.add_argument("run", help="run directory or events.jsonl path")
     s.add_argument("--json", action="store_true",
                    help="emit the summary dict as JSON instead of a table")
+    di = sub.add_parser("dist", help="distributional report (quantiles + "
+                                     "histograms) from a run's events.jsonl")
+    di.add_argument("run", help="run directory or events.jsonl path")
+    di.add_argument("--json", action="store_true",
+                    help="emit the dist dict as JSON instead of markdown")
+    di.add_argument("--out", default=None,
+                    help="also write the rendering to this file (the CI "
+                         "artifact)")
+    t = sub.add_parser("trend", help="cross-PR bench trajectory from "
+                                     "BENCH_history.jsonl")
+    t.add_argument("history", help="path to BENCH_history.jsonl")
+    t.add_argument("--bench", default=None,
+                   help="restrict to one benchmark name")
+    t.add_argument("--json", action="store_true",
+                   help="emit the parsed records as JSON")
     d = sub.add_parser("bench-diff",
                        help="tripwire a fresh BENCH_*.json against a "
                             "committed baseline")
@@ -253,10 +498,36 @@ def main(argv=None) -> int:
                    help="override every section's relative tolerance")
     args = ap.parse_args(argv)
 
-    if args.cmd == "summary":
-        summary = summarize(load_events(_events_path(args.run)))
-        print(json.dumps(summary, indent=1) if args.json
-              else render_summary(summary))
+    if args.cmd in ("summary", "dist"):
+        path = _events_path(args.run)
+        if not os.path.exists(path):
+            print(f"error: no event stream at {path} (expected a run "
+                  f"directory holding events.jsonl, or the file itself)",
+                  file=sys.stderr)
+            return 2
+        events = load_events(path)
+        if args.cmd == "summary":
+            summary = summarize(events)
+            print(json.dumps(summary, indent=1) if args.json
+                  else render_summary(summary))
+            return 0
+        report = dist(events)
+        text = json.dumps(report, indent=1) if args.json \
+            else render_dist(report)
+        print(text)
+        if args.out:
+            with open(args.out, "w") as f:
+                f.write(text + "\n")
+        return 0
+
+    if args.cmd == "trend":
+        if not os.path.exists(args.history):
+            print(f"error: no bench history at {args.history}",
+                  file=sys.stderr)
+            return 2
+        records = load_history(args.history)
+        print(json.dumps(records, indent=1) if args.json
+              else render_trend(records, bench=args.bench))
         return 0
 
     with open(args.baseline) as f:

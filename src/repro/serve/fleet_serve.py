@@ -119,11 +119,16 @@ class ServeResult:
     modes: jax.Array | None = None             # (E, N) int32 when recorded
     final_tstate: Any = None                   # traffic state after E epochs
     final_hstate: Any = None                   # harvest state after E epochs
+    final_streak: jax.Array | None = None      # (N,) when hist telemetry on
 
     @property
     def final_state(self):
-        """(charge, traffic state, harvest state) — feed back via
-        ``simulate_serve(state=)`` to continue the horizon."""
+        """(charge, traffic state, harvest state) — or (charge, streak,
+        traffic state, harvest state) when the run carried hist telemetry —
+        feed back via ``simulate_serve(state=)`` to continue the horizon."""
+        if self.final_streak is not None:
+            return (self.final_charge, self.final_streak, self.final_tstate,
+                    self.final_hstate)
         return self.final_charge, self.final_tstate, self.final_hstate
 
     def _rate(self, key):
@@ -156,7 +161,8 @@ class ServeResult:
 
 def _serve_epoch(traffic, harvest, bat: battery_lib.BatteryConfig,
                  cost: DecodeCostModel, qos: QoSSpec, policy, train,
-                 valid, base_key, seed, admit, backend, mesh, emit, carry, t):
+                 valid, base_key, seed, admit, backend, mesh, emit, hist,
+                 carry, t):
     """One serving epoch; shared by the jitted scan body and the eager
     (``use_jit=False``) parity path.  ``seed`` and ``admit`` (the
     controller's admission-threshold scale) are traced scalars; only the
@@ -170,15 +176,23 @@ def _serve_epoch(traffic, harvest, bat: battery_lib.BatteryConfig,
     computed here with *global* per-client indices (the fusion boundary) and
     enter the program as buffers; downstream runs either as plain (N,) jnp
     (`step_ops.run_step_lax`, backend ``"lax"``, the bit-exact reference) or
-    as one fused VMEM tile pass (`kernels.fleet_step`, ``"pallas"``)."""
-    charge, tstate, hstate = carry
+    as one fused VMEM tile pass (`kernels.fleet_step`, ``"pallas"``).
+    ``hist`` (static) carries the per-client depletion streak in the scan
+    state and adds the fixed-bin histogram reductions (DESIGN.md §14)."""
+    if hist:
+        charge, streak, tstate, hstate = carry
+    else:
+        charge, tstate, hstate = carry
     ekey = jax.random.fold_in(base_key, t)
     harvest_j, hstate = harvest.sample(jax.random.fold_in(ekey, 0), t, hstate)
     requests, tstate = traffic.sample(jax.random.fold_in(ekey, 1), t, tstate)
     requests = jnp.asarray(requests, jnp.float32)
-    program, env = step_ops.serve_step_program(bat, cost, qos, policy, train)
+    program, env = step_ops.serve_step_program(bat, cost, qos, policy, train,
+                                               hist=hist)
     env.update(charge=charge, harvest=harvest_j, requests=requests,
                admit=admit, valid=valid)
+    if hist:
+        env["streak"] = streak
     if train is not None and Policy(train.policy) == Policy.SUSTAINABLE:
         env["twant"] = scheduling.sustainable_schedule(
             jnp.asarray(seed), t, jnp.asarray(train.E, jnp.int32), None)
@@ -191,21 +205,27 @@ def _serve_epoch(traffic, harvest, bat: battery_lib.BatteryConfig,
         else:
             state, emits, stats = fleet_step_kernel.fused_step_sharded(
                 program, env, mesh=mesh, **kwargs)
-        return (state["charge_out"], tstate, hstate), emits.get("mode"), stats
+        carry = (state["charge_out"], state["streak_out"], tstate, hstate) \
+            if hist else (state["charge_out"], tstate, hstate)
+        return carry, emits.get("mode"), stats
     env, stats = step_ops.run_step_lax(program, env, valid=valid)
-    return (env["charge_out"], tstate, hstate), env["mode"], stats
+    carry = (env["charge_out"], env["streak_out"], tstate, hstate) if hist \
+        else (env["charge_out"], tstate, hstate)
+    return carry, env["mode"], stats
 
 
 def _serve_scan_impl(traffic, harvest, bat, cost, qos, policy, train, valid,
-                     base_key, charge0, tstate0, hstate0, seed, admit, offset,
-                     num_epochs, record_modes, backend, mesh, tap=None):
+                     base_key, charge0, streak0, tstate0, hstate0, seed,
+                     admit, offset, num_epochs, record_modes, backend, mesh,
+                     hist, tap=None):
     """Shared scan body of `_run_serve_scan` and its tapped twin.  ``tap``
     (a host callback, jit-static by identity) is the opt-in `repro.obs`
     epoch tap: an `io_callback` that only *reads* each epoch's
     stats dict, so the tapped program computes bit-identical results."""
     emit = record_modes if backend == "pallas" else True
     step = partial(_serve_epoch, traffic, harvest, bat, cost, qos, policy,
-                   train, valid, base_key, seed, admit, backend, mesh, emit)
+                   train, valid, base_key, seed, admit, backend, mesh, emit,
+                   hist)
 
     def body(carry, t):
         carry, mode, stats = step(carry, t)
@@ -219,15 +239,18 @@ def _serve_scan_impl(traffic, harvest, bat, cost, qos, policy, train, valid,
             stats = dict(stats, mode=mode)
         return carry, stats
 
-    return jax.lax.scan(body, (charge0, tstate0, hstate0),
+    carry0 = (charge0, streak0, tstate0, hstate0) if hist \
+        else (charge0, tstate0, hstate0)
+    return jax.lax.scan(body, carry0,
                         offset + jnp.arange(num_epochs, dtype=jnp.int32))
 
 
 @partial(jax.jit, static_argnames=("num_epochs", "record_modes", "backend",
-                                   "mesh"))
+                                   "mesh", "hist"))
 def _run_serve_scan(traffic, harvest, bat, cost, qos, policy, train, valid,
-                    base_key, charge0, tstate0, hstate0, seed, admit, offset,
-                    *, num_epochs, record_modes, backend="lax", mesh=None):
+                    base_key, charge0, streak0, tstate0, hstate0, seed,
+                    admit, offset, *, num_epochs, record_modes,
+                    backend="lax", mesh=None, hist=False):
     """The whole-fleet serving scan, jitted ONCE per (process/policy/train
     structure, shapes, horizon, backend): every process, the `QoSSpec`, the
     `DecodeCostModel` and the admission policy are registered pytrees, and
@@ -235,19 +258,23 @@ def _run_serve_scan(traffic, harvest, bat, cost, qos, policy, train, valid,
     admission-threshold sweeps, chunked controller runs) hit the jit cache
     instead of retracing.  ``backend``/``mesh`` are static (the mesh only
     reaches the trace on the pallas path's explicit `shard_map`), so
-    switching backends costs exactly one extra cache entry."""
+    switching backends costs exactly one extra cache entry.  ``hist`` is
+    static too — distributional telemetry changes the program (streak carry
+    + bincount reductions), and the ``hist=False`` program is byte-identical
+    to the pre-hist one, so disabling it costs zero cache entries."""
     return _serve_scan_impl(traffic, harvest, bat, cost, qos, policy, train,
-                            valid, base_key, charge0, tstate0, hstate0, seed,
-                            admit, offset, num_epochs, record_modes, backend,
-                            mesh)
+                            valid, base_key, charge0, streak0, tstate0,
+                            hstate0, seed, admit, offset, num_epochs,
+                            record_modes, backend, mesh, hist)
 
 
 @partial(jax.jit, static_argnames=("num_epochs", "record_modes", "backend",
-                                   "mesh", "tap"))
+                                   "mesh", "hist", "tap"))
 def _run_serve_scan_tapped(traffic, harvest, bat, cost, qos, policy, train,
-                           valid, base_key, charge0, tstate0, hstate0, seed,
-                           admit, offset, *, num_epochs, record_modes,
-                           backend="lax", mesh=None, tap=None):
+                           valid, base_key, charge0, streak0, tstate0,
+                           hstate0, seed, admit, offset, *, num_epochs,
+                           record_modes, backend="lax", mesh=None,
+                           hist=False, tap=None):
     """`_run_serve_scan` with the `repro.obs` in-scan epoch tap compiled in
     (an `io_callback` per epoch streaming the energy seven + serve
     ledger to the host DURING the scan).  A separate jitted function on
@@ -255,9 +282,9 @@ def _run_serve_scan_tapped(traffic, harvest, bat, cost, qos, policy, train,
     untouched by instrumentation (tested), and `Obs.round_tap` memoizes the
     callback so re-runs under the same Obs hit this cache too."""
     return _serve_scan_impl(traffic, harvest, bat, cost, qos, policy, train,
-                            valid, base_key, charge0, tstate0, hstate0, seed,
-                            admit, offset, num_epochs, record_modes, backend,
-                            mesh, tap)
+                            valid, base_key, charge0, streak0, tstate0,
+                            hstate0, seed, admit, offset, num_epochs,
+                            record_modes, backend, mesh, hist, tap)
 
 
 def simulate_serve(traffic, harvest, bat: battery_lib.BatteryConfig,
@@ -267,7 +294,7 @@ def simulate_serve(traffic, harvest, bat: battery_lib.BatteryConfig,
                    record_modes: bool = False, use_jit: bool = True,
                    mesh=None, pad_to: int | None = None, state=None,
                    epoch_offset: int = 0, backend: str = "lax",
-                   obs=None) -> ServeResult:
+                   obs=None, hist: bool = False) -> ServeResult:
     """Simulate ``num_epochs`` serving epochs of battery-gated admission for
     the whole fleet.
 
@@ -307,6 +334,14 @@ def simulate_serve(traffic, harvest, bat: battery_lib.BatteryConfig,
         `io_callback` compiled into a *separate* jitted scan, so
         ``obs=None`` (and the un-tapped scan's jit cache) stays bit-exact
         and untouched.
+      hist: enable distributional telemetry (DESIGN.md §14): the stats dict
+        gains the fixed-bin `repro.obs.hist.SERVE_HIST_SPECS` histograms —
+        each an ``(E, bins)`` array of exact validity-weighted counts — and
+        the scan carries the per-client consecutive-depleted streak
+        (``state`` becomes a 4-tuple ``(charge, streak, traffic_state,
+        harvest_state)``).  Static: the default ``False`` program is
+        byte-identical to the hist-less build and adds zero jit-cache
+        entries.
 
     Returns:
       `ServeResult` with per-epoch aggregate telemetry (host numpy arrays).
@@ -321,8 +356,18 @@ def simulate_serve(traffic, harvest, bat: battery_lib.BatteryConfig,
                 f"{name} process is sized for {proc.num_clients} clients, "
                 f"ServeConfig.num_clients={n}")
     base_key = jax.random.PRNGKey(cfg.seed)
+    streak0 = jnp.zeros((n,), jnp.float32) if hist else None
     if state is None:
         charge0, tstate0, hstate0 = bat.init(n), traffic.init(), harvest.init()
+    elif hist:
+        if len(state) != 4:
+            raise ValueError(
+                "hist=True carries the depletion streak: pass the 4-tuple "
+                "state (charge, streak, traffic_state, harvest_state) from "
+                "a hist run's final_state, not the 3-tuple")
+        charge0, streak0, tstate0, hstate0 = state
+        charge0 = jnp.asarray(charge0, jnp.float32)
+        streak0 = jnp.asarray(streak0, jnp.float32)
     else:
         charge0, tstate0, hstate0 = state
         charge0 = jnp.asarray(charge0, jnp.float32)
@@ -345,15 +390,15 @@ def simulate_serve(traffic, harvest, bat: battery_lib.BatteryConfig,
                              f"data-axis product {axis}")
         n_pad = pad_to
     valid = (jnp.arange(n_pad) < n).astype(jnp.float32)
-    (traffic, harvest, bat, cost, qos, policy, train, charge0, tstate0,
-     hstate0) = _pad_clients(
-        (traffic, harvest, bat, cost, qos, policy, train, charge0, tstate0,
-         hstate0), n, n_pad)
+    (traffic, harvest, bat, cost, qos, policy, train, charge0, streak0,
+     tstate0, hstate0) = _pad_clients(
+        (traffic, harvest, bat, cost, qos, policy, train, charge0, streak0,
+         tstate0, hstate0), n, n_pad)
     if mesh is not None:
         (traffic, harvest, bat, cost, qos, policy, train, valid, charge0,
-         tstate0, hstate0) = _place_fleet(
+         streak0, tstate0, hstate0) = _place_fleet(
             (traffic, harvest, bat, cost, qos, policy, train, valid, charge0,
-             tstate0, hstate0), n_pad, mesh)
+             streak0, tstate0, hstate0), n_pad, mesh)
         base_key = jax.device_put(
             base_key, dist_sharding.shardings_of(
                 jax.sharding.PartitionSpec(), mesh))
@@ -362,34 +407,42 @@ def simulate_serve(traffic, harvest, bat: battery_lib.BatteryConfig,
         obs.write_manifest(
             "serve", config=(traffic, harvest, bat, cost, qos, policy, train),
             seed=cfg.seed, backend=backend, mesh=mesh, num_clients=n,
-            horizon=num_epochs, epoch_offset=epoch_offset, admit=float(admit))
+            horizon=num_epochs, epoch_offset=epoch_offset, admit=float(admit),
+            hist=bool(hist))
 
     seed = jnp.uint32(cfg.seed)
     admit_t = jnp.float32(admit)
     offset = jnp.int32(epoch_offset)
     if use_jit and obs is not None and obs.tap:
-        (charge, tstate, hstate), stats = _run_serve_scan_tapped(
+        carry, stats = _run_serve_scan_tapped(
             traffic, harvest, bat, cost, qos, policy, train, valid, base_key,
-            charge0, tstate0, hstate0, seed, admit_t, offset,
+            charge0, streak0, tstate0, hstate0, seed, admit_t, offset,
             num_epochs=num_epochs, record_modes=record_modes,
             backend=backend, mesh=mesh if backend == "pallas" else None,
-            tap=obs.round_tap("serve"))
+            hist=hist, tap=obs.round_tap("serve"))
     elif use_jit:
-        (charge, tstate, hstate), stats = _run_serve_scan(
+        carry, stats = _run_serve_scan(
             traffic, harvest, bat, cost, qos, policy, train, valid, base_key,
-            charge0, tstate0, hstate0, seed, admit_t, offset,
+            charge0, streak0, tstate0, hstate0, seed, admit_t, offset,
             num_epochs=num_epochs, record_modes=record_modes,
-            backend=backend, mesh=mesh if backend == "pallas" else None)
+            backend=backend, mesh=mesh if backend == "pallas" else None,
+            hist=hist)
     else:
         step = partial(_serve_epoch, traffic, harvest, bat, cost, qos,
                        policy, train, valid, base_key, seed, admit_t,
-                       backend, None, True)
-        carry, outs = (charge0, tstate0, hstate0), []
+                       backend, None, True, hist)
+        carry = (charge0, streak0, tstate0, hstate0) if hist \
+            else (charge0, tstate0, hstate0)
+        outs = []
         for t in range(num_epochs):
             carry, mode, s = step(carry, jnp.int32(epoch_offset + t))
             outs.append(dict(s, mode=mode) if record_modes else s)
-        charge, tstate, hstate = carry
         stats = {k: jnp.stack([o[k] for o in outs]) for k in outs[0]}
+    if hist:
+        charge, streak, tstate, hstate = carry
+        streak = streak[:n]
+    else:
+        (charge, tstate, hstate), streak = carry, None
     modes = stats.pop("mode", None) if record_modes else None
     if modes is not None:
         modes = modes[:, :n]
@@ -398,7 +451,8 @@ def simulate_serve(traffic, harvest, bat: battery_lib.BatteryConfig,
         obs.rounds("serve", epoch_offset, stats)
     return ServeResult(stats=stats, final_charge=charge[:n], modes=modes,
                        final_tstate=_slice_clients(tstate, n, n_pad),
-                       final_hstate=_slice_clients(hstate, n, n_pad))
+                       final_hstate=_slice_clients(hstate, n, n_pad),
+                       final_streak=streak)
 
 
 def run_serve_controlled(traffic, harvest, bat, cost: DecodeCostModel,
@@ -408,7 +462,8 @@ def run_serve_controlled(traffic, harvest, bat, cost: DecodeCostModel,
                          mesh=None, record_modes: bool = False,
                          backend: str = "lax", obs=None,
                          pad_to: int | None = None, checkpoint=None,
-                         resume: bool = False, checkpoint_every: int = 1):
+                         resume: bool = False, checkpoint_every: int = 1,
+                         hist: bool = False):
     """Closed-loop serving horizon: `simulate_serve` in chunks of
     ``control_every`` epochs, with an `energy.control.ServerController`
     adapting its knobs between chunks — the admission-threshold scale
@@ -454,12 +509,14 @@ def run_serve_controlled(traffic, harvest, bat, cost: DecodeCostModel,
         cfg_hash = pytree_hash((
             "serve_controlled", traffic, harvest, bat, cost, qos, policy,
             cfg, train_cost, int(control_every), controller.rules,
-            controller.bounds, controller.groups))
+            controller.bounds, controller.groups, bool(hist)))
         if resume:
+            state_like = (bat.init(n), traffic.init(), harvest.init()) \
+                if not hist else (bat.init(n), jnp.zeros((n,), jnp.float32),
+                                  traffic.init(), harvest.init())
             rc = resume_lib.restore_run(
                 ckptr, kind="serve_controlled", config_hash=cfg_hash,
-                state_like=(bat.init(n), traffic.init(), harvest.init()),
-                seed=cfg.seed, controller=controller)
+                state_like=state_like, seed=cfg.seed, controller=controller)
             if rc is not None:
                 state, start = rc.state, rc.round_offset
                 restored_stats = rc.stats
@@ -497,7 +554,7 @@ def run_serve_controlled(traffic, harvest, bat, cost: DecodeCostModel,
                 traffic, harvest, bat, cost, qos, policy, cfg, chunk,
                 train=train, admit=controller.state.admit, mesh=mesh,
                 pad_to=pad_to, record_modes=record_modes, state=state,
-                epoch_offset=offset, backend=backend)
+                epoch_offset=offset, backend=backend, hist=hist)
         state = res.final_state
         chunks.append(res)
         controller.update(res.stats, n)
@@ -522,10 +579,15 @@ def run_serve_controlled(traffic, harvest, bat, cost: DecodeCostModel,
     stats = acc_stats()
     modes = (np.concatenate([np.asarray(c.modes) for c in chunks])
              if record_modes and chunks else None)
-    final_charge = chunks[-1].final_charge if chunks else state[0]
-    final_tstate = chunks[-1].final_tstate if chunks else state[1]
-    final_hstate = chunks[-1].final_hstate if chunks else state[2]
+    if chunks:
+        last = chunks[-1]
+        final_charge, final_streak = last.final_charge, last.final_streak
+        final_tstate, final_hstate = last.final_tstate, last.final_hstate
+    elif hist:
+        final_charge, final_streak, final_tstate, final_hstate = state
+    else:
+        (final_charge, final_tstate, final_hstate), final_streak = state, None
     out = ServeResult(stats=stats, final_charge=final_charge,
                       modes=modes, final_tstate=final_tstate,
-                      final_hstate=final_hstate)
+                      final_hstate=final_hstate, final_streak=final_streak)
     return out, controller

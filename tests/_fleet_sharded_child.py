@@ -108,6 +108,41 @@ def check_kernel_parity(mesh, n, rounds=20):
                 (n, pol, k, host.stats[k] - fused.stats[k])
 
 
+def check_hist_parity(mesh, n, rounds=20):
+    """The DESIGN.md §14 histogram contract on the mesh: ``hist=True``
+    sharded (lax AND pallas backends) must be bit-exact with host-local —
+    the psum of per-shard validity-weighted bincounts is a sum of {0,1}
+    weights, so the counts are exact integers in fp32 regardless of the
+    reduction tree, and padded phantom lanes (n=21 -> 24) must contribute
+    zero counts.  The carried depletion streak is per-client elementwise
+    state, so `final_streak` must match bit-exactly too."""
+    E = np.asarray(EnergyProfile(n).cycles())
+    proc = Bernoulli.create(n, prob=0.375, amount=1.25)
+    bat = BatteryConfig(capacity=2.5, leak=0.0, init_charge=0.5)
+    for pol in FLEET_POLICIES:
+        cfg = FleetConfig(num_clients=n, policy=pol, threshold=1.5, seed=3)
+        kw = dict(E=E, hist=True)
+        host = simulate_fleet(proc, bat, 0.75, cfg, rounds, **kw)
+        for backend in ("lax", "pallas"):
+            shard = simulate_fleet(proc, bat, 0.75, cfg, rounds, mesh=mesh,
+                                   backend=backend, **kw)
+            for k in host.stats:
+                assert np.array_equal(host.stats[k], shard.stats[k]), \
+                    (n, pol, backend, k)
+            assert np.array_equal(np.asarray(host.final_charge),
+                                  np.asarray(shard.final_charge)), \
+                (n, pol, backend)
+            assert np.array_equal(np.asarray(host.final_streak),
+                                  np.asarray(shard.final_streak)), \
+                (n, pol, backend, "streak")
+            # every histogram row counts exactly the n real clients —
+            # phantom padding lanes carry valid=0 and land in no bin
+            for hk in ("hist_soc", "hist_spend", "hist_streak"):
+                sums = np.asarray(shard.stats[hk]).sum(axis=-1)
+                assert np.array_equal(sums, np.full_like(sums, n)), \
+                    (n, pol, backend, hk, sums)
+
+
 def check_sharded_cache_reuse(mesh, n):
     """Repeat sharded calls with different seeds/thresholds must hit the jit
     cache (same shapes, same shardings), and flipping ``backend`` costs
@@ -215,6 +250,8 @@ def main():
     check_trace_parity(mesh, n=21)
     check_kernel_parity(mesh, n=24)
     check_kernel_parity(mesh, n=21)
+    check_hist_parity(mesh, n=24)
+    check_hist_parity(mesh, n=21)
     check_sharded_cache_reuse(mesh, n=32)
     check_obs_noop(mesh, n=24)
     # a mesh with a model axis: fleet state shards over data axes only

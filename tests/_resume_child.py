@@ -82,7 +82,8 @@ def run_fleet(args, mesh, ckpt):
     res, controller = run_controlled(
         proc, bat, 0.75, cfg, args.rounds, controller,
         control_every=args.control_every, mesh=mesh, pad_to=args.pad_to,
-        backend=args.backend, checkpoint=ckpt, resume=args.resume)
+        backend=args.backend, checkpoint=ckpt, resume=args.resume,
+        hist=args.hist)
     return res, controller, _run_fleet_scan
 
 
@@ -109,7 +110,7 @@ def run_serve(args, mesh, ckpt):
         ServeConfig(num_clients=n, seed=5), args.rounds, controller,
         train_cost=0.25, control_every=args.control_every, mesh=mesh,
         pad_to=args.pad_to, backend=args.backend, checkpoint=ckpt,
-        resume=args.resume)
+        resume=args.resume, hist=args.hist)
     return res, controller, _run_serve_scan
 
 
@@ -125,6 +126,10 @@ def main():
     p.add_argument("--ckpt", default=None)
     p.add_argument("--out", default=None)
     p.add_argument("--resume", action="store_true")
+    p.add_argument("--hist", action="store_true",
+                   help="hist=True run: in-scan histograms + the carried "
+                        "depletion streak ride the checkpoints (DESIGN.md "
+                        "§14); kill-and-resume must stay bit-exact on them")
     p.add_argument("--kill-after-saves", type=int, default=None)
     p.add_argument("--signal", default="KILL", choices=sorted(SIGNALS))
     p.add_argument("--corrupt", default="none",
@@ -149,6 +154,8 @@ def main():
     if args.out:
         payload = {"stat_" + k: np.asarray(v) for k, v in res.stats.items()}
         payload["final_charge"] = np.asarray(res.final_charge)
+        if getattr(res, "final_streak", None) is not None:
+            payload["final_streak"] = np.asarray(res.final_streak)
         payload.update({"ctl_" + k: v
                         for k, v in pack_controller(controller).items()})
         np.savez(args.out, **payload)

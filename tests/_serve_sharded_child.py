@@ -133,6 +133,41 @@ def check_kernel_parity(mesh, n, epochs=20):
                 (n, pol, k, host.stats[k] - fused.stats[k])
 
 
+def check_hist_parity(mesh, n, epochs=20):
+    """The DESIGN.md §14 histogram contract on the sharded serve path:
+    ``hist=True`` (lax AND pallas backends) must be bit-exact with
+    host-local — psum-ed validity-weighted bincounts are exact-integer f32
+    sums, padded phantom lanes contribute zero counts, and the carried
+    depletion streak (elementwise per-client state) matches bit-exactly."""
+    traffic = Constant.create(n, rate=2.0)
+    harvest = Bernoulli.create(n, prob=0.375, amount=1.25)
+    bat = BatteryConfig(capacity=2.5, leak=0.0, init_charge=0.5)
+    cost = DecodeCostModel(2.0 ** -8, 2.0 ** -9, 2.0 ** -6)
+    train = TrainLoad.create(np.full(n, 4), 0.25)
+    for pol in _policies(n):
+        cfg = ServeConfig(num_clients=n, seed=3)
+        kw = dict(train=train, hist=True)
+        host = simulate_serve(traffic, harvest, bat, cost, QOS, pol, cfg,
+                              epochs, **kw)
+        for backend in ("lax", "pallas"):
+            shard = simulate_serve(traffic, harvest, bat, cost, QOS, pol,
+                                   cfg, epochs, mesh=mesh, backend=backend,
+                                   **kw)
+            for k in host.stats:
+                assert np.array_equal(host.stats[k], shard.stats[k]), \
+                    (n, pol, backend, k)
+            assert np.array_equal(np.asarray(host.final_charge),
+                                  np.asarray(shard.final_charge)), \
+                (n, pol, backend)
+            assert np.array_equal(np.asarray(host.final_streak),
+                                  np.asarray(shard.final_streak)), \
+                (n, pol, backend, "streak")
+            for hk in ("hist_soc", "hist_spend", "hist_streak"):
+                sums = np.asarray(shard.stats[hk]).sum(axis=-1)
+                assert np.array_equal(sums, np.full_like(sums, n)), \
+                    (n, pol, backend, hk, sums)
+
+
 def check_sharded_cache_reuse(mesh, n):
     """Repeat sharded calls with different seeds/admission scales must hit
     the jit cache (same shapes, same shardings)."""
@@ -247,6 +282,8 @@ def main():
     check_trace_parity(mesh, n=21)
     check_kernel_parity(mesh, n=24)
     check_kernel_parity(mesh, n=21)
+    check_hist_parity(mesh, n=24)
+    check_hist_parity(mesh, n=21)
     check_sharded_cache_reuse(mesh, n=32)
     check_obs_noop(mesh, n=24)
     # a mesh with a model axis: serve state shards over data axes only

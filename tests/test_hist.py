@@ -1,0 +1,516 @@
+"""Distributional fleet telemetry (DESIGN.md §14): the fixed-bin histogram
+contract, the carried depletion-streak counter, and the percentile-aware
+reporting stack.
+
+Layers under test:
+
+* **Golden primitives** — `bin_index`/`masked_bincount`/
+  `quantiles_from_counts`/`sparkline` against hand-computed values on
+  dyadic grids (every expected number is exactly representable in fp32, so
+  comparisons are ``array_equal``, not ``allclose``).
+* **In-scan histograms** — ``hist=True`` fleet and serve runs on the
+  exact-arithmetic config: counts are exact integers summing to N per
+  round, bit-exact across the lax and pallas backends and with round-by-
+  round chunked stepping, verified against an independent host-side numpy
+  re-binning of the observable per-round state (charge via chunk stepping,
+  spend via recorded masks, streak via the frac_depleted cross-check).
+* **Zero-overhead contract** — ``hist=False`` after a ``hist=True`` run
+  retraces nothing; ``hist`` is a jit static costing exactly one extra
+  cache entry per backend.
+* **Percentile-aware control** — `Telemetry.p95_frac_depleted` /
+  `hist_quantiles`, the ``signal="p95"`` rule variants, and the packed-
+  controller round trip through checkpoint columns.
+* **Reporting** — ``report dist`` reproduces the PR-5 depletion-tail p95
+  comparison from streamed events alone; ``trend`` renders the bench
+  trajectory; CLI exit codes.
+
+The 8-device sharded twins of the parity tests live in
+``_fleet_sharded_child.py``/``_serve_sharded_child.py`` (`check_hist_parity`).
+"""
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.core import EnergyProfile, Policy
+from repro.energy import (BatteryConfig, Bernoulli, DecodeCostModel,
+                          FleetConfig, MarkovSolar, ServerController,
+                          run_controlled, simulate_fleet)
+from repro.energy.control import CadenceRule, ControlBounds, Telemetry
+from repro.energy.fleet import _run_fleet_scan
+from repro.obs import Obs, load_events
+from repro.obs.hist import (FLEET_HIST_SPECS, SOC_SPEC, SPECS_BY_NAME,
+                            STREAK_SPEC, HistSpec, bin_index, is_hist_key,
+                            masked_bincount, quantiles_from_counts,
+                            sparkline)
+from repro.obs.report import dist, load_history, render_dist, render_trend
+from repro.serve import (BatteryGated, Constant, QoSSpec, ServeConfig,
+                         run_serve_controlled, simulate_serve)
+from repro.serve.fleet_serve import _run_serve_scan
+
+_REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+QOS = QoSSpec(prompt_tokens=64.0, full_decode_tokens=128.0,
+              short_decode_tokens=32.0)
+COST = DecodeCostModel(2.0 ** -8, 2.0 ** -9, 2.0 ** -6)
+
+
+def _fleet_args(n, seed=3):
+    """The exact-arithmetic dyadic config of the sharded-parity children."""
+    E = np.asarray(EnergyProfile(n).cycles())
+    proc = Bernoulli.create(n, prob=0.375, amount=1.25)
+    bat = BatteryConfig(capacity=2.5, leak=0.0, init_charge=0.5)
+    cfg = FleetConfig(num_clients=n, policy=Policy.THRESHOLD, threshold=1.5,
+                      seed=seed)
+    return proc, bat, 0.75, cfg, E
+
+
+def _serve_args(n, seed=3):
+    traffic = Constant.create(n, rate=2.0)
+    harvest = Bernoulli.create(n, prob=0.375, amount=1.25)
+    bat = BatteryConfig(capacity=2.5, leak=0.0, init_charge=0.5)
+    cfg = ServeConfig(num_clients=n, seed=seed)
+    pol = BatteryGated.create(n, hi=1.0, lo=1.0)
+    return traffic, harvest, bat, cfg, pol
+
+
+def _host_bin(values, spec):
+    """The DESIGN.md §14 bin rule recomputed in host numpy — the identical
+    fp32 expression the lax backend and the pallas kernel evaluate."""
+    v = np.asarray(values, np.float32)
+    scale = np.float32(spec.bins / (spec.hi - spec.lo))
+    idx = np.floor((v - np.float32(spec.lo)) * scale)
+    idx = np.clip(idx, 0, spec.bins - 1).astype(np.int64)
+    return np.bincount(idx, minlength=spec.bins).astype(np.float32)
+
+
+# ------------------------------------------------------ golden primitives ---
+
+def test_bin_index_golden():
+    import jax.numpy as jnp
+    v = jnp.asarray([0.0, 0.03125, 0.03124, 0.5, 0.96875, 0.999, 1.0, 1.5,
+                     -0.25], jnp.float32)
+    idx = np.asarray(bin_index(v, SOC_SPEC.lo, SOC_SPEC.hi, SOC_SPEC.bins))
+    # 32 bins over [0,1): width 1/32 = 0.03125 (dyadic, exact in fp32)
+    assert idx.tolist() == [0, 1, 0, 16, 31, 31, 31, 31, 0]
+    # 64 unit-width bins over [0,64): integer streaks land on bin == value
+    s = jnp.asarray([0.0, 1.0, 2.0, 63.0, 64.0, 200.0], jnp.float32)
+    assert np.asarray(bin_index(s, STREAK_SPEC.lo, STREAK_SPEC.hi,
+                                STREAK_SPEC.bins)).tolist() == \
+        [0, 1, 2, 63, 63, 63]
+
+
+def test_masked_bincount_golden():
+    import jax.numpy as jnp
+    spec = HistSpec("hist_t", "t", 0.0, 1.0, 4)      # bins [0,.25,.5,.75,1)
+    v = jnp.asarray([0.0, 0.25, 0.3, 0.8, 0.99, 2.0], jnp.float32)
+    valid = jnp.asarray([1, 1, 1, 1, 0, 1], jnp.float32)
+    counts = np.asarray(masked_bincount(v, valid, spec))
+    # 0.99 is masked out; 0.8 and the clamped 2.0 share the top bin
+    assert counts.tolist() == [1.0, 2.0, 0.0, 2.0]
+    assert counts.dtype == np.float32
+
+
+def test_quantiles_from_counts_golden():
+    spec = HistSpec("hist_t", "t", 0.0, 1.0, 4)
+    # cum = [4,4,4,8]: p50 target 4 -> first bin, upper edge 0.25;
+    # p95 target 7.6 -> last bin, upper edge 1.0
+    q = quantiles_from_counts([4, 0, 0, 4], spec)
+    assert q == {"p50": 0.25, "p95": 1.0, "p99": 1.0}
+    # an all-zero histogram reports lo for every q
+    assert quantiles_from_counts([0, 0, 0, 0], spec) == \
+        {"p50": 0.0, "p95": 0.0, "p99": 0.0}
+    with pytest.raises(ValueError):
+        quantiles_from_counts([1, 2, 3], spec)
+
+
+def test_sparkline_shape_and_zero_row():
+    assert sparkline([0, 0, 0]) == "   "
+    line = sparkline([1, 0, 8])
+    assert len(line) == 3 and line[2] == "█" and line[1] == " "
+
+
+def test_specs_registry():
+    assert tuple(s.name for s in FLEET_HIST_SPECS) == \
+        ("hist_soc", "hist_spend", "hist_streak")
+    for s in FLEET_HIST_SPECS:
+        assert SPECS_BY_NAME[s.name] is s
+        edges = s.edges()
+        assert edges.shape == (s.bins + 1,)
+        assert edges[0] == s.lo and edges[-1] == s.hi
+    assert is_hist_key("hist_soc") and not is_hist_key("frac_depleted")
+
+
+# ----------------------------------------------- in-scan fleet histograms ---
+
+def test_fleet_hist_counts_vs_host_oracle():
+    """Every streamed histogram row re-derived on the host: SoC from the
+    (bit-exact, tested) chunked per-round final charge, spend from the
+    recorded participation masks, streak via its defining recurrence and
+    the independent ``frac_depleted`` stat — all binned by the identical
+    numpy fp32 expression and compared ``array_equal``."""
+    n, rounds = 16, 10
+    proc, bat, cost, cfg, E = _fleet_args(n)
+    res = simulate_fleet(proc, bat, cost, cfg, rounds, E=E, hist=True,
+                         record_masks=True)
+    assert res.final_streak is not None and res.final_streak.shape == (n,)
+
+    # per-round charge/streak observed by stepping one round at a time
+    # (chunk continuity with the one-shot scan is the PR-8 contract)
+    state, prev_streak = None, np.zeros(n, np.float32)
+    for r in range(rounds):
+        step = simulate_fleet(proc, bat, cost, cfg, 1, E=E, hist=True,
+                              state=state, round_offset=r)
+        state = step.final_state
+        charge = np.asarray(step.final_charge)
+        streak = np.asarray(step.final_streak)
+
+        soc = charge / 2.5
+        assert np.array_equal(np.asarray(res.stats["hist_soc"][r]),
+                              _host_bin(soc, SPECS_BY_NAME["hist_soc"])), r
+        spend = np.asarray(res.masks[r], np.float32) * np.float32(cost) \
+            / np.float32(2.5)
+        assert np.array_equal(np.asarray(res.stats["hist_spend"][r]),
+                              _host_bin(spend, SPECS_BY_NAME["hist_spend"])
+                              ), r
+        assert np.array_equal(np.asarray(res.stats["hist_streak"][r]),
+                              _host_bin(streak, STREAK_SPEC)), r
+
+        # streak recurrence: 0 or prev+1, and its support IS the depleted
+        # fraction the energy seven reports independently
+        assert np.all((streak == 0) | (streak == prev_streak + 1.0)), r
+        assert float((streak > 0).mean()) == \
+            pytest.approx(float(res.stats["frac_depleted"][r])), r
+        prev_streak = streak
+
+    assert np.array_equal(np.asarray(res.final_streak), prev_streak)
+
+
+def test_fleet_hist_rides_along_without_changing_the_run():
+    """``hist=True`` must not perturb the energy seven, the masks, or the
+    final charge (bit-exact), and every histogram row counts exactly N."""
+    n, rounds = 21, 12
+    proc, bat, cost, cfg, E = _fleet_args(n)
+    base = simulate_fleet(proc, bat, cost, cfg, rounds, E=E,
+                          record_masks=True)
+    hist = simulate_fleet(proc, bat, cost, cfg, rounds, E=E, hist=True,
+                          record_masks=True)
+    assert np.array_equal(np.asarray(base.masks), np.asarray(hist.masks))
+    assert np.array_equal(np.asarray(base.final_charge),
+                          np.asarray(hist.final_charge))
+    for k in base.stats:
+        assert np.array_equal(base.stats[k], hist.stats[k]), k
+    for k in ("hist_soc", "hist_spend", "hist_streak"):
+        counts = np.asarray(hist.stats[k])
+        assert counts.shape == (rounds, SPECS_BY_NAME[k].bins)
+        assert np.array_equal(counts.sum(axis=1),
+                              np.full(rounds, float(n), np.float32)), k
+        assert np.array_equal(counts, np.round(counts)), k  # exact integers
+
+
+@pytest.mark.parametrize("n", [16, 21])
+def test_fleet_hist_backend_parity_host_local(n):
+    """lax vs pallas ``hist=True`` bit-exactness host-local, N divisible
+    by the tile grid and not (masked tail tile must contribute zero
+    counts)."""
+    proc, bat, cost, cfg, E = _fleet_args(n)
+    lax = simulate_fleet(proc, bat, cost, cfg, 10, E=E, hist=True)
+    pal = simulate_fleet(proc, bat, cost, cfg, 10, E=E, hist=True,
+                         backend="pallas")
+    for k in lax.stats:
+        assert np.array_equal(lax.stats[k], pal.stats[k]), (n, k)
+    assert np.array_equal(np.asarray(lax.final_streak),
+                          np.asarray(pal.final_streak))
+
+
+def test_fleet_hist_zero_cache_growth_when_disabled():
+    """``hist`` is a jit static: flipping it on costs exactly one extra
+    scan-cache entry, and the ``hist=False`` program is reused untouched
+    afterwards — disabled runs pay zero compile or cache cost."""
+    n = 12
+    proc, bat, cost, cfg, E = _fleet_args(n)
+
+    def run(seed, hist):
+        c = FleetConfig(num_clients=n, policy=Policy.THRESHOLD,
+                        threshold=1.5, seed=seed)
+        return simulate_fleet(proc, bat, cost, c, 6, E=E, hist=hist)
+
+    run(0, False)
+    size = _run_fleet_scan._cache_size()
+    run(1, False)
+    assert _run_fleet_scan._cache_size() == size
+    run(0, True)
+    assert _run_fleet_scan._cache_size() == size + 1, \
+        "hist=True must cost exactly one extra cache entry"
+    run(2, True)
+    run(3, False)
+    assert _run_fleet_scan._cache_size() == size + 1, \
+        "toggling hist retraced an already-compiled program"
+
+
+def test_fleet_hist_chunked_state_roundtrip():
+    """A hist run split at an arbitrary boundary through the 3-tuple
+    ``final_state`` reproduces the one-shot histograms and streak bitwise;
+    feeding a hist=False 2-tuple state into a hist=True run is an error."""
+    n, rounds, split = 16, 12, 5
+    proc, bat, cost, cfg, E = _fleet_args(n)
+    whole = simulate_fleet(proc, bat, cost, cfg, rounds, E=E, hist=True)
+    a = simulate_fleet(proc, bat, cost, cfg, split, E=E, hist=True)
+    b = simulate_fleet(proc, bat, cost, cfg, rounds - split, E=E, hist=True,
+                       state=a.final_state, round_offset=split)
+    for k in whole.stats:
+        joined = np.concatenate([np.asarray(a.stats[k]),
+                                 np.asarray(b.stats[k])])
+        assert np.array_equal(np.asarray(whole.stats[k]), joined), k
+    assert np.array_equal(np.asarray(whole.final_streak),
+                          np.asarray(b.final_streak))
+
+    plain = simulate_fleet(proc, bat, cost, cfg, split, E=E)
+    with pytest.raises(ValueError, match="hist=True carries"):
+        simulate_fleet(proc, bat, cost, cfg, 1, E=E, hist=True,
+                       state=plain.final_state, round_offset=split)
+
+
+# ----------------------------------------------- in-scan serve histograms ---
+
+def test_serve_hist_counts_and_backend_parity():
+    n, epochs = 16, 10
+    traffic, harvest, bat, cfg, pol = _serve_args(n)
+    base = simulate_serve(traffic, harvest, bat, COST, QOS, pol, cfg, epochs)
+    lax = simulate_serve(traffic, harvest, bat, COST, QOS, pol, cfg, epochs,
+                         hist=True)
+    pal = simulate_serve(traffic, harvest, bat, COST, QOS, pol, cfg, epochs,
+                         hist=True, backend="pallas")
+    for k in base.stats:       # the ledger is untouched by instrumentation
+        assert np.array_equal(base.stats[k], lax.stats[k]), k
+    for k in lax.stats:
+        assert np.array_equal(lax.stats[k], pal.stats[k]), k
+    assert np.array_equal(np.asarray(lax.final_streak),
+                          np.asarray(pal.final_streak))
+    for k in ("hist_soc", "hist_spend", "hist_streak"):
+        counts = np.asarray(lax.stats[k])
+        assert np.array_equal(counts.sum(axis=1),
+                              np.full(epochs, float(n), np.float32)), k
+    # SoC rows against the host oracle via chunked stepping
+    state = None
+    for t in range(epochs):
+        step = simulate_serve(traffic, harvest, bat, COST, QOS, pol, cfg, 1,
+                              hist=True, state=state, epoch_offset=t)
+        state = step.final_state
+        soc = np.asarray(step.final_charge) / 2.5
+        assert np.array_equal(np.asarray(lax.stats["hist_soc"][t]),
+                              _host_bin(soc, SOC_SPEC)), t
+        assert float((np.asarray(step.final_streak) > 0).mean()) == \
+            pytest.approx(float(lax.stats["frac_depleted"][t])), t
+
+
+def test_serve_hist_state_guard_and_cache():
+    n = 12
+    traffic, harvest, bat, cfg, pol = _serve_args(n)
+    plain = simulate_serve(traffic, harvest, bat, COST, QOS, pol, cfg, 4)
+    with pytest.raises(ValueError, match="hist=True carries"):
+        simulate_serve(traffic, harvest, bat, COST, QOS, pol, cfg, 2,
+                       hist=True, state=plain.final_state, epoch_offset=4)
+
+    def run(seed, hist):
+        c = ServeConfig(num_clients=n, seed=seed)
+        return simulate_serve(traffic, harvest, bat, COST, QOS, pol, c, 4,
+                              hist=hist)
+
+    run(0, False)
+    size = _run_serve_scan._cache_size()
+    run(1, False)
+    run(0, True)
+    run(2, True)
+    run(3, False)
+    assert _run_serve_scan._cache_size() == size + 1
+
+
+# ------------------------------------------------ percentile-aware control --
+
+def test_telemetry_p95_and_hist_quantiles():
+    n, rounds = 16, 12
+    proc, bat, cost, cfg, E = _fleet_args(n)
+    res = simulate_fleet(proc, bat, cost, cfg, rounds, E=E, hist=True)
+    tel = Telemetry.from_stats(res.stats, n)
+    fd = np.asarray(res.stats["frac_depleted"], np.float64)
+    assert tel.p95_frac_depleted == float(np.percentile(fd, 95))
+    assert tel.depletion("p95") == tel.p95_frac_depleted
+    assert tel.depletion("mean") == tel.frac_depleted
+    with pytest.raises(ValueError):
+        tel.depletion("p midway")
+    assert set(tel.hist_quantiles) == {"hist_soc", "hist_spend",
+                                       "hist_streak"}
+    for k, q in tel.hist_quantiles.items():
+        spec = SPECS_BY_NAME[k]
+        counts = np.asarray(res.stats[k], np.float64).sum(0)
+        assert q == quantiles_from_counts(counts, spec), k
+    # hist=False stats produce no hist_quantiles, p95 still defined
+    tel0 = Telemetry.from_stats(
+        simulate_fleet(proc, bat, cost, cfg, rounds, E=E).stats, n)
+    assert tel0.hist_quantiles is None
+    assert tel0.p95_frac_depleted == tel.p95_frac_depleted
+
+
+def test_cadence_rule_p95_signal_sees_tail_rounds():
+    """A period whose MEAN depletion looks healthy but whose p95 is deep in
+    drought: the default mean-signal rule holds T, the tail-aware
+    ``signal="p95"`` variant backs off."""
+    from repro.energy.control import ControlState
+    tel = Telemetry(participation_rate=0.5, frac_depleted=0.05,
+                    overflow_frac=0.0, mean_charge=1.0,
+                    p95_frac_depleted=0.9)
+    state = ControlState(T=8, E=np.asarray([4]))
+    bounds = ControlBounds(t_min=1, t_max=10)
+    assert CadenceRule()(state, tel, bounds).T == 8
+    assert CadenceRule(signal="p95")(state, tel, bounds).T == 4
+
+
+def test_controlled_hist_run_and_checkpoint_columns(tmp_path):
+    """`run_controlled(hist=True)`: controller telemetry carries the
+    quantiles, and the packed trace round-trips them (the checkpoint column
+    encoding) exactly."""
+    from repro.checkpoint import pack_controller, unpack_controller
+
+    n, rounds = 16, 12
+    proc, bat, cost, cfg, E = _fleet_args(n)
+    ctrl = ServerController(T0=5, E0=4,
+                            bounds=ControlBounds(t_min=1, t_max=10),
+                            rules=(CadenceRule(signal="p95"),))
+    res, ctrl = run_controlled(proc, bat, cost, cfg, rounds, ctrl,
+                               control_every=4, hist=True)
+    assert "hist_soc" in res.stats
+    assert len(ctrl.trace) == 3
+    for t in ctrl.trace:
+        assert t["telemetry"].hist_quantiles is not None
+    packed = pack_controller(ctrl)
+    assert any(k.startswith("tel_hq_hist_soc_") for k in packed)
+    restored = ServerController(T0=5, E0=4,
+                                bounds=ControlBounds(t_min=1, t_max=10))
+    unpack_controller(restored, packed)
+    for a, b in zip(ctrl.trace, restored.trace):
+        assert a["telemetry"].hist_quantiles == \
+            b["telemetry"].hist_quantiles
+        assert a["telemetry"].p95_frac_depleted == \
+            b["telemetry"].p95_frac_depleted
+
+
+# ------------------------------------------------------------- reporting ----
+
+def test_dist_reproduces_depletion_tail_comparison(tmp_path):
+    """The PR-5 acceptance readout — per-run depletion-tail p95s (trace
+    0.32 vs twin 0.25 at full scale) — recovered from streamed events
+    ALONE: two controlled serve runs under rich vs drought harvest stream
+    into separate obs dirs; `dist` on each events.jsonl must reproduce
+    ``np.percentile(stats['frac_depleted'], 95)`` exactly, order the
+    regimes correctly, and carry the exact whole-run histogram counts."""
+    n, epochs = 24, 16
+    traffic = Constant.create(n, rate=2.0)
+    bat = BatteryConfig(capacity=2.5, leak=0.0, init_charge=0.5)
+    cfg = ServeConfig(num_clients=n, seed=3)
+    p95 = {}
+    stats = {}
+    for name, day_mean in (("rich", 2.0), ("drought", 0.4)):
+        harvest = MarkovSolar.create(n, day_mean=day_mean)
+        ctrl = ServerController(T0=4, E0=4)
+        with Obs(tmp_path / name) as obs:
+            res, _ = run_serve_controlled(
+                traffic, harvest, bat, COST, QOS, BatteryGated.create(n),
+                cfg, epochs, ctrl, control_every=4, obs=obs, hist=True)
+        stats[name] = res.stats
+        report = dist(load_events(tmp_path / name / "events.jsonl"))
+        scan = report["scans"]["serve"]
+        assert scan["rounds"] == epochs
+        got = scan["scalar_quantiles"]["frac_depleted"]["p95"]
+        want = float(np.percentile(
+            np.asarray(res.stats["frac_depleted"], np.float64), 95))
+        assert got == want, name
+        p95[name] = got
+        # streamed hist counts == in-memory counts, exactly
+        soc = scan["hists"]["hist_soc"]
+        assert np.array_equal(
+            np.asarray(soc["total_counts"], np.float64),
+            np.asarray(res.stats["hist_soc"], np.float64).sum(0)), name
+        md = render_dist(report)
+        assert "hist_soc" in md and "p95" in md
+    assert p95["drought"] > p95["rich"]
+
+
+def test_trend_load_and_render(tmp_path):
+    path = tmp_path / "hist.jsonl"
+    recs = [{"bench": "fleet_scale", "git_rev": "a" * 40,
+             "recorded": "2026-08-01T00:00:00Z",
+             "headline": {"max_client_rounds_per_s": 1e6}},
+            {"bench": "fleet_scale", "git_rev": "b" * 40,
+             "recorded": "2026-08-08T00:00:00Z",
+             "headline": {"max_client_rounds_per_s": 2e6,
+                          "drought_p95_frac_depleted": 0.25}}]
+    with open(path, "w") as f:
+        for r in recs:
+            f.write(json.dumps(r) + "\n")
+        f.write("\n{torn")                     # torn tail line is skipped
+    loaded = load_history(str(path))
+    assert loaded == recs
+    text = render_trend(loaded)
+    assert "fleet_scale: 2 run(s)" in text
+    assert "a" * 12 in text and "b" * 12 in text
+    assert "drought_p95_frac_depleted" in text
+    assert render_trend([], bench=None) == "(empty history)"
+    assert "no history records" in render_trend(loaded, bench="nope")
+
+
+def test_fmt_append_history(tmp_path):
+    from benchmarks._fmt import append_history
+    path = str(tmp_path / "h.jsonl")
+    rec = append_history(path, "fleet_scale", {"x": 1.5, "drop": None},
+                         {"git_rev": "cafe", "run_id": "r-1"}, smoke=True)
+    append_history(path, "serve_scale", {"y": 2.0}, None)
+    rows = load_history(path)
+    assert rows[0] == rec
+    assert rows[0]["git_rev"] == "cafe" and rows[0]["smoke"] is True
+    assert rows[0]["headline"] == {"x": 1.5}        # None values dropped
+    assert rows[1]["git_rev"] is None and rows[1]["bench"] == "serve_scale"
+    assert all("recorded" in r for r in rows)
+
+
+def _run_cli(args, cwd):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(_REPO, "src")]
+        + ([env["PYTHONPATH"]] if env.get("PYTHONPATH") else []))
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    return subprocess.run([sys.executable, "-m", "repro.obs.report", *args],
+                          env=env, cwd=cwd, capture_output=True, text=True,
+                          timeout=240)
+
+
+def test_report_cli_dist_and_trend(tmp_path):
+    n, rounds = 12, 6
+    proc, bat, cost, cfg, E = _fleet_args(n)
+    with Obs(tmp_path / "run") as obs:
+        simulate_fleet(proc, bat, cost, cfg, rounds, E=E, obs=obs,
+                       hist=True)
+    out = _run_cli(["dist", str(tmp_path / "run"),
+                    "--out", str(tmp_path / "dist.md")], cwd=_REPO)
+    assert out.returncode == 0, out.stderr
+    md = (tmp_path / "dist.md").read_text()
+    assert "# Distributional telemetry" in md and "hist_streak" in md
+    out = _run_cli(["dist", str(tmp_path / "run"), "--json"], cwd=_REPO)
+    assert out.returncode == 0
+    rep = json.loads(out.stdout)
+    assert rep["scans"]["fleet"]["rounds"] == rounds
+
+    (tmp_path / "h.jsonl").write_text(json.dumps(
+        {"bench": "fleet_scale", "git_rev": "d" * 40,
+         "recorded": "2026-08-09", "headline": {"m": 1.0}}) + "\n")
+    out = _run_cli(["trend", str(tmp_path / "h.jsonl")], cwd=_REPO)
+    assert out.returncode == 0 and "fleet_scale" in out.stdout
+
+    # missing inputs exit 2 with a diagnostic, not a traceback
+    out = _run_cli(["dist", str(tmp_path / "nope")], cwd=_REPO)
+    assert out.returncode == 2 and "no event stream" in out.stderr
+    out = _run_cli(["summary", str(tmp_path / "nope")], cwd=_REPO)
+    assert out.returncode == 2 and "no event stream" in out.stderr

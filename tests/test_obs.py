@@ -324,6 +324,109 @@ def test_telemetry_zero_denominators_are_defined():
     assert z.participation_rate == 0.0
 
 
+def test_emit_rounds_groups_inline_and_hists_split(tmp_path):
+    """`MetricStream.emit_rounds`: per-group columns (`GROUP_KEYS`) ride
+    inline in round events as G-length lists and survive into
+    ``summarize``'s ``group_means``; ``hist_*`` matrices are split out as
+    one exact-integer ``hist`` event per (round, histogram) behind a single
+    ``hist_spec``; (R, N) recordings (`_SKIP_KEYS`) never leak into the
+    stream."""
+    from repro.obs import summarize
+    from repro.obs.metrics import EventLog, MetricStream
+
+    R, G = 3, 2
+    stats = {
+        "participants": np.asarray([4.0, 5.0, 6.0]),
+        "frac_depleted": np.asarray([0.0, 0.5, 0.25]),
+        "group_participants": np.arange(R * G, dtype=np.float64
+                                        ).reshape(R, G),
+        "group_frac_depleted": np.asarray([[0.0, 1.0], [0.5, 0.5],
+                                           [0.25, 0.75]]),
+        "hist_soc": np.tile(np.eye(1, 32, 3, dtype=np.float64) * 8, (R, 1)),
+        "mask": np.ones((R, 100)),
+    }
+    log = EventLog(tmp_path / "events.jsonl")
+    assert MetricStream(log).emit_rounds("fleet", 10, stats) == R
+    log.close()
+    ev = load_events(tmp_path / "events.jsonl")
+
+    rounds = [e for e in ev if e["kind"] == "round"]
+    assert [e["round"] for e in rounds] == [10, 11, 12]
+    assert rounds[1]["group_frac_depleted"] == [0.5, 0.5]
+    assert all("mask" not in e and "hist_soc" not in e for e in rounds)
+    hists = [e for e in ev if e["kind"] == "hist"]
+    assert [(e["round"], e["name"]) for e in hists] == \
+        [(10 + i, "hist_soc") for i in range(R)]
+    assert hists[0]["counts"][3] == 8 \
+        and all(isinstance(c, int) for c in hists[0]["counts"])
+    specs = [e for e in ev if e["kind"] == "hist_spec"]
+    assert len(specs) == 1 and specs[0]["bins"] == 32 \
+        and specs[0]["buf"] == "soc"
+
+    s = summarize(ev)
+    assert s["scans"]["fleet"]["group_means"]["group_frac_depleted"] == \
+        [0.25, 0.75]
+    assert s["hists"]["fleet"]["hist_soc"] == R
+
+
+def test_grouped_fleet_streams_group_columns(tmp_path):
+    """End to end: a grouped `simulate_fleet` run streams
+    ``group_frac_depleted`` per round and ``report summary`` surfaces the
+    per-group mean row."""
+    n, rounds, num_groups = 16, 8, 4
+    proc, bat, cost, cfg, E = _fleet_args(n)
+    groups = np.arange(n) % num_groups
+    with Obs(tmp_path) as obs:
+        res = simulate_fleet(proc, bat, cost, cfg, rounds, E=E,
+                             groups=groups, obs=obs)
+    ev = load_events(obs.log.path)
+    rnds = sorted((e for e in ev if e["kind"] == "round"),
+                  key=lambda e: e["round"])
+    for i, e in enumerate(rnds):
+        assert np.allclose(e["group_frac_depleted"],
+                           np.asarray(res.stats["group_frac_depleted"][i],
+                                      np.float64), atol=1e-6), i
+    from repro.obs import summarize
+    gm = summarize(ev)["scans"]["fleet"]["group_means"]
+    assert len(gm["group_frac_depleted"]) == num_groups
+    out = _run_cli(["summary", str(tmp_path)], cwd=_REPO)
+    assert out.returncode == 0, out.stderr
+    assert "group_frac_depleted (per-group mean):" in out.stdout
+
+
+def test_summary_degenerate_streams(tmp_path):
+    """Satellite hardening: manifest-only and resume-only event streams
+    must summarize cleanly — both via `summarize`/`render_summary` and
+    through the CLI (exit 0), never a traceback."""
+    from repro.obs import EventLog, render_summary, summarize
+
+    with Obs(tmp_path / "manifest_only") as obs:
+        obs.write_manifest("fleet", seed=0, num_clients=4, horizon=0)
+    s = summarize(load_events(obs.log.path))
+    assert s["scans"] == {} and s["manifest"] is not None
+    text = render_summary(s)
+    assert "(no round events)" in text
+    out = _run_cli(["summary", str(tmp_path / "manifest_only")], cwd=_REPO)
+    assert out.returncode == 0, out.stderr
+    assert "(no round events)" in out.stdout
+
+    # a resumed run's fresh log: resume event first, no manifest, no rounds
+    d = tmp_path / "resume_only"
+    d.mkdir()
+    log = EventLog(d / "events.jsonl")
+    log.emit("resume", run_kind="fleet_controlled", round=12, horizon=36,
+             checkpoint_dir="ckpts/run1")
+    log.close()
+    s = summarize(load_events(d / "events.jsonl"))
+    text = render_summary(s)
+    assert "starts at a resume" in text
+    assert "resumed fleet_controlled at round 12/36" in text
+    assert "(no round events)" in text
+    out = _run_cli(["summary", str(d)], cwd=_REPO)
+    assert out.returncode == 0, out.stderr
+    assert "starts at a resume" in out.stdout
+
+
 # ------------------------------------------------------------ bench-diff ----
 
 def _fleet_bench():

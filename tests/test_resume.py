@@ -97,11 +97,13 @@ def _assert_controllers_equal(a, b):
 
 def _child_args(kind, ckpt, out=None, *, backend="lax", pad_to=None,
                 resume=False, kill=None, sig="KILL", corrupt="none",
-                mesh=False):
+                mesh=False, hist=False):
     args = ["--kind", kind, "--rounds", str(ROUNDS),
             "--control-every", str(EVERY), "--backend", backend]
     if mesh:
         args += ["--mesh"]
+    if hist:
+        args += ["--hist"]
     if ckpt:
         args += ["--ckpt", ckpt]
     if out:
@@ -126,7 +128,7 @@ def _npz_equal(a_path, b_path):
 
 def _crash_and_resume(tmp_path, kind, *, backend="lax", devices=None,
                       pad_to=None, sig="KILL", corrupt="none", seed=0,
-                      kills=2):
+                      kills=2, hist=False):
     """Uninterrupted baseline (no checkpointing at all), then a sequence of
     runs killed at randomized chunk boundaries, then a final resumed run to
     completion — whose output must be bit-identical to the baseline."""
@@ -135,7 +137,7 @@ def _crash_and_resume(tmp_path, kind, *, backend="lax", devices=None,
     base, out = str(tmp_path / "base.npz"), str(tmp_path / "run.npz")
     ckpt = str(tmp_path / "ckpt")
     spawn_child(CHILD, *_child_args(kind, None, base, backend=backend,
-                                    pad_to=pad_to, mesh=mesh),
+                                    pad_to=pad_to, mesh=mesh, hist=hist),
                 devices=devices, expect="resume child OK")
     done, resume = 0, False
     for _ in range(kills):
@@ -144,13 +146,15 @@ def _crash_and_resume(tmp_path, kind, *, backend="lax", devices=None,
         j = rnd.randint(1, CHUNKS - done - 1)
         kill_at(CHILD, *_child_args(kind, ckpt, backend=backend,
                                     pad_to=pad_to, mesh=mesh, resume=resume,
-                                    kill=j, sig=sig, corrupt=corrupt),
+                                    kill=j, sig=sig, corrupt=corrupt,
+                                    hist=hist),
                 signum=SIGNALS[sig], devices=devices)
         # a torn final save falls back one boundary on the next resume
         done += j if corrupt == "none" else j - 1
         resume = True
     spawn_child(CHILD, *_child_args(kind, ckpt, out, backend=backend,
-                                    pad_to=pad_to, mesh=mesh, resume=True),
+                                    pad_to=pad_to, mesh=mesh, resume=True,
+                                    hist=hist),
                 devices=devices, expect="resume child OK")
     _npz_equal(base, out)
 
@@ -175,6 +179,18 @@ def test_crash_resume_midwrite_torn_file(tmp_path):
     reproduce the uninterrupted run bit-exactly."""
     _crash_and_resume(tmp_path, "fleet", corrupt="truncate", seed=11,
                       kills=2)
+
+
+@pytest.mark.parametrize("kind", ["fleet", "serve"])
+def test_crash_resume_hist(tmp_path, kind):
+    """``hist=True`` kill-and-resume (DESIGN.md §14): the accumulated
+    per-round histogram matrices ride the chunk checkpoints as ordinary
+    (R, bins) stats and the carried depletion streak rides the state tuple
+    — a SIGKILL at a randomized chunk boundary plus resume must reproduce
+    the uninterrupted run's counts, streaks, and telemetry bit-exactly
+    (the npz compares every ``hist_*`` stat and ``final_streak``)."""
+    _crash_and_resume(tmp_path, kind, hist=True,
+                      seed=13 if kind == "fleet" else 17, kills=1)
 
 
 def test_crash_resume_sharded_fleet(tmp_path):
