@@ -1,0 +1,94 @@
+"""Decode-engine per-stage microbenchmark: the ``engine`` section of
+``BENCH_serve.json``.
+
+Times the three continuous-batching stages (`repro.serve.microbench`) —
+prefill tok/s, decode-step latency over a full running batch, slot-insert
+overhead — per architecture, each warm and on **materialized** outputs, and
+records the measured joules/token (at the nominal ``DEVICE_WATTS``) next to
+the analytic ``from_params`` figure.  CI's ``serve-engine`` job runs
+``--smoke`` and bench-diffs the ``engine`` section against the committed
+baseline (`repro.obs.report` SECTION_SPECS), so a stage silently getting
+slower — or disappearing — fails the job.
+
+Usage:
+    PYTHONPATH=src python benchmarks/engine_bench.py            # full sweep
+    PYTHONPATH=src python benchmarks/engine_bench.py --smoke    # CI (~min)
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+
+from repro.configs import get_smoke_config
+from repro.models import get_model
+from repro.serve.microbench import engine_microbench
+
+# ssm (constant-state), transformer (KV), hybrid (windowed ring) — one per
+# cache geometry the slotted engine has to handle
+SMOKE_ARCHS = ["mamba2-1.3b", "granite-3-2b"]
+FULL_ARCHS = SMOKE_ARCHS + ["recurrentgemma-2b"]
+
+
+def _engine_shape(cfg, prompt_len: int, gen: int):
+    """(cache_len, ring, window) — the launcher's decode-shape policy."""
+    cache_len, ring, window = prompt_len + gen + 1, False, None
+    if cfg.family == "hybrid":
+        cache_len, ring = cfg.local_window, True
+    if cfg.sliding_window:
+        cache_len, ring, window = cfg.sliding_window, True, cfg.sliding_window
+    return cache_len, ring, window
+
+
+def bench_engine(arch: str, *, slots: int = 4, prompt_len: int = 32,
+                 gen: int = 16, reps: int = 5, seed: int = 0) -> dict:
+    """One ``engine``-section record (smoke config — CI-sized weights)."""
+    cfg = get_smoke_config(arch)
+    model = get_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(seed))
+    cache_len, ring, window = _engine_shape(cfg, prompt_len, gen)
+    t0 = time.perf_counter()
+    rec = engine_microbench(model, params, slots=slots,
+                            prompt_len=prompt_len, gen=gen,
+                            cache_len=cache_len, ring=ring, window=window,
+                            reps=reps, seed=seed)
+    rec["bench_s"] = round(time.perf_counter() - t0, 3)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized sweep (fewer archs/reps)")
+    ap.add_argument("--out", default="BENCH_engine.json")
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    args = ap.parse_args()
+
+    archs = SMOKE_ARCHS if args.smoke else FULL_ARCHS
+    reps = 3 if args.smoke else 5
+    engine = []
+    for arch in archs:
+        rec = bench_engine(arch, slots=args.slots,
+                           prompt_len=args.prompt_len, gen=args.gen,
+                           reps=reps)
+        engine.append(rec)
+        print(f"{arch:>20}: prefill {rec['prefill_tok_s']:>9.0f} tok/s  "
+              f"decode step {rec['decode_step_ms']:>7.2f} ms "
+              f"({rec['decode_tok_s']:.0f} tok/s)  "
+              f"insert {rec['insert_ms']:>6.2f} ms  "
+              f"J/tok measured {rec['joules_per_decode_token_measured']:.2e} "
+              f"vs analytic {rec['joules_per_decode_token_analytic']:.2e}",
+              flush=True)
+
+    out = {"bench": "engine_bench", "smoke": args.smoke, "engine": engine}
+    with open(args.out, "w") as f:
+        json.dump(out, f, indent=1)
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -416,6 +416,25 @@ def main():
               f"soc p50={rec['hist_soc_p50']:.3f}  "
               f"streak p95={rec['hist_streak_p95']:.0f}", flush=True)
 
+    # decode-engine per-stage microbench (DESIGN.md §15): the section the
+    # serve-engine CI job tripwires; smoke-config weights, so it rides in
+    # the same sweep at CI scale
+    try:                                  # `python -m benchmarks.serve_scale`
+        from benchmarks.engine_bench import SMOKE_ARCHS, bench_engine
+    except ImportError:                   # `python benchmarks/serve_scale.py`
+        from engine_bench import SMOKE_ARCHS, bench_engine
+    engine = []
+    for arch in SMOKE_ARCHS:
+        with _span("engine"):
+            rec = cached("engine", len(engine),
+                         lambda a=arch: bench_engine(
+                             a, reps=3 if args.smoke else 5))
+        engine.append(rec)
+        _note("engine", rec)
+        print(f"engine {arch:>16}: prefill {rec['prefill_tok_s']:.0f} tok/s  "
+              f"decode step {rec['decode_step_ms']:.2f}ms  "
+              f"insert {rec['insert_ms']:.2f}ms", flush=True)
+
     with _span("admission"):
         # the controlled run inside the record is ALSO chunk-checkpointed
         # (its own subdirectory): a kill mid-run resumes from the last
@@ -437,7 +456,7 @@ def main():
            "devices": n_dev, "manifest": manifest.to_dict(),
            "results": results, "sharded": sharded_results,
            "round_step": round_step, "percentiles": percentiles,
-           "admission": adm}
+           "engine": engine, "admission": adm}
     with open(args.out, "w") as f:
         json.dump(out, f, indent=1)
     if obs is not None:

@@ -45,8 +45,15 @@ from repro.energy import (AdmissionRule, BatteryConfig, ControlBounds,
 from repro.serve import (BatteryGated, EnergyAgnostic, QoSSpec, ServeConfig,
                          TrainLoad, run_serve_controlled, simulate_serve)
 
-args = add_scenario_flags(argparse.ArgumentParser(description=__doc__), clients=100_000) \
-    .parse_args()
+ap = add_scenario_flags(argparse.ArgumentParser(description=__doc__),
+                        clients=100_000)
+ap.add_argument("--microbench", metavar="ARCH", nargs="?",
+                const="mamba2-1.3b", default=None,
+                help="price requests from *measured* decode-engine stage "
+                     "timings (repro.serve.microbench) on this smoke arch "
+                     "instead of the analytic 2N-FLOPs model; on the host "
+                     "CPU the numbers price a proxy of the edge device")
+args = ap.parse_args()
 N, EPOCHS, CONTROL_EVERY = args.clients, 192, 24
 
 # query traffic: ~1 request/client/epoch, day/night modulated (replayed
@@ -58,6 +65,24 @@ battery = BatteryConfig(capacity=8.0, leak=0.01, init_charge=2.0)
 # ~100M-active-param on-device model: ~0.77 J per full request (256 generated
 # tokens), ~0.32 J degraded (32 tokens)
 cost = DecodeCostModel.from_params(1e8)
+if args.microbench:
+    # measured pricing: time the engine's prefill/decode/insert stages warm
+    # on materialized outputs and convert s/token -> J/token at the nominal
+    # device wattage (DecodeCostModel.from_microbench)
+    from repro.configs import get_smoke_config
+    from repro.models import get_model
+    from repro.serve import engine_microbench, measured_cost
+
+    mcfg = get_smoke_config(args.microbench)
+    mmodel = get_model(mcfg)
+    rec = engine_microbench(mmodel, mmodel.init_params(jax.random.PRNGKey(0)))
+    cost = measured_cost(rec)
+    print(f"microbench pricing ({mcfg.name}, {rec['device_watts']:.1f} W "
+          f"host proxy): decode "
+          f"{rec['joules_per_decode_token_measured']:.2e} J/tok measured "
+          f"vs {rec['joules_per_decode_token_analytic']:.2e} analytic; "
+          f"prefill {rec['prefill_tok_s']:.0f} tok/s, decode step "
+          f"{rec['decode_step_ms']:.2f} ms, insert {rec['insert_ms']:.2f} ms\n")
 qos = QoSSpec(prompt_tokens=128.0, full_decode_tokens=256.0,
               short_decode_tokens=32.0)
 # a federated training round every ~4 epochs, 0.2 J, from the SAME battery

@@ -12,6 +12,9 @@ wireless uplink; override per deployment):
 
 * ``JOULES_PER_FLOP`` — 10 pJ/FLOP effective (≈100 GFLOPS/W device).
 * ``JOULES_PER_BYTE_RADIO`` — 100 nJ/byte (~0.8 J per MB uplink).
+* ``DEVICE_WATTS`` — 1 W sustained accelerator draw (the same device:
+  1 W × 1e-11 J/FLOP ⇔ 100 GFLOPS); converts *measured* seconds/token
+  from the engine microbenchmarks into joules/token (``from_microbench``).
 """
 from __future__ import annotations
 
@@ -22,6 +25,7 @@ import jax.numpy as jnp
 
 JOULES_PER_FLOP = 1e-11
 JOULES_PER_BYTE_RADIO = 1e-7
+DEVICE_WATTS = 1.0
 
 
 @dataclasses.dataclass(frozen=True)
@@ -143,6 +147,32 @@ class DecodeCostModel:
             per_prefill = per_decode
         return cls(joules_per_prefill_token=per_prefill,
                    joules_per_decode_step=per_decode,
+                   joules_per_response_upload=(bytes_per_response
+                                               * joules_per_byte))
+
+    @classmethod
+    def from_microbench(cls, seconds_per_prefill_token: float,
+                        seconds_per_decode_token: float,
+                        watts: float = DEVICE_WATTS,
+                        bytes_per_response: float = 512.0,
+                        joules_per_byte: float = JOULES_PER_BYTE_RADIO
+                        ) -> "DecodeCostModel":
+        """Cost model from *measured* per-stage engine timings.
+
+        ``from_params``/``from_dryrun`` derive joules from FLOP counts; this
+        takes the wall seconds/token the decode-engine microbenchmarks
+        measure on materialized outputs (`repro.serve.microbench`) and
+        prices them at a sustained device draw: J/token = W × s/token.
+        Radio upload stays byte-priced (the microbench times compute, not
+        the uplink).
+        """
+        for name, s in (("prefill", seconds_per_prefill_token),
+                        ("decode", seconds_per_decode_token)):
+            if not s > 0.0:
+                raise ValueError(f"measured {name} seconds/token must be "
+                                 f"> 0 (got {s})")
+        return cls(joules_per_prefill_token=watts * seconds_per_prefill_token,
+                   joules_per_decode_step=watts * seconds_per_decode_token,
                    joules_per_response_upload=(bytes_per_response
                                                * joules_per_byte))
 

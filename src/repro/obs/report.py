@@ -368,6 +368,20 @@ SECTION_SPECS: dict[str, dict] = {
         "smaller": (),
         "rel": 0.50,
     },
+    # decode-engine per-stage microbench (DESIGN.md §15): prefill / decode
+    # step / slot insert, measured warm on materialized outputs.  Tolerance
+    # is very loose — the stages are single-digit-ms on CI CPUs, where a
+    # loaded runner alone moves them 2x — but the regressions this guards
+    # against (a per-call retrace, a lost fusion) are 10-100x, so a stage
+    # going 2.5x slower (or vanishing) still trips.  ``insert_ms`` rides in
+    # the record untripwired: at ~0.1 ms it swings 4x+ with runner load,
+    # and an insert regression shows up in decode_step_ms's cache anyway.
+    "engine": {
+        "match": ("arch", "slots", "cache_len"),
+        "slower": ("prefill_ms", "decode_step_ms"),
+        "smaller": (),
+        "rel": 1.50,
+    },
     # depletion-tail guard (DESIGN.md §14): the scale benches record
     # p95(frac_depleted) per config — a *fairness/sustainability* metric,
     # not a timing, so its tolerance is tight (the simulators are

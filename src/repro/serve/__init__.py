@@ -7,9 +7,14 @@ a deployed fleet's lifetime energy budget — request processes (`traffic`),
 QoS grades and their decode-path pricing (`qos` + `energy.costs.
 DecodeCostModel`), serve/degrade/shed admission policies (`admission`), and
 a single-jitted-scan fleet serving simulator with an optional competing
-training load (`fleet_serve`).
+training load (`fleet_serve`) — plus the continuous-batching decode engine
+that actually runs requests (`engine`, DESIGN.md §15) and the per-stage
+microbenchmarks whose measured J/token feed
+`DecodeCostModel.from_microbench` (`microbench`).
 """
 from repro.serve.admission import BatteryGated, ChargeGated, EnergyAgnostic
+from repro.serve.engine import DecodeEngine, EngineConfig, Finished, Request
+from repro.serve.microbench import engine_microbench, measured_cost
 from repro.serve.fleet_serve import (ServeConfig, ServeResult, TrainLoad,
                                      run_serve_controlled, simulate_serve)
 from repro.serve.qos import DEGRADED, FULL, SHED, QoSSpec
@@ -17,6 +22,8 @@ from repro.serve.traffic import MMPP, Constant, DiurnalPoisson
 
 __all__ = [
     "BatteryGated", "ChargeGated", "EnergyAgnostic",
+    "DecodeEngine", "EngineConfig", "Finished", "Request",
+    "engine_microbench", "measured_cost",
     "ServeConfig", "ServeResult", "TrainLoad",
     "run_serve_controlled", "simulate_serve",
     "DEGRADED", "FULL", "SHED", "QoSSpec",

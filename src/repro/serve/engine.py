@@ -1,0 +1,321 @@
+"""Continuous-batching decode engine: a slotted KV-cache lifecycle.
+
+`launch/serve.py`'s original loop decoded one batch of requests lock-step —
+every request prefilled together, every request decoded to the same length,
+the cache shape retraced per workload.  This module is the serving engine the
+fleet model prices but never ran (DESIGN.md §15): a **paged/slotted cache**
+``cache[slots, ...]`` with a free-slot allocator, ``prefill_request`` writing
+a new request's prefilled cache into a free slot *between* decode steps, and
+``generate_step`` advancing the whole running batch one token — each slot at
+its **own** absolute position — with per-request lengths and completion
+bookkeeping so finished slots are reclaimed (and their cache slices
+overwritten by the next occupant) without retracing anything.
+
+Contract (tested in ``tests/test_engine.py``):
+
+* **jit statics** — the slot count and the cache shape (``cache_len``,
+  ``max_new``) are the ONLY jit statics.  Admitting, finishing, or idling
+  any mix of slots never retraces ``generate_step``'s compiled step; prompt
+  length is a static of the *prefill* trace only (one compile per distinct
+  prompt length, shared across slots and requests).
+* **insert-between-steps** — slot insertion happens only at step boundaries,
+  and the prefilled cache slice spans the slot's whole ``cache_len``, so a
+  reclaimed slot's stale keys/values can never leak into a new request's
+  attention window.
+* **per-slot positions** — the decode step is ``vmap``-ped over slots with a
+  per-slot position vector, so a slot 40 tokens into its generation and one
+  admitted two steps ago batch together exactly (ring caches write at
+  ``pos mod W`` per slot).
+* **parity** — greedy decode through the engine is token-identical to the
+  single-stream `launch.serve.generate` path on the same prompts.
+
+Works for every registered family with a decode path: the engine only
+assumes cache leaves are ``(L, batch, ...)`` (batch axis 1), which all of
+transformer / ssm / hybrid / encdec honour.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from collections import deque
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    """Static engine shape: these (and nothing else) key the jit cache."""
+
+    slots: int                      # running-batch width (cache rows)
+    cache_len: int                  # KV/ring cache length per slot
+    max_new: int                    # output-buffer capacity per request
+    ring: bool = False              # sliding-window ring cache writes
+    window: int | None = None       # attention window (None = cfg default)
+    greedy: bool = True             # argmax vs temperature sampling
+    temperature: float = 1.0
+
+    def __post_init__(self):
+        if self.slots < 1:
+            raise ValueError(f"need at least one slot (got {self.slots})")
+        if self.max_new < 1:
+            raise ValueError(f"max_new must be >= 1 (got {self.max_new})")
+        if not self.greedy and not self.temperature > 0.0:
+            raise ValueError(
+                f"temperature must be > 0 for sampling "
+                f"(got {self.temperature}); use greedy=True for argmax")
+
+
+@dataclasses.dataclass(frozen=True)
+class Request:
+    """One decode request: a prompt and a generation budget."""
+
+    rid: Any                        # caller's request id (dict key of result)
+    tokens: Any                     # (S,) int prompt tokens
+    max_new: int                    # tokens to generate (incl. the prefill's)
+    extras: dict | None = None      # modality extras, unbatched (e.g.
+    #                                 vision_embeds (n_vis, d), frames (T, d))
+
+
+@dataclasses.dataclass(frozen=True)
+class Finished:
+    """A completed request: exactly ``max_new`` generated tokens."""
+
+    rid: Any
+    tokens: np.ndarray              # (max_new,) int32 generated tokens
+    prompt_len: int
+    slot: int                       # which slot served it (reclaim telemetry)
+
+
+@functools.lru_cache(maxsize=32)
+def _engine_fns(prefill_fn, decode_fn, config: EngineConfig):
+    """The engine's four jitted functions, cached on the model's bound step
+    functions + the static engine shape (same idiom as
+    `launch.serve._jitted_steps`): building a second engine for the same
+    model/config reuses the compiled steps instead of retracing."""
+    ring, window = config.ring, config.window
+    slots, max_new = config.slots, config.max_new
+
+    prefill = jax.jit(partial(prefill_fn, cache_len=config.cache_len,
+                              window=window))
+
+    def pick(logits, key):
+        """Next token from (V,) logits; greedy ignores the key."""
+        if config.greedy:
+            return jnp.argmax(logits, -1).astype(jnp.int32), key
+        key, k = jax.random.split(key)
+        tok = jax.random.categorical(k, logits / config.temperature)
+        return tok.astype(jnp.int32), key
+
+    def _one_slot(params, tok, cache_slice, pos, key):
+        """One slot's decode step: re-add the batch=1 axis the vmap stripped,
+        run the family decode at this slot's own absolute position."""
+        cache1 = jax.tree.map(lambda c: c[:, None], cache_slice)
+        logits, cache1 = decode_fn(params, tok[None], cache1, pos,
+                                   ring=ring, window=window)
+        nxt, key = pick(logits[0], key)
+        return nxt, jax.tree.map(lambda c: c[:, 0], cache1), key
+
+    def step(params, cache, tok, pos, active, out, gen_idx, keys):
+        """Advance the whole running batch one token.  Inactive slots decode
+        too (fixed shapes — the jit-static contract) but their token is held
+        and their output row untouched; their cache garbage is dead by
+        construction (insert overwrites the full slot slice)."""
+        nxt, cache, keys = jax.vmap(
+            _one_slot, in_axes=(None, 0, 1, 0, 0),
+            out_axes=(0, 1, 0))(params, tok, cache, pos, keys)
+        nxt = jnp.where(active, nxt, tok)
+        row = jnp.arange(slots)
+        idx = jnp.clip(gen_idx, 0, max_new - 1)
+        out = out.at[row, idx].set(jnp.where(active, nxt, out[row, idx]))
+        return cache, nxt, out, keys
+
+    def insert(cache, tok, out, keys, pcache, first_tok, key, slot):
+        """Write a prefilled request into slot ``slot`` between steps.  The
+        prefill cache slice spans the whole cache_len, so the previous
+        occupant's keys/values are fully overwritten — stale state cannot
+        leak.  ``slot`` is a traced scalar: one compile covers every slot."""
+        cache = jax.tree.map(
+            lambda c, p: jax.lax.dynamic_update_slice_in_dim(
+                c, p.astype(c.dtype), slot, axis=1), cache, pcache)
+        tok = tok.at[slot].set(first_tok)
+        row = jnp.zeros((1, max_new), jnp.int32).at[0, 0].set(first_tok)
+        out = jax.lax.dynamic_update_slice_in_dim(out, row, slot, axis=0)
+        keys = jax.lax.dynamic_update_slice_in_dim(keys, key[None], slot,
+                                                   axis=0)
+        return cache, tok, out, keys
+
+    return {"prefill": prefill, "pick_first": jax.jit(pick),
+            "step": jax.jit(step), "insert": jax.jit(insert)}
+
+
+class DecodeEngine:
+    """Continuous-batching decode over a slotted cache.
+
+    Host-side lifecycle state (positions, generation counts, the free-slot
+    allocator) lives in numpy; device state (the slotted cache, last tokens,
+    output buffer, per-slot sampling keys) is advanced functionally by the
+    jitted ``step``/``insert``.  Typical drive loop::
+
+        engine = DecodeEngine(model, params, EngineConfig(...))
+        done = engine.run(requests, arrivals=[0, 0, 3, 5])   # staggered
+        done[rid].tokens                                      # (max_new,)
+
+    or step manually: `prefill_request` whenever `free_slots` > 0, then
+    `generate_step` — which returns the requests that finished that step.
+    """
+
+    def __init__(self, model, params, config: EngineConfig, rng=None):
+        if model.decode_step is None:
+            raise ValueError(f"{model.cfg.name} has no decode path")
+        self.model, self.params, self.config = model, params, config
+        self._fns = _engine_fns(model.prefill, model.decode_step, config)
+        self.reset(rng)
+
+    # ------------------------------------------------------------ state ----
+    def reset(self, rng=None):
+        """Fresh engine state (the compiled steps are kept — resetting never
+        retraces; used by the microbenchmark's warm repetitions)."""
+        cfg, slots = self.config, self.config.slots
+        self._rng = jax.random.PRNGKey(0) if rng is None else rng
+        self._cache = self.model.init_cache(slots, cfg.cache_len)
+        self._tok = jnp.zeros((slots,), jnp.int32)
+        self._out = jnp.zeros((slots, cfg.max_new), jnp.int32)
+        self._keys = jax.random.split(jax.random.PRNGKey(0), slots)
+        self._pos = np.zeros(slots, np.int32)      # abs pos of the fed token
+        self._gen = np.zeros(slots, np.int32)      # tokens produced so far
+        self._want = np.zeros(slots, np.int32)     # tokens requested
+        self._active = np.zeros(slots, bool)
+        self._rid = [None] * slots
+        self._free = list(range(slots - 1, -1, -1))   # pop() -> slot 0 first
+        self._finished: list[Finished] = []
+        self.stats = {"inserts": 0, "steps": 0, "slot_steps": 0,
+                      "idle_steps": 0}
+
+    @property
+    def free_slots(self) -> int:
+        return len(self._free)
+
+    @property
+    def active_count(self) -> int:
+        return int(self._active.sum())
+
+    # -------------------------------------------------------- lifecycle ----
+    def prefill_request(self, request: Request) -> int:
+        """Prefill a request and insert it into a free slot (between steps).
+
+        Returns the slot index.  Raises if no slot is free — callers gate on
+        `free_slots` (as `run` does).  A ``max_new == 1`` request finishes
+        immediately: its only token comes from the prefill itself.
+        """
+        if not self._free:
+            raise RuntimeError(
+                f"no free slot (all {self.config.slots} busy); "
+                f"call generate_step until one is reclaimed")
+        cfg = self.config
+        tokens = np.asarray(request.tokens)
+        if tokens.ndim == 2:
+            tokens = tokens[0]
+        S = int(tokens.shape[0])
+        if not 1 <= request.max_new <= cfg.max_new:
+            raise ValueError(f"max_new={request.max_new} outside "
+                             f"[1, {cfg.max_new}] (the engine's out-buffer "
+                             f"capacity is a jit static)")
+        if not cfg.ring and S + request.max_new > cfg.cache_len:
+            raise ValueError(
+                f"prompt ({S}) + max_new ({request.max_new}) exceeds "
+                f"cache_len ({cfg.cache_len}) for a non-ring cache")
+
+        batch = {"tokens": jnp.asarray(tokens, jnp.int32)[None]}
+        for k, v in (request.extras or {}).items():
+            batch[k] = jnp.asarray(v)[None]
+        logits, pcache = self._fns["prefill"](self.params, batch)
+        logits = logits[:, -1] if logits.ndim == 3 else logits
+        self._rng, rk = jax.random.split(self._rng)
+        first, key = self._fns["pick_first"](logits[0], rk)
+
+        slot = self._free.pop()
+        self._cache, self._tok, self._out, self._keys = self._fns["insert"](
+            self._cache, self._tok, self._out, self._keys,
+            pcache, first, key, slot)
+        self._pos[slot] = S
+        self._gen[slot] = 1
+        self._want[slot] = request.max_new
+        self._active[slot] = True
+        self._rid[slot] = request.rid
+        self.stats["inserts"] += 1
+        if request.max_new == 1:        # prefill already produced everything
+            self._reclaim(slot)
+        return slot
+
+    def generate_step(self) -> list[Finished]:
+        """One decode step for every active slot; reclaim the ones that hit
+        their generation budget.  Returns the requests finished by this step
+        (plus any ``max_new == 1`` completions queued since the last call).
+        """
+        if not self._active.any():
+            self.stats["idle_steps"] += 1
+            return self._pop_finished()
+        # .copy() is load-bearing: on CPU, jnp.asarray(np_array) may alias
+        # the host buffer zero-copy, and the step is dispatched async — the
+        # in-place host updates below would race the device reads without it
+        self._cache, self._tok, self._out, self._keys = self._fns["step"](
+            self.params, self._cache, self._tok,
+            jnp.asarray(self._pos.copy()), jnp.asarray(self._active.copy()),
+            self._out, jnp.asarray(self._gen.copy()), self._keys)
+        self.stats["steps"] += 1
+        self.stats["slot_steps"] += int(self._active.sum())
+        self._gen[self._active] += 1
+        self._pos[self._active] += 1
+        for slot in np.nonzero(self._active & (self._gen >= self._want))[0]:
+            self._reclaim(int(slot))
+        return self._pop_finished()
+
+    def run(self, requests, arrivals=None) -> dict:
+        """Drive a workload to completion: admit arrivals into free slots
+        between steps, advance the running batch, reclaim finished slots.
+
+        ``arrivals`` gives each request's arrival step (default: all at 0 —
+        admitted as slots allow).  Returns ``{rid: Finished}``.
+        """
+        if arrivals is None:
+            arrivals = [0] * len(requests)
+        if len(arrivals) != len(requests):
+            raise ValueError(f"{len(arrivals)} arrival steps for "
+                             f"{len(requests)} requests")
+        pending = deque(sorted(zip(arrivals, range(len(requests)), requests)))
+        done: dict = {}
+        t = 0
+        while pending or self._active.any():
+            while pending and pending[0][0] <= t and self._free:
+                self.prefill_request(pending.popleft()[2])
+            for f in self.generate_step():
+                done[f.rid] = f
+            t += 1
+        for f in self._pop_finished():
+            done[f.rid] = f
+        return done
+
+    # --------------------------------------------------------- internal ----
+    def _reclaim(self, slot: int):
+        """Fetch the finished request's tokens and free its slot.  The fetch
+        happens BEFORE the slot re-enters the allocator, so the next
+        occupant's insert can't overwrite an uncollected output row."""
+        want = int(self._want[slot])
+        toks = np.asarray(self._out[slot, :want])
+        self._finished.append(Finished(rid=self._rid[slot], tokens=toks,
+                                       prompt_len=int(self._pos[slot])
+                                       - int(self._gen[slot]) + 1,
+                                       slot=slot))
+        self._active[slot] = False
+        self._rid[slot] = None
+        self._gen[slot] = 0
+        self._want[slot] = 0
+        self._free.append(slot)
+
+    def _pop_finished(self) -> list[Finished]:
+        out, self._finished = self._finished, []
+        return out

@@ -1,0 +1,133 @@
+"""Per-stage decode-engine microbenchmarks: measured seconds (and joules)
+per token, per stage.
+
+The fleet serving model (`repro.serve.fleet_serve`) debits batteries through
+`energy.costs.DecodeCostModel` — whose coefficients were, until now, only
+*derived* (``from_params`` 2N-FLOPs analytics, ``from_dryrun`` compiled FLOP
+counts).  This module measures them: each engine stage — prefill, decode
+step, slot insert — is timed warm (compile excluded) on **materialized**
+outputs (``jax.block_until_ready``, never dispatch time), and the measured
+seconds/token convert to joules/token at a nominal device power
+(``DecodeCostModel.from_microbench``).  On the host CPU the numbers price a
+proxy of the edge device; on-target runs of the same harness give the real
+coefficients.
+
+Stages (all warm, mean over ``reps``):
+
+* **prefill**  — one (1, S) prompt through the jitted prefill;
+  ``seconds_per_prefill_token`` = t / S.
+* **decode**   — one ``generate_step`` over a full running batch of
+  ``slots`` requests; ``seconds_per_decode_token`` = t / slots.
+* **insert**   — one prefilled request written into a slot of the running
+  cache (the continuous-batching admission overhead; priced per event, not
+  per token).
+
+Records feed the ``engine`` section of ``BENCH_serve.json``
+(`benchmarks/engine_bench.py`) and the ``--microbench`` path of
+`examples/serve_fleet.py`.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.energy.costs import DEVICE_WATTS, DecodeCostModel
+from repro.serve.engine import DecodeEngine, EngineConfig, Request
+
+
+def _timed(fn, reps: int) -> float:
+    """Steady-state seconds per call: one warm-up call (compile), then the
+    mean of ``reps`` calls, each blocked on its whole output pytree — the
+    async-dispatch trap `launch/serve.py` used to fall into."""
+    jax.block_until_ready(fn())
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn()
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps
+
+
+def engine_microbench(model, params, *, slots: int = 4, prompt_len: int = 32,
+                      gen: int = 16, cache_len: int | None = None,
+                      ring: bool = False, window: int | None = None,
+                      reps: int = 5, seed: int = 0) -> dict:
+    """Per-stage engine timings for one model, as a flat record dict.
+
+    Returns measured ms per stage, tok/s per stage, and the measured
+    joules/token (at ``DEVICE_WATTS``) next to the analytic
+    ``from_params`` figure — the measured-vs-analytic comparison DESIGN.md
+    §15 tabulates.
+    """
+    cfg = model.cfg
+    cache_len = cache_len or (prompt_len + gen + 1)
+    econfig = EngineConfig(slots=slots, cache_len=cache_len, max_new=gen,
+                           ring=ring, window=window)
+    engine = DecodeEngine(model, params, econfig,
+                          rng=jax.random.PRNGKey(seed))
+    key = jax.random.PRNGKey(seed + 1)
+    prompts = jax.random.randint(key, (slots, prompt_len), 0, cfg.vocab_size)
+    batch1 = {"tokens": prompts[:1]}
+
+    # --- prefill: (1, S) prompt -> logits + cache, materialized ------------
+    prefill_s = _timed(lambda: engine._fns["prefill"](params, batch1), reps)
+
+    # --- insert: one prefilled request into a running cache ----------------
+    logits, pcache = engine._fns["prefill"](params, batch1)
+    logits = logits[:, -1] if logits.ndim == 3 else logits
+    first, ikey = engine._fns["pick_first"](logits[0],
+                                            jax.random.PRNGKey(seed + 2))
+    jax.block_until_ready((pcache, first))
+    insert_s = _timed(
+        lambda: engine._fns["insert"](engine._cache, engine._tok,
+                                      engine._out, engine._keys,
+                                      pcache, first, ikey, 0), reps)
+
+    # --- decode step: a full running batch, every slot occupied ------------
+    engine.reset(jax.random.PRNGKey(seed))
+    for i in range(slots):
+        engine.prefill_request(Request(rid=i, tokens=np.asarray(prompts[i]),
+                                       max_new=gen))
+    args = (params, engine._cache, engine._tok,
+            jnp.asarray(engine._pos), jnp.asarray(engine._active),
+            engine._out, jnp.asarray(engine._gen), engine._keys)
+    step_s = _timed(lambda: engine._fns["step"](*args), reps)
+
+    per_prefill_tok = prefill_s / prompt_len
+    per_decode_tok = step_s / slots
+    measured = DecodeCostModel.from_microbench(per_prefill_tok,
+                                               per_decode_tok)
+    analytic = DecodeCostModel.from_params(cfg.num_active_params())
+    return {
+        "arch": cfg.name,
+        "slots": slots,
+        "prompt_len": prompt_len,
+        "cache_len": cache_len,
+        "gen": gen,
+        "reps": reps,
+        "prefill_ms": round(prefill_s * 1e3, 4),
+        "insert_ms": round(insert_s * 1e3, 4),
+        "decode_step_ms": round(step_s * 1e3, 4),
+        "prefill_tok_s": round(prompt_len / prefill_s, 2),
+        "decode_tok_s": round(slots / step_s, 2),
+        "seconds_per_prefill_token": per_prefill_tok,
+        "seconds_per_decode_token": per_decode_tok,
+        "device_watts": DEVICE_WATTS,
+        "joules_per_prefill_token_measured":
+            float(measured.joules_per_prefill_token),
+        "joules_per_decode_token_measured":
+            float(measured.joules_per_decode_step),
+        "joules_per_decode_token_analytic":
+            float(analytic.joules_per_decode_step),
+    }
+
+
+def measured_cost(record: dict, watts: float = DEVICE_WATTS,
+                  **kw) -> DecodeCostModel:
+    """`DecodeCostModel` from a microbench record (the plumbing
+    `examples/serve_fleet.py --microbench` and the launcher use)."""
+    return DecodeCostModel.from_microbench(
+        record["seconds_per_prefill_token"],
+        record["seconds_per_decode_token"], watts=watts, **kw)

@@ -126,10 +126,29 @@ def test_generate_sampling_path():
     t2 = generate(model, params, prompt, greedy=False, temperature=2.0,
                   rng=jax.random.PRNGKey(2), **kw)
     a1, a2 = np.asarray(t1), np.asarray(t2)
-    assert a1.shape == (B, kw["gen_steps"] + 1)
+    assert a1.shape == (B, kw["gen_steps"])
     assert np.all(a1 >= 0) and np.all(a1 < cfg.vocab_size)
     assert np.array_equal(a1, np.asarray(t1b)), "sampling not reproducible"
     assert not np.array_equal(a1, a2), "rng does not reach the sampler"
+
+
+def test_generate_token_count_matches_request():
+    """`generate(gen_steps=g)` returns exactly (B, g) tokens — the count the
+    launcher's tok/s and J/token denominators divide by.  (It used to append
+    the post-loop token and return g+1, silently deflating both figures.)"""
+    generate, cfg, model, params, prompt, kw = _gen_setup()
+    for g in (1, 3, kw["gen_steps"]):
+        toks = generate(model, params, prompt, gen_steps=g,
+                        cache_len=kw["cache_len"])
+        assert toks.shape == (B, g), (toks.shape, g)
+    assert generate(model, params, prompt, gen_steps=0,
+                    cache_len=kw["cache_len"]).shape == (B, 0)
+    # g=1 is pure prefill: its token must equal the first token of a longer
+    # generation (the prefill-picked token, no decode step consumed)
+    t1 = generate(model, params, prompt, gen_steps=1,
+                  cache_len=kw["cache_len"])
+    tg = generate(model, params, prompt, **kw)
+    assert np.array_equal(np.asarray(t1[:, 0]), np.asarray(tg[:, 0]))
 
 
 def test_generate_low_temperature_matches_greedy():

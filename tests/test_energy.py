@@ -240,6 +240,24 @@ def test_decode_cost_model_from_params():
     assert float(m.request_cost(0, 1)) > per_tok  # upload included
 
 
+def test_decode_cost_model_from_microbench():
+    """Measured pricing: J/token = watts x measured seconds/token; the radio
+    upload stays byte-priced (the microbench times compute only)."""
+    m = DecodeCostModel.from_microbench(2e-4, 5e-3, watts=1.5)
+    assert np.isclose(m.joules_per_prefill_token, 1.5 * 2e-4)
+    assert np.isclose(m.joules_per_decode_step, 1.5 * 5e-3)
+    assert np.isclose(m.joules_per_response_upload,
+                      512.0 * costs.JOULES_PER_BYTE_RADIO)
+    # default wattage is the same nominal device the FLOP constant assumes
+    d = DecodeCostModel.from_microbench(2e-4, 5e-3)
+    assert np.isclose(d.joules_per_decode_step, costs.DEVICE_WATTS * 5e-3)
+    for bad in (0.0, -1e-3):
+        with pytest.raises(ValueError, match="must be > 0"):
+            DecodeCostModel.from_microbench(bad, 5e-3)
+        with pytest.raises(ValueError, match="must be > 0"):
+            DecodeCostModel.from_microbench(2e-4, bad)
+
+
 # ------------------------------------------------- policy registry edges ---
 
 def test_threshold_policy_has_no_stateless_schedule():

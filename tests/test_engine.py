@@ -1,0 +1,203 @@
+"""Continuous-batching engine contract (DESIGN.md §15): single-stream parity,
+slot reclaim/reuse, the jit-statics guarantee, and admission error paths."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.launch.serve import generate
+from repro.models import get_model
+from repro.serve.engine import DecodeEngine, EngineConfig, Request
+
+PARITY_ARCHS = ["mamba2-1.3b", "granite-3-2b"]   # ssm state + attention KV
+
+_SETUP = {}
+
+
+def _setup(arch):
+    if arch not in _SETUP:
+        cfg = get_smoke_config(arch)
+        model = get_model(cfg)
+        params = model.init_params(jax.random.PRNGKey(0))
+        _SETUP[arch] = (cfg, model, params)
+    return _SETUP[arch]
+
+
+def _solo(model, params, tokens, gen, cache_len):
+    """Reference: the single-stream `generate` path, one request alone."""
+    out = generate(model, params, {"tokens": jnp.asarray(tokens)[None]},
+                   gen, cache_len)
+    return np.asarray(out[0])
+
+
+# ------------------------------------------------------------------ parity --
+
+@pytest.mark.parametrize("arch", PARITY_ARCHS)
+def test_engine_matches_single_stream_greedy(arch):
+    """Every request decoded through the slotted engine is token-identical
+    to the same prompt run alone through `launch.serve.generate`."""
+    cfg, model, params = _setup(arch)
+    S, gen, cache_len = 16, 8, 16 + 8 + 1
+    prompts = jax.random.randint(jax.random.PRNGKey(1), (4, S), 0,
+                                 cfg.vocab_size)
+    engine = DecodeEngine(model, params,
+                          EngineConfig(slots=2, cache_len=cache_len,
+                                       max_new=gen))
+    reqs = [Request(rid=i, tokens=np.asarray(prompts[i]), max_new=gen)
+            for i in range(4)]
+    done = engine.run(reqs)
+    assert set(done) == {0, 1, 2, 3}
+    for i in range(4):
+        assert done[i].tokens.shape == (gen,)
+        ref = _solo(model, params, prompts[i], gen, cache_len)
+        np.testing.assert_array_equal(done[i].tokens, ref,
+                                      err_msg=f"request {i} diverged")
+
+
+def test_engine_staggered_mixed_lengths_parity():
+    """Continuous batching proper: mixed prompt lengths and generation
+    budgets, arrivals staggered so inserts land between decode steps of
+    already-running slots — still token-identical per request."""
+    cfg, model, params = _setup("granite-3-2b")
+    specs = [(12, 6), (16, 4), (9, 8), (14, 5), (16, 8)]   # (S, gen)
+    cache_len, max_new = 16 + 8 + 1, 8
+    prompts = [np.asarray(jax.random.randint(jax.random.PRNGKey(10 + i),
+                                             (S,), 0, cfg.vocab_size))
+               for i, (S, _) in enumerate(specs)]
+    engine = DecodeEngine(model, params,
+                          EngineConfig(slots=2, cache_len=cache_len,
+                                       max_new=max_new))
+    reqs = [Request(rid=i, tokens=prompts[i], max_new=g)
+            for i, (_, g) in enumerate(specs)]
+    done = engine.run(reqs, arrivals=[0, 0, 2, 3, 9])
+    for i, (S, g) in enumerate(specs):
+        ref = _solo(model, params, prompts[i], g, cache_len)
+        np.testing.assert_array_equal(done[i].tokens, ref,
+                                      err_msg=f"request {i} (S={S}, gen={g})")
+    assert engine.stats["inserts"] == len(specs)
+
+
+# ---------------------------------------------------------- slot lifecycle --
+
+def test_slot_reclaim_and_reuse():
+    """Finished slots return to the allocator and their next occupant is
+    unpolluted: a request decoded in a reused slot matches its solo run."""
+    cfg, model, params = _setup("mamba2-1.3b")
+    S, cache_len = 8, 8 + 4 + 1
+    engine = DecodeEngine(model, params,
+                          EngineConfig(slots=1, cache_len=cache_len,
+                                       max_new=4))
+    p1, p2 = (np.asarray(jax.random.randint(jax.random.PRNGKey(k), (S,), 0,
+                                            cfg.vocab_size)) for k in (2, 3))
+    slot1 = engine.prefill_request(Request(rid="a", tokens=p1, max_new=4))
+    assert engine.free_slots == 0
+    with pytest.raises(RuntimeError, match="no free slot"):
+        engine.prefill_request(Request(rid="b", tokens=p2, max_new=4))
+    finished = []
+    while not finished:
+        finished = engine.generate_step()
+    assert finished[0].rid == "a" and engine.free_slots == 1
+    # reuse the same slot for a different request
+    slot2 = engine.prefill_request(Request(rid="b", tokens=p2, max_new=4))
+    assert slot2 == slot1
+    done = {}
+    while engine.active_count:
+        for f in engine.generate_step():
+            done[f.rid] = f
+    np.testing.assert_array_equal(done["b"].tokens,
+                                  _solo(model, params, p2, 4, cache_len))
+
+
+def test_max_new_one_finishes_on_prefill():
+    """A 1-token request completes without consuming a decode step."""
+    cfg, model, params = _setup("mamba2-1.3b")
+    S, cache_len = 8, 8 + 4 + 1
+    engine = DecodeEngine(model, params,
+                          EngineConfig(slots=2, cache_len=cache_len,
+                                       max_new=4))
+    p = np.asarray(jax.random.randint(jax.random.PRNGKey(5), (S,), 0,
+                                      cfg.vocab_size))
+    engine.prefill_request(Request(rid=0, tokens=p, max_new=1))
+    assert engine.free_slots == 2        # reclaimed immediately
+    done = engine.run([], arrivals=[])   # drain the queued completion
+    np.testing.assert_array_equal(
+        done[0].tokens, _solo(model, params, p, 1, cache_len))
+
+
+# ------------------------------------------------------------- jit statics --
+
+def test_varying_active_count_never_retraces():
+    """The jit-statics contract: admitting, finishing, and idling any mix of
+    slots reuses ONE compiled step and ONE compiled insert.  Only a new
+    prompt length adds a (prefill) trace."""
+    cfg, model, params = _setup("mamba2-1.3b")
+    S, cache_len = 8, 8 + 6 + 1
+    engine = DecodeEngine(model, params,
+                          EngineConfig(slots=3, cache_len=cache_len,
+                                       max_new=6))
+    prompts = jax.random.randint(jax.random.PRNGKey(6), (6, S),
+                                 0, cfg.vocab_size)
+    reqs = [Request(rid=i, tokens=np.asarray(prompts[i]), max_new=2 + i % 5)
+            for i in range(6)]
+    # staggered arrivals sweep active counts 1..3 and hit every slot index
+    done = engine.run(reqs, arrivals=[0, 0, 1, 4, 5, 8])
+    assert len(done) == 6
+    assert engine._fns["step"]._cache_size() == 1
+    assert engine._fns["insert"]._cache_size() == 1
+    assert engine._fns["prefill"]._cache_size() == 1   # one prompt length
+    # a second engine with the same config shares the compiled fns outright
+    engine2 = DecodeEngine(model, params, engine.config)
+    assert engine2._fns["step"] is engine._fns["step"]
+
+
+# ---------------------------------------------------------------- sampling --
+
+def test_engine_sampling_valid_and_reproducible():
+    cfg, model, params = _setup("mamba2-1.3b")
+    S, gen, cache_len = 8, 6, 8 + 6 + 1
+    prompts = jax.random.randint(jax.random.PRNGKey(7), (3, S), 0,
+                                 cfg.vocab_size)
+    config = EngineConfig(slots=2, cache_len=cache_len, max_new=gen,
+                          greedy=False, temperature=2.0)
+    reqs = [Request(rid=i, tokens=np.asarray(prompts[i]), max_new=gen)
+            for i in range(3)]
+
+    def draw(seed):
+        engine = DecodeEngine(model, params, config,
+                              rng=jax.random.PRNGKey(seed))
+        done = engine.run(reqs)
+        return np.stack([done[i].tokens for i in range(3)])
+
+    a, b, c = draw(1), draw(1), draw(2)
+    assert a.shape == (3, gen)
+    assert np.all(a >= 0) and np.all(a < cfg.vocab_size)
+    np.testing.assert_array_equal(a, b)              # same rng -> same draws
+    assert not np.array_equal(a, c), "rng does not reach the sampler"
+
+
+# ------------------------------------------------------------- error paths --
+
+def test_admission_validation():
+    cfg, model, params = _setup("mamba2-1.3b")
+    engine = DecodeEngine(model, params,
+                          EngineConfig(slots=1, cache_len=12, max_new=4))
+    long_prompt = np.zeros(10, np.int32)    # 10 + 4 > 12
+    with pytest.raises(ValueError, match="exceeds cache_len"):
+        engine.prefill_request(Request(rid=0, tokens=long_prompt, max_new=4))
+    ok_prompt = np.zeros(6, np.int32)
+    for bad in (0, 5):                      # outside [1, config.max_new]
+        with pytest.raises(ValueError, match="max_new"):
+            engine.prefill_request(Request(rid=0, tokens=ok_prompt,
+                                           max_new=bad))
+    assert engine.free_slots == 1           # failed admissions leak no slot
+
+
+def test_engine_config_validation():
+    with pytest.raises(ValueError, match="at least one slot"):
+        EngineConfig(slots=0, cache_len=8, max_new=2)
+    with pytest.raises(ValueError, match="max_new"):
+        EngineConfig(slots=1, cache_len=8, max_new=0)
+    with pytest.raises(ValueError, match="temperature"):
+        EngineConfig(slots=1, cache_len=8, max_new=2, greedy=False,
+                     temperature=0.0)
